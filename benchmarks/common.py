@@ -1,0 +1,73 @@
+"""Shared benchmark scaffolding: datasets, timing, CSV rows.
+
+Datasets are synthetic clustered Gaussians mirroring the paper's corpora
+dimensionalities, scaled to this container (DESIGN.md §8).  All rows print
+as ``name,us_per_call,derived`` per the harness contract; ``derived``
+carries the table's key quantity (speedup, ratio, #dist, ...).
+"""
+from __future__ import annotations
+
+import json
+import os
+import time
+
+import jax
+
+# persistent compilation cache: repeat runs skip XLA compiles
+_CACHE = os.environ.get("JAX_COMPILATION_CACHE", "/tmp/jax_bench_cache")
+try:
+    jax.config.update("jax_compilation_cache_dir", _CACHE)
+    jax.config.update("jax_persistent_cache_min_compile_time_secs", 1.0)
+except Exception:
+    pass
+
+from repro.core.tuner import estimator  # noqa: E402
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "results",
+                           "bench")
+
+# paper datasets -> laptop-scale stand-ins (true dimensionalities, reduced n:
+# wall-time behaviour tracks the paper only when distance compute dominates)
+DATASETS = {
+    "sift": dict(n=2000, d=128, nq=100, n_clusters=32),   # Sift 128d
+    "glove": dict(n=2400, d=100, nq=100, n_clusters=48),  # Glove 100d
+}
+DEFAULT_DATASET = "sift"
+
+TUNE_KW = dict(budget=12, batch=6, scale=0.15, build_batch_size=512,
+               ef_grid=[10, 20, 40, 80], mc_samples=24, timing_reps=1)
+
+
+def dataset(name: str = DEFAULT_DATASET, seed: int = 0):
+    cfg = DATASETS[name]
+    return estimator.make_dataset(cfg["n"], cfg["d"], cfg["nq"], seed=seed,
+                                  n_clusters=cfg["n_clusters"])
+
+
+def row(name: str, us_per_call: float, derived) -> str:
+    line = f"{name},{us_per_call:.1f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def save_json(name: str, obj):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    with open(os.path.join(RESULTS_DIR, name + ".json"), "w") as f:
+        json.dump(obj, f, indent=1, default=float)
+
+
+def load_json(name: str):
+    path = os.path.join(RESULTS_DIR, name + ".json")
+    if os.path.exists(path):
+        with open(path) as f:
+            return json.load(f)
+    return None
+
+
+class Timer:
+    def __enter__(self):
+        self.t0 = time.perf_counter()
+        return self
+
+    def __exit__(self, *a):
+        self.seconds = time.perf_counter() - self.t0

@@ -1,0 +1,59 @@
+"""Fig. 5 — neighbor-list overlap (NLO) between Vamana graphs built with
+nearby parameters.  Paper: closer L (resp. alpha) => larger NLO; this is
+the structural-overlap fact FastPGT's sharing exploits."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import vamana
+from repro.core.graph import INVALID
+
+
+def nlo(ids_a: np.ndarray, ids_b: np.ndarray) -> float:
+    """mean_u |N_a(u) ∩ N_b(u)| / |N_a(u)|"""
+    inter = 0.0
+    denom = 0.0
+    for ra, rb in zip(ids_a, ids_b):
+        sa = set(int(x) for x in ra if x != INVALID)
+        sb = set(int(x) for x in rb if x != INVALID)
+        if not sa:
+            continue
+        inter += len(sa & sb) / len(sa)
+        denom += 1
+    return inter / max(denom, 1)
+
+
+def run(dataset_name: str = "sift") -> list[str]:
+    data, _ = common.dataset(dataset_name)
+    rows = []
+    out = {}
+
+    # vary L at fixed alpha=1.2, M=16 (paper Fig. 5a)
+    l_values = [24, 32, 48, 64]
+    ps = [vamana.VamanaParams(L=l, M=16, alpha=1.2) for l in l_values]
+    with common.Timer() as t:
+        res = vamana.build_multi_vamana(data, ps, batch_size=512)
+    ref = np.asarray(res.g.ids[1])            # L=32 as the anchor
+    for i, l in enumerate(l_values):
+        v = nlo(ref, np.asarray(res.g.ids[i]))
+        out[f"L={l}"] = v
+        rows.append(common.row(f"fig5a/{dataset_name}/L_{l}",
+                               t.seconds * 1e6 / 4, f"NLO_vs_L32={v:.3f}"))
+
+    # vary alpha at fixed L=48 (paper Fig. 5b)
+    a_values = [1.0, 1.1, 1.2, 1.4]
+    ps = [vamana.VamanaParams(L=48, M=16, alpha=a) for a in a_values]
+    res = vamana.build_multi_vamana(data, ps, batch_size=512)
+    ref = np.asarray(res.g.ids[2])            # alpha=1.2 anchor
+    for i, a in enumerate(a_values):
+        v = nlo(ref, np.asarray(res.g.ids[i]))
+        out[f"alpha={a}"] = v
+        rows.append(common.row(f"fig5b/{dataset_name}/alpha_{a}",
+                               0.0, f"NLO_vs_a1.2={v:.3f}"))
+    common.save_json(f"fig5_{dataset_name}", out)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,34 @@
+"""Figs. 7-9 — tuning quality: best QPS at Recall@10 targets per method.
+
+Reads the table4 histories (same tuning runs); the paper's claim is that
+FastPGT reaches comparable-or-better QPS at each recall target with much
+lower tuning cost."""
+from __future__ import annotations
+
+from benchmarks import common
+
+TARGETS = [0.8, 0.9, 0.95]
+
+
+def run(dataset_name: str = "sift") -> list[str]:
+    cached = common.load_json(f"table4_{dataset_name}")
+    rows = []
+    if not cached:
+        rows.append(common.row("fig7_9/missing_table4", 0.0, "run table4 first"))
+        return rows
+    for key, rec in cached.items():
+        if ":" not in key:
+            continue
+        pg, method = key.split(":")
+        objs = rec["objectives"]
+        for t in TARGETS:
+            qps = max((q for q, r in objs if r >= t), default=0.0)
+            rows.append(common.row(
+                f"fig7_9/{dataset_name}/{pg}/{method}/recall_{t}",
+                rec["summary"]["t_total_s"] * 1e6,
+                f"best_qps={qps:.0f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,49 @@
+"""Kernel-layer microbenchmarks: the Search hot-spot distance kernel and
+the flash-attention substrate, timed on this host (CPU path; the Pallas
+TPU kernels are exercised in interpret mode by tests, not timed here)."""
+from __future__ import annotations
+
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from benchmarks import common
+from repro.kernels import ops
+
+
+def _time(fn, *args, reps=5):
+    out = fn(*args)
+    jax.block_until_ready(out)
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        jax.block_until_ready(fn(*args))
+    return (time.perf_counter() - t0) / reps
+
+
+def run() -> list[str]:
+    rows = []
+    r = np.random.default_rng(0)
+    for nq, nx, d in [(256, 2048, 32), (1024, 8192, 128)]:
+        q = jnp.asarray(r.normal(size=(nq, d)), jnp.float32)
+        x = jnp.asarray(r.normal(size=(nx, d)), jnp.float32)
+        f = jax.jit(ops.l2_distance)
+        sec = _time(f, q, x)
+        gflops = 2 * nq * nx * d / sec / 1e9
+        rows.append(common.row(
+            f"kernel/l2_distance/{nq}x{nx}x{d}", sec * 1e6,
+            f"gflops={gflops:.1f}"))
+    for b, h, s, dh in [(2, 4, 1024, 64), (1, 8, 4096, 128)]:
+        q = jnp.asarray(r.normal(size=(b, h, s, dh)), jnp.float32)
+        f = jax.jit(lambda q: ops.flash_attention(q, q, q, causal=True))
+        sec = _time(f, q, reps=3)
+        gflops = 4 * b * h * s * s * dh / 2 / sec / 1e9   # causal half
+        rows.append(common.row(
+            f"kernel/flash_attention/{b}x{h}x{s}x{dh}", sec * 1e6,
+            f"gflops={gflops:.1f}"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

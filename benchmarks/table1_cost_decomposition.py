@@ -1,0 +1,38 @@
+"""Table I — tuning cost decomposition: Recom. vs Est. seconds.
+
+The paper's motivating observation: >=95% of tuning time is parameter
+estimation (PG builds + evaluation), not recommendation.  Reads the
+table4 result JSON when present (same runs), else runs a reduced sweep.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core.tuner import fastpgt
+
+METHODS = ["random", "ottertune", "vdtuner", "fastpgt"]
+
+
+def run(dataset_name: str = "sift") -> list[str]:
+    cached = common.load_json(f"table4_{dataset_name}")
+    rows = []
+    for method in METHODS:
+        if cached and f"vamana:{method}" in cached:
+            s = cached[f"vamana:{method}"]["summary"]
+            t_rec = s["t_recommend_s"]
+            t_est = s["t_estimate_s"]
+        else:
+            data, queries = common.dataset(dataset_name)
+            res = fastpgt.tune("vamana", data, queries, mode=method,
+                               seed=1, **common.TUNE_KW)
+            t_rec, t_est = res.t_recommend, res.t_estimate
+        total = t_rec + t_est
+        rows.append(common.row(
+            f"table1/{dataset_name}/{method}",
+            total * 1e6,
+            f"recom_s={t_rec:.1f};est_s={t_est:.1f};"
+            f"est_pct={100 * t_est / max(total, 1e-9):.2f}%"))
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,45 @@
+"""Table II — repeated distance computations across similar parameters.
+
+Builds three HNSW graphs at neighboring (efc, M) settings (paper uses
+A/B/C like (300,18)/(300,20)/(300,22)) and reports the sharing ratio: the
+fraction of per-graph distance evaluations that the shared build avoided
+(paper: ratio_rp > 50%, Search-phase ratio >= 60% on Sift/Glove).
+
+Our accounting (DESIGN.md §3): ratio = 1 - computed/sum_per_graph, i.e.
+the fraction of logical evaluations that were cache hits — the same
+quantity the paper's intersection ratio measures for m graphs.
+"""
+from __future__ import annotations
+
+from benchmarks import common
+from repro.core import hnsw
+
+SETTINGS = {
+    "sift": [(48, 10), (48, 12), (48, 14)],
+    "glove": [(64, 14), (64, 16), (64, 18)],
+}
+
+
+def run(dataset_name: str = "sift") -> list[str]:
+    data, _ = common.dataset(dataset_name)
+    rows = []
+    params = [hnsw.HNSWParams(efc=e, M=m)
+              for e, m in SETTINGS[dataset_name]]
+    with common.Timer() as t:
+        res = hnsw.build_multi_hnsw(data, params, batch_size=512)
+    c = res.counters
+    ratio_total = 1.0 - c.total / max(c.total_base, 1)
+    ratio_search = 1.0 - c.search / max(c.search_base, 1)
+    ratio_prune = 1.0 - c.prune / max(c.prune_base, 1)
+    rows.append(common.row(
+        f"table2/{dataset_name}/hnsw",
+        t.seconds * 1e6,
+        f"ndist={c.total};ratio_rp={ratio_total:.2%};"
+        f"ratio_rp_search={ratio_search:.2%};"
+        f"ratio_rp_prune={ratio_prune:.2%}"))
+    common.save_json(f"table2_{dataset_name}", c.as_dict())
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -1,0 +1,55 @@
+"""Table V — ESO/EPO ablation: RTC (relative tuning cost) and RDC
+(relative distance computations) for configs (I) neither, (II) ESO only,
+(III) ESO+EPO, per PG type.  Paper: RDC 0.18-0.57, RTC 0.47-0.54."""
+from __future__ import annotations
+
+import numpy as np
+
+from benchmarks import common
+from repro.core import eval as evallib
+from repro.core.tuner import estimator
+from repro.core.tuner import params as pspace
+
+CONFIGS = [("I", False, False), ("II", True, False), ("III", True, True)]
+
+
+def _batch_cfgs(pg: str, seed: int = 0):
+    sp = pspace.space(pg, scale=0.15)
+    rng = np.random.default_rng(seed)
+    center = sp.sample(rng, 1)[0]
+    return [sp.decode(sp.perturb(rng, center, 0.06)) for _ in range(6)]
+
+
+def run(dataset_name: str = "msong") -> list[str]:
+    # paper reports Table V on Msong; our stand-in uses the glove-like set
+    ds_name = "glove" if dataset_name == "msong" else dataset_name
+    data, queries = common.dataset(ds_name)
+    gt = evallib.ground_truth(data, queries, 10)
+    rows = []
+    out = {}
+    for pg in ("nsg", "hnsw", "vamana"):
+        cfgs = _batch_cfgs(pg)
+        base_cost = base_dist = None
+        for name, eso, epo in CONFIGS:
+            with common.Timer() as t:
+                rec = estimator.estimate(
+                    pg, data, queries, gt, cfgs, group_size=6,
+                    use_eso=eso, use_epo=epo, ef_grid=[10, 20],
+                    build_batch_size=512)
+            nd = rec.counters.total
+            if name == "I":
+                base_cost, base_dist = t.seconds, nd
+            rtc = t.seconds / base_cost
+            rdc = nd / base_dist
+            out[f"{pg}:{name}"] = {"cost_s": t.seconds, "ndist": nd,
+                                   "rtc": rtc, "rdc": rdc}
+            rows.append(common.row(
+                f"table5/{pg}/config_{name}",
+                t.seconds * 1e6,
+                f"ndist={nd};RTC={rtc:.2f};RDC={rdc:.2f}"))
+    common.save_json("table5", out)
+    return rows
+
+
+if __name__ == "__main__":
+    run()

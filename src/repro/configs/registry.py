@@ -1,0 +1,89 @@
+"""Architecture registry: --arch <id> resolution + input specs per shape.
+
+``input_specs(cfg, shape, mesh)`` returns ShapeDtypeStructs for every model
+input — the dry-run lowers against these (no allocation).  Modality
+frontends are stubs: whisper supplies precomputed frame embeddings, llava
+precomputed patch embeddings (per assignment).
+"""
+from __future__ import annotations
+
+import importlib
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+
+ARCH_IDS = [
+    "whisper_small", "granite_3_8b", "yi_34b", "gemma2_9b", "gemma3_12b",
+    "arctic_480b", "grok_1_314b", "jamba_v01_52b", "xlstm_350m",
+    "llava_next_34b",
+]
+
+
+def get_config(arch: str) -> ArchConfig:
+    arch = arch.replace("-", "_").replace(".", "")
+    mod = importlib.import_module(f"repro.configs.{arch}")
+    return mod.CONFIG
+
+
+def all_configs() -> dict[str, ArchConfig]:
+    return {a: get_config(a) for a in ARCH_IDS}
+
+
+def cell_is_runnable(cfg: ArchConfig, shape: ShapeConfig) -> tuple[bool, str]:
+    """Apply the assignment's skip rules; returns (runnable, reason)."""
+    if shape.name == "long_500k" and not cfg.sub_quadratic:
+        return False, "pure full-attention arch — long_500k skipped (spec)"
+    if shape.name == "long_500k" and cfg.is_encdec:
+        return False, "enc-dec decoder bound to encoder memory"
+    return True, ""
+
+
+def runnable_cells() -> list[tuple[str, str]]:
+    cells = []
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for sname, shape in SHAPES.items():
+            ok, _ = cell_is_runnable(cfg, shape)
+            if ok:
+                cells.append((arch, sname))
+    return cells
+
+
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def input_specs(cfg: ArchConfig, shape: ShapeConfig) -> dict:
+    """ShapeDtypeStruct stand-ins for every model input of this cell."""
+    b, s = shape.global_batch, shape.seq_len
+    if shape.kind == "train":
+        batch = {
+            "tokens": _sds((b, s), jnp.int32),
+            "labels": _sds((b, s), jnp.int32),
+        }
+        if cfg.is_encdec:
+            batch["enc_input"] = _sds((b, cfg.enc_seq, cfg.d_model),
+                                      jnp.float32)
+        if cfg.vision_stub:
+            batch["patches"] = _sds((b, cfg.n_patches, cfg.d_model),
+                                    jnp.float32)
+        return batch
+    if shape.kind == "prefill":
+        batch = {"tokens": _sds((b, s), jnp.int32)}
+        if cfg.is_encdec:
+            batch["enc_input"] = _sds((b, cfg.enc_seq, cfg.d_model),
+                                      jnp.float32)
+        if cfg.vision_stub:
+            batch["patches"] = _sds((b, cfg.n_patches, cfg.d_model),
+                                    jnp.float32)
+        return batch
+    # decode: one new token against a seq_len KV cache / recurrent state
+    batch = {
+        "token": _sds((b, 1), jnp.int32),
+        "pos": _sds((), jnp.int32),
+    }
+    if cfg.is_encdec:
+        batch["enc_memory"] = _sds((b, cfg.enc_seq, cfg.d_model), jnp.float32)
+    return batch

@@ -1,0 +1,130 @@
+"""Batched edge commits: forward rows + reverse edges with overflow re-prune.
+
+Implements lines 16-19 of Alg. 5 (HNSW) and 10-12 of Alg. 6 (Vamana): after a
+node batch's neighbor lists are pruned, every accepted edge (u -> v) yields a
+reverse candidate (v -> u); nodes whose degree would exceed M re-prune their
+candidate list with Alg. 2, others simply append.
+
+TPU adaptation: reverse edges are grouped by destination with a sort +
+run-rank (no atomics), capped at ``k_in`` incoming per destination per batch
+(static shape; the drop count is returned and is ~0 at sane batch sizes), and
+the overflow re-prune runs as one batched ``rng_prune`` over all affected
+destinations.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import INVALID
+from repro.core.prune import pairwise_candidate_dist, rng_prune
+
+
+class ReverseResult(NamedTuple):
+    adj_ids: jax.Array
+    adj_dist: jax.Array
+    n_checks: jax.Array   # prune dominance checks (distance computations)
+    n_dropped: jax.Array  # reverse edges dropped by the k_in cap
+
+
+def scatter_rows(adj_ids, adj_dist, rows, new_ids, new_dist, row_mask):
+    """Overwrite adjacency rows for the inserted batch (forward commit)."""
+    n = adj_ids.shape[0]
+    safe = jnp.where(row_mask, rows, n)
+    adj_ids = adj_ids.at[safe].set(new_ids, mode="drop")
+    adj_dist = adj_dist.at[safe].set(new_dist, mode="drop")
+    return adj_ids, adj_dist
+
+
+def _group_ranks(sorted_dst: jax.Array) -> jax.Array:
+    """Rank of each element within its equal-valued run (sorted input)."""
+    e = sorted_dst.shape[0]
+    idx = jnp.arange(e)
+    is_start = jnp.concatenate(
+        [jnp.array([True]), sorted_dst[1:] != sorted_dst[:-1]])
+    start_idx = jax.lax.cummax(jnp.where(is_start, idx, 0))
+    return idx - start_idx
+
+
+@functools.partial(jax.jit, static_argnames=("k_in", "m_max"))
+def add_reverse_edges(
+    data: jax.Array,
+    adj_ids: jax.Array,      # int32[n, M_max]
+    adj_dist: jax.Array,     # float32[n, M_max]
+    src: jax.Array,          # int32[b] inserted nodes
+    fwd_ids: jax.Array,      # int32[b, M_max] their accepted neighbors
+    fwd_dist: jax.Array,     # float32[b, M_max]
+    row_mask: jax.Array,     # bool[b]
+    m_limit: jax.Array,      # int32[] out-degree limit
+    alpha: jax.Array,        # float32[]
+    *,
+    k_in: int,
+    m_max: int,
+) -> ReverseResult:
+    n = adj_ids.shape[0]
+    b, mx = fwd_ids.shape
+
+    # ---- 1. flatten + group reverse edges by destination -------------------
+    valid = (fwd_ids != INVALID) & row_mask[:, None]
+    dst = jnp.where(valid, fwd_ids, n).reshape(-1)              # (E,)
+    rsrc = jnp.broadcast_to(src[:, None], (b, mx)).reshape(-1)
+    rdist = jnp.where(valid, fwd_dist, jnp.inf).reshape(-1)
+    order = jnp.argsort(dst)
+    dst_s, src_s, dist_s = dst[order], rsrc[order], rdist[order]
+    rank = _group_ranks(dst_s)
+    keep = (dst_s < n) & (rank < k_in)
+    n_dropped = jnp.sum((dst_s < n) & (rank >= k_in)).astype(jnp.int32)
+
+    inc_ids = jnp.full((n, k_in), INVALID, jnp.int32)
+    inc_dist = jnp.full((n, k_in), jnp.inf, jnp.float32)
+    di = jnp.where(keep, dst_s, n)
+    inc_ids = inc_ids.at[di, rank].set(src_s, mode="drop")
+    inc_dist = inc_dist.at[di, rank].set(dist_s, mode="drop")
+
+    # ---- 2. compact affected destination list (static capacity E) ----------
+    e = dst_s.shape[0]
+    first = jnp.concatenate(
+        [jnp.array([True]), dst_s[1:] != dst_s[:-1]]) & (dst_s < n)
+    aff_key = jnp.where(first, jnp.arange(e), e)
+    aff_pos = jnp.argsort(aff_key)                               # firsts first
+    aff = jnp.where(jnp.take(aff_key, aff_pos) < e,
+                    jnp.take(dst_s, aff_pos), n)                 # (E,) padded
+    aff_mask = aff < n
+    aff_safe = jnp.where(aff_mask, aff, 0)
+
+    # ---- 3. merged candidate lists: old N(v) + incoming --------------------
+    cand_ids = jnp.concatenate(
+        [adj_ids[aff_safe], inc_ids[aff_safe]], axis=-1)         # (E, mx+k_in)
+    cand_dist = jnp.concatenate(
+        [adj_dist[aff_safe], inc_dist[aff_safe]], axis=-1)
+    # Dedup repeated ids (u may already be a neighbor of v): keep first.
+    eq = cand_ids[:, :, None] == cand_ids[:, None, :]
+    c = cand_ids.shape[1]
+    tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+    dup = jnp.any(eq & tri[None] & (cand_ids != INVALID)[:, :, None], axis=-1)
+    cvalid = (cand_ids != INVALID) & ~dup & aff_mask[:, None]
+    cand_dist = jnp.where(cvalid, cand_dist, jnp.inf)
+    cand_ids_m = jnp.where(cvalid, cand_ids, INVALID)
+    srt = jnp.argsort(cand_dist, axis=-1)
+    cand_ids_m = jnp.take_along_axis(cand_ids_m, srt, axis=-1)
+    cand_dist = jnp.take_along_axis(cand_dist, srt, axis=-1)
+    cvalid = jnp.take_along_axis(cvalid, srt, axis=-1)
+    n_cand = jnp.sum(cvalid, axis=-1)
+
+    # ---- 4. overflow rows re-prune (Alg. 2); others append -----------------
+    overflow = n_cand > m_limit                                  # (E,)
+    pd = pairwise_candidate_dist(data, cand_ids_m)
+    pruned = rng_prune(cand_ids_m, cand_dist, pd, cvalid & overflow[:, None],
+                       m_limit, alpha, None, m_max=m_max)
+    app_ids = jnp.where(cvalid, cand_ids_m, INVALID)[:, :m_max]
+    app_dist = jnp.where(cvalid, cand_dist, jnp.inf)[:, :m_max]
+    new_ids = jnp.where(overflow[:, None], pruned.ids, app_ids)
+    new_dist = jnp.where(overflow[:, None], pruned.dist, app_dist)
+
+    wr = jnp.where(aff_mask, aff, n)
+    adj_ids = adj_ids.at[wr].set(new_ids, mode="drop")
+    adj_dist = adj_dist.at[wr].set(new_dist, mode="drop")
+    return ReverseResult(adj_ids, adj_dist, pruned.n_checks, n_dropped)

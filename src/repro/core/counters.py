@@ -1,0 +1,46 @@
+"""Distance-computation accounting — the paper's #dist metric.
+
+Counts are *logical* distance computations per the paper's model (DESIGN.md
+§3): ``*_base`` is what independent per-graph builds (no ESO/EPO) would
+compute, the unsuffixed field is what the shared build actually computed.
+Accumulated in Python ints across jitted batch steps (per-step counts are
+int32; totals here are unbounded).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+
+@dataclasses.dataclass
+class BuildCounters:
+    search_base: int = 0   # Search phase, independent builds
+    search: int = 0        # Search phase, with ESO sharing
+    prune_base: int = 0    # Prune dominance checks, independent builds
+    prune: int = 0         # with EPO sharing
+    init_base: int = 0     # Initialization (KNNG) distances, independent
+    init: int = 0          # shared across the group
+    connect: int = 0       # connectivity-repair searches (NSG)
+
+    @property
+    def total_base(self) -> int:
+        return self.search_base + self.prune_base + self.init_base + self.connect
+
+    @property
+    def total(self) -> int:
+        return self.search + self.prune + self.init + self.connect
+
+    def add(self, other: "BuildCounters") -> "BuildCounters":
+        return BuildCounters(
+            self.search_base + other.search_base, self.search + other.search,
+            self.prune_base + other.prune_base, self.prune + other.prune,
+            self.init_base + other.init_base, self.init + other.init,
+            self.connect + other.connect)
+
+    def as_dict(self) -> dict:
+        return {
+            "search_base": self.search_base, "search": self.search,
+            "prune_base": self.prune_base, "prune": self.prune,
+            "init_base": self.init_base, "init": self.init,
+            "connect": self.connect,
+            "total_base": self.total_base, "total": self.total,
+        }

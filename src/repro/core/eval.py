@@ -1,0 +1,106 @@
+"""k-ANNS evaluation: Recall@k, QPS, and the tuning objective.
+
+Parameter *estimation* in the paper = build the PG, then measure the
+(QPS, Recall@k) frontier over the query set.  ``ef`` is a search-time knob
+tuned jointly with the construction parameters (VDTuner's setup): an
+evaluation sweeps ef values and reports the best QPS meeting each recall
+target plus the raw (QPS, Recall) points for the MOBO tuner.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import knng, search
+from repro.core.graph import MultiGraph
+
+
+@dataclasses.dataclass
+class EvalPoint:
+    ef: int
+    recall: float
+    qps: float
+    n_dist: int
+
+
+def recall_at_k(found_ids: jax.Array, gt_ids: jax.Array) -> float:
+    """Mean |found ∩ gt| / k over the query batch."""
+    k = gt_ids.shape[1]
+    hits = (found_ids[:, :, None] == gt_ids[:, None, :]).any(-1)
+    return float(jnp.mean(jnp.sum(hits, axis=-1) / k))
+
+
+def ground_truth(data, queries, k: int) -> jax.Array:
+    ids, _ = knng.exact_knn(data, queries, k)
+    return ids
+
+
+def evaluate_search_fn(
+    search_fn: Callable[[jax.Array, int], search.SearchResult],
+    queries: jax.Array,
+    gt_ids: jax.Array,
+    k: int,
+    ef_grid: list[int],
+    *,
+    timing_reps: int = 2,
+) -> list[EvalPoint]:
+    """Sweep ef, returning (recall, QPS) per point.
+
+    ``search_fn(queries, ef)`` must return a SearchResult whose pool prefix
+    holds k ids.  QPS is measured wall-clock (CPU here; DESIGN.md §8 —
+    *ratios* across configurations are the reproduced quantity).
+    """
+    points = []
+    nq = queries.shape[0]
+    for ef in ef_grid:
+        res = search_fn(queries, ef)
+        jax.block_until_ready(res.pool_ids)
+        t0 = time.perf_counter()
+        for _ in range(timing_reps):
+            r2 = search_fn(queries, ef)
+            jax.block_until_ready(r2.pool_ids)
+        dt = (time.perf_counter() - t0) / timing_reps
+        rec = recall_at_k(res.pool_ids[:, :k], gt_ids)
+        points.append(EvalPoint(ef=ef, recall=rec, qps=nq / max(dt, 1e-9),
+                                n_dist=int(res.n_computed)))
+    return points
+
+
+def flat_graph_search_fn(g: MultiGraph, graph_idx: int, data, entry: int,
+                         k: int):
+    """Search closure for single-layer graphs (Vamana/NSG)."""
+    def fn(queries, ef):
+        return search.knn_search(
+            g.ids[graph_idx], data, queries, k, ef, entry)
+    return fn
+
+
+def best_qps_at_recall(points: list[EvalPoint], target: float) -> float:
+    """Best QPS among eval points meeting Recall@k >= target (0 if none)."""
+    ok = [p.qps for p in points if p.recall >= target]
+    return max(ok) if ok else 0.0
+
+
+def frontier_objectives(points: list[EvalPoint]) -> tuple[float, float]:
+    """(best QPS, best recall) summary pair used as the MOBO observation."""
+    if not points:
+        return 0.0, 0.0
+    # VDTuner observes one (QPS, Recall) per configuration; we follow its
+    # protocol of reporting the knee point: maximize qps * recall.
+    best = max(points, key=lambda p: p.qps * max(p.recall, 1e-6))
+    return best.qps, best.recall
+
+
+def pareto_points(points: list[EvalPoint]) -> list[EvalPoint]:
+    """Non-dominated subset of the (QPS, recall) sweep."""
+    out = []
+    for p in points:
+        if not any((q.qps >= p.qps and q.recall >= p.recall and
+                    (q.qps > p.qps or q.recall > p.recall)) for q in points):
+            out.append(p)
+    return sorted(out, key=lambda p: p.recall)

@@ -1,0 +1,136 @@
+"""Proximity-graph representation and shared utilities.
+
+TPU-native representation: a PG over ``n`` vectors is a dense adjacency
+matrix ``int32[n, M_max]`` padded with ``INVALID = -1``; ``m`` simultaneously
+constructed graphs stack to ``int32[m, n, M_max]``.  Distances annotate edges
+as ``float32`` with ``+inf`` padding so top-k merges need no branching.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+INVALID = -1
+INF = jnp.inf
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class MultiGraph:
+    """m stacked PGs over the same vertex set.
+
+    Attributes:
+      ids:  int32[m, n, M_max]  out-neighbor ids, INVALID-padded.
+      dist: float32[m, n, M_max] matching edge lengths, +inf-padded.
+    """
+    ids: jax.Array
+    dist: jax.Array
+
+    @property
+    def m(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def n(self) -> int:
+        return self.ids.shape[1]
+
+    @property
+    def max_degree(self) -> int:
+        return self.ids.shape[2]
+
+
+def empty_multigraph(m: int, n: int, max_degree: int) -> MultiGraph:
+    return MultiGraph(
+        ids=jnp.full((m, n, max_degree), INVALID, jnp.int32),
+        dist=jnp.full((m, n, max_degree), INF, jnp.float32),
+    )
+
+
+def degree(g: MultiGraph) -> jax.Array:
+    """int32[m, n] current out-degrees."""
+    return jnp.sum(g.ids != INVALID, axis=-1).astype(jnp.int32)
+
+
+def medoid(data: jax.Array) -> jax.Array:
+    """Index of the vector closest to the dataset centroid."""
+    c = jnp.mean(data, axis=0, keepdims=True)
+    diff = data - c
+    return jnp.argmin(jnp.sum(diff * diff, axis=-1)).astype(jnp.int32)
+
+
+def sort_edges(ids: jax.Array, dist: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sort edge lists ascending by distance (axis -1), INVALID/+inf last."""
+    order = jnp.argsort(dist, axis=-1)
+    return (jnp.take_along_axis(ids, order, axis=-1),
+            jnp.take_along_axis(dist, order, axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# Deterministic random strategy (FastPGT §IV-C).
+#
+# All randomness used during construction is a pure function of
+# (seed, node_id), so the m simultaneously built graphs see *identical* HNSW
+# level draws and *identical* initial-KNNG neighbor prefixes, maximizing the
+# structural overlap the ESO/EPO sharing exploits.  Nothing is stored: values
+# are regenerated on demand (O(1) memory, as in the paper).
+# ---------------------------------------------------------------------------
+
+def hnsw_levels(seed: int, n: int, m_l: float, max_level: int) -> jax.Array:
+    """Deterministic HNSW level per node: floor(-ln U * m_l), clipped."""
+    key = jax.random.PRNGKey(seed)
+    u = jax.random.uniform(key, (n,), jnp.float32, minval=1e-9, maxval=1.0)
+    lvl = jnp.floor(-jnp.log(u) * m_l).astype(jnp.int32)
+    return jnp.clip(lvl, 0, max_level)
+
+
+def random_knng_ids(seed: int, n: int, degree: int) -> jax.Array:
+    """Deterministic random initial KNNG ids int32[n, degree].
+
+    Row u is a prefix-stable pseudo-random sequence: a graph needing a
+    smaller initial degree takes a prefix of the same row, so all m Vamana
+    initial graphs overlap maximally (deterministic random strategy).
+    Self-loops are redirected to (u+1) mod n.
+    """
+    key = jax.random.PRNGKey(seed ^ 0x5EED)
+    ids = jax.random.randint(key, (n, degree), 0, n, jnp.int32)
+    rows = jnp.arange(n, dtype=jnp.int32)[:, None]
+    return jnp.where(ids == rows, (ids + 1) % n, ids)
+
+
+def with_distances(data: jax.Array, ids: jax.Array) -> jax.Array:
+    """Edge distances float32[..., k] for id matrix int32[n, k] (INVALID->inf)."""
+    src = data[jnp.arange(ids.shape[0])[:, None]]          # (n, 1, d) via bcast
+    dst = data[jnp.clip(ids, 0, None)]                     # (n, k, d)
+    diff = dst - src
+    d2 = jnp.sum(diff * diff, axis=-1)
+    return jnp.where(ids == INVALID, INF, d2).astype(jnp.float32)
+
+
+def stack_graphs(gs: list[tuple[jax.Array, jax.Array]],
+                 max_degree: int) -> MultiGraph:
+    """Stack per-graph (ids, dist) with per-graph degrees into a MultiGraph."""
+    ids, dist = [], []
+    for gid, gdist in gs:
+        pad = max_degree - gid.shape[-1]
+        ids.append(jnp.pad(gid, ((0, 0), (0, pad)), constant_values=INVALID))
+        dist.append(jnp.pad(gdist, ((0, 0), (0, pad)), constant_values=INF))
+    return MultiGraph(ids=jnp.stack(ids), dist=jnp.stack(dist))
+
+
+def degree_mask(m: int, max_degree: int, degrees: jax.Array) -> jax.Array:
+    """bool[m, max_degree]: slot j active for graph i iff j < degrees[i]."""
+    return jnp.arange(max_degree)[None, :] < degrees[:, None]
+
+
+def bucket(x: int, mult: int) -> int:
+    """Round up to a multiple — static-shape bucketing for compile reuse."""
+    return -(-x // mult) * mult
+
+
+def pytree_bytes(tree: Any) -> int:
+    return sum(x.size * x.dtype.itemsize
+               for x in jax.tree_util.tree_leaves(tree)
+               if hasattr(x, "size"))

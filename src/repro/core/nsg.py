@@ -1,0 +1,203 @@
+"""Multi-NSG construction — Alg. 6 variant per §IV-F of the paper.
+
+Differences from Vamana: the initial graph is a *real* KNNG (exact blocked
+brute force here instead of KGraph/nn-descent — a strictly-higher-quality
+deterministic stand-in, DESIGN.md §8), searches run on that static KNNG
+(not on the evolving graph), alpha is fixed at 1, and a connectivity-repair
+pass re-attaches nodes unreachable from the medoid (NSG's spanning step).
+
+Parameters per graph: (K_i initial out-degree, L_i pool, M_i degree limit).
+The exact KNNG is computed once at K_max and every graph takes a prefix —
+the deterministic shared-initialization strategy (counted once under ESO).
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import commit, graph, knng, prune, search
+from repro.core.counters import BuildCounters
+from repro.core.graph import INVALID, MultiGraph
+from repro.kernels import ops
+
+
+@dataclasses.dataclass(frozen=True)
+class NSGParams:
+    K: int      # initial KNNG out-degree
+    L: int      # search pool size
+    M: int      # out-degree limit
+
+    def clamped(self, n: int) -> "NSGParams":
+        return NSGParams(min(self.K, n - 1), min(self.L, n - 1),
+                         min(self.M, n - 1))
+
+
+@dataclasses.dataclass
+class NSGBuildResult:
+    g: MultiGraph
+    entry: int
+    counters: BuildCounters
+    params: list
+
+
+def build_multi_nsg(
+    data,
+    params: list[NSGParams],
+    *,
+    seed: int = 0,           # unused (exact init is deterministic); kept for API
+    batch_size: int = 128,
+    use_eso: bool = True,
+    use_epo: bool = True,
+    k_in: int = 16,
+    max_hops: int | None = None,
+    repair_iters: int = 2,
+) -> NSGBuildResult:
+    del seed
+    n, _ = data.shape
+    params = [p.clamped(n) for p in params]
+    m = len(params)
+    L = jnp.array([p.L for p in params], jnp.int32)
+    M = jnp.array([p.M for p in params], jnp.int32)
+    alpha1 = jnp.ones((m,), jnp.float32)
+    L_max = graph.bucket(max(p.L for p in params), 16)
+    M_max = graph.bucket(max(p.M for p in params), 8)
+    K_max = graph.bucket(max(p.K for p in params), 8)
+    ctr = BuildCounters()
+    hops = max_hops or search.default_max_hops(L_max)
+
+    # ---- Initialization: shared exact KNNG at K_max, per-graph prefixes ----
+    knn_ids, knn_dist = knng.build_knng(data, K_max)
+    init_knng = []
+    for p in params:
+        dm = jnp.arange(K_max)[None, :] < p.K
+        init_knng.append(jnp.where(dm, knn_ids, INVALID))
+    init_stack = jnp.stack(init_knng)                     # (m, n, K_max)
+    ctr.init_base += m * knng.knng_dist_count(n)
+    ctr.init += knng.knng_dist_count(n) if use_eso else ctr.init_base
+
+    ep = int(graph.medoid(data))
+    g = graph.empty_multigraph(m, n, M_max)
+
+    # ---- Search on the static KNNG + prune + commit (batched) --------------
+    for off in range(0, n, batch_size):
+        ids_np = np.arange(off, min(off + batch_size, n), dtype=np.int32)
+        b = batch_size
+        u = jnp.full((b,), n, jnp.int32).at[:len(ids_np)].set(
+            jnp.array(ids_np))
+        row_mask = jnp.arange(b) < len(ids_np)
+        queries = data[jnp.minimum(u, n - 1)]
+        entry = jnp.broadcast_to(jnp.int32(ep), (b, m))
+
+        res = search.beam_search(
+            init_stack, data, queries, jnp.where(row_mask, u, INVALID),
+            row_mask, L, entry, ef_max=L_max, max_hops=hops,
+            share_cache=use_eso)
+        ctr.search_base += int(res.n_fresh)
+        ctr.search += int(res.n_computed)
+
+        # NSG's prune candidates are the nodes *visited* during search; the
+        # pool alone loses u's local KNNG structure.  Merge each node's own
+        # KNNG row (exact distances already known — no extra #dist) with the
+        # search pool, dedup, and sort ascending (prune-order requirement).
+        u_safe = jnp.minimum(u, n - 1)
+        own_ids = jnp.broadcast_to(knn_ids[u_safe][None],
+                                   (m,) + knn_ids[u_safe].shape)
+        own_dist = jnp.broadcast_to(knn_dist[u_safe][None], own_ids.shape)
+        kmask = (jnp.arange(K_max)[None, None, :]
+                 < jnp.array([p.K for p in params], jnp.int32)[:, None, None])
+        own_ids = jnp.where(kmask & row_mask[None, :, None], own_ids, INVALID)
+        own_dist = jnp.where(own_ids != INVALID, own_dist, jnp.inf)
+        cand_ids = jnp.concatenate(
+            [jnp.transpose(res.pool_ids, (1, 0, 2)), own_ids], axis=-1)
+        cand_dist = jnp.concatenate(
+            [jnp.transpose(res.pool_dist, (1, 0, 2)), own_dist], axis=-1)
+        # dedup ids (keep first occurrence after sort-by-distance)
+        srt = jnp.argsort(cand_dist, axis=-1)
+        cand_ids = jnp.take_along_axis(cand_ids, srt, axis=-1)
+        cand_dist = jnp.take_along_axis(cand_dist, srt, axis=-1)
+        eq = cand_ids[:, :, None, :] == cand_ids[:, :, :, None]
+        c = cand_ids.shape[-1]
+        tri = jnp.tril(jnp.ones((c, c), bool), k=-1)
+        dup = jnp.any(eq & tri[None, None], axis=-1)
+        cand_ids = jnp.where(dup, INVALID, cand_ids)
+        cand_dist = jnp.where(dup, jnp.inf, cand_dist)
+        valid = cand_ids != INVALID
+        pruned, nb, nc = prune.multi_prune(
+            data, cand_ids, cand_dist, valid, M, alpha1,
+            m_max=M_max, use_epo=use_epo)
+        ctr.prune_base += int(nb)
+        ctr.prune += int(nc)
+
+        new_ids, new_dist = g.ids, g.dist
+        for i in range(m):
+            ai, ad = commit.scatter_rows(
+                new_ids[i], new_dist[i], u, pruned[i].ids, pruned[i].dist,
+                row_mask)
+            rev = commit.add_reverse_edges(
+                data, ai, ad, u, pruned[i].ids, pruned[i].dist, row_mask,
+                M[i], alpha1[i], k_in=k_in, m_max=M_max)
+            ctr.prune_base += int(rev.n_checks)
+            ctr.prune += int(rev.n_checks)
+            new_ids = new_ids.at[i].set(rev.adj_ids)
+            new_dist = new_dist.at[i].set(rev.adj_dist)
+        g = MultiGraph(ids=new_ids, dist=new_dist)
+
+    # ---- connectivity repair (NSG spanning step, simplified) ---------------
+    for _ in range(repair_iters):
+        g, n_fix, n_dist = _repair_connectivity(g, data, ep)
+        ctr.connect += n_dist
+        if n_fix == 0:
+            break
+
+    return NSGBuildResult(g=g, entry=ep, counters=ctr, params=params)
+
+
+def _bfs_python(ids_i, reach, iters):
+    """bool[n] BFS reachability via boolean frontier propagation."""
+    n = ids_i.shape[0]
+    for _ in range(iters):
+        nbr = jnp.where(reach[:, None], jnp.maximum(ids_i, 0), n)
+        nbr = jnp.where(
+            reach[:, None] & (ids_i != INVALID), nbr, n)
+        new = jnp.zeros((n,), bool).at[nbr.reshape(-1)].set(True, mode="drop")
+        nxt = reach | new
+        if bool(jnp.all(nxt == reach)):
+            return nxt, False
+        reach = nxt
+    return reach, True
+
+
+def _repair_connectivity(g: MultiGraph, data, ep: int
+                         ) -> tuple[MultiGraph, int, int]:
+    """Attach each unreachable node to its nearest reachable node."""
+    m, n, M_max = g.ids.shape
+    new_ids, new_dist = g.ids, g.dist
+    total_fix = 0
+    n_dist = 0
+    for i in range(m):
+        reach, _ = _bfs_python(g.ids[i], jnp.zeros((n,), bool).at[ep].set(True), 64)
+        unreach = np.asarray(~reach).nonzero()[0]
+        total_fix += len(unreach)
+        if len(unreach) == 0:
+            continue
+        # nearest *reachable* node of each unreachable node (brute force on
+        # the unreachable set — small in practice).
+        q = data[jnp.array(unreach)]
+        d2 = ops.l2_distance(q, data)                     # (u, n)
+        d2 = jnp.where(reach[None, :], d2, jnp.inf)
+        parent = jnp.argmin(d2, axis=-1).astype(jnp.int32)
+        pdist = jnp.min(d2, axis=-1)
+        n_dist += len(unreach) * n
+        # parent -> unreachable edge: replace parent's worst slot.
+        worst = jnp.argmax(new_dist[i][parent], axis=-1)
+        new_ids = new_ids.at[i, parent, worst].set(jnp.array(unreach, jnp.int32))
+        new_dist = new_dist.at[i, parent, worst].set(pdist)
+    return MultiGraph(ids=new_ids, dist=new_dist), total_fix, n_dist
+
+
+def build_nsg(data, p: NSGParams, **kw) -> NSGBuildResult:
+    kw.setdefault("use_eso", False)
+    kw.setdefault("use_epo", False)
+    return build_multi_nsg(data, [p], **kw)

@@ -1,0 +1,261 @@
+"""Batched lockstep beam search — Algorithm 1 (KANNS) and Algorithm 3 (mKANNS).
+
+TPU adaptation of the paper's per-query priority-queue search: a whole batch
+of ``b`` queries searches ``m`` graphs simultaneously inside one
+``lax.while_loop``.  Pools are fixed-size sorted arrays (``ef_max`` slots);
+each hop expands the closest unexpanded pool entry per (query, graph), gathers
+its out-neighbors, computes distances through the V_delta-aware kernel and
+merges by a sorted top-k.
+
+ESO (shared V_delta cache): with ``share_cache=True`` a per-query distance
+row ``(b, n)`` is shared by all m graphs — exactly the paper's Alg. 3 cache.
+The *total* number of computed distances equals the size of the union of
+(query, neighbor) pairs any graph visits, independent of visit order, so the
+lockstep schedule reports the same #dist as the paper's sequential one.
+
+Counters (paper metrics):
+  n_fresh    — distances each graph would compute alone (no sharing): the
+               per-graph Algorithm-1 cost, summed over graphs.
+  n_computed — distances actually computed (cache misses). Equal to n_fresh
+               when share_cache=False.
+
+Per-graph pool sizes ``ef_i <= ef_max`` are enforced by slot masks; because
+pools are kept globally sorted and entries only move backwards, masking slots
+``j >= ef_i`` is equivalent to hard eviction (see tests/test_search.py).
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core.graph import INVALID
+from repro.kernels import ops
+
+
+class SearchResult(NamedTuple):
+    pool_ids: jax.Array    # int32[b, m, ef_max] ascending by distance
+    pool_dist: jax.Array   # float32[b, m, ef_max]
+    n_fresh: jax.Array     # int32[] per-graph-alone distance count
+    n_computed: jax.Array  # int32[] actually computed (ESO)
+    hops: jax.Array        # int32[]
+    cache_d: jax.Array     # float32[b, n] V_delta (or [b, 1] dummy)
+    cache_has: jax.Array   # bool[b, n]
+
+
+def fresh_cache(b: int, n: int, share_cache: bool
+                ) -> tuple[jax.Array, jax.Array]:
+    """Empty V_delta — 'initialize V_delta as -1 for each vector' (Alg. 5 l.7).
+
+    Only the has-bit is materialized (see _expand_all_graphs); cache_d is a
+    dummy kept for API stability."""
+    w = n if share_cache else 1
+    return (jnp.zeros((b, 1), jnp.float32), jnp.zeros((b, w), bool))
+
+
+def _first_occurrence(ids: jax.Array, sentinel: int) -> jax.Array:
+    """bool[..., k]: True at the first occurrence of each id (flat order).
+
+    Sort-based: O(k log k) per row, vectorized (the in-hop cross-graph dedup
+    that makes the lockstep schedule's V_delta accounting match the paper's
+    sequential one — §Perf iteration 4)."""
+    k = ids.shape[-1]
+    pos = jnp.broadcast_to(jnp.arange(k), ids.shape)
+    order = jnp.argsort(ids, axis=-1)
+    s_ids = jnp.take_along_axis(ids, order, axis=-1)
+    s_pos = jnp.take_along_axis(pos, order, axis=-1)
+    first_sorted = jnp.concatenate(
+        [jnp.ones_like(s_ids[..., :1], bool),
+         s_ids[..., 1:] != s_ids[..., :-1]], axis=-1)
+    inv = jnp.argsort(s_pos, axis=-1)
+    return jnp.take_along_axis(first_sorted, inv, axis=-1)
+
+
+def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
+                       slot_mask, pool_ids, pool_dist, expanded,
+                       visited, cache_d, cache_has, share_cache):
+    """One hop of ALL m graphs, fully vectorized over (b, m).
+
+    Cross-graph duplicate candidates within the hop are deduplicated
+    (first occurrence in graph order), so the computed-distance counter
+    equals the sequential schedule's |union| exactly.
+    """
+    b, m, ef_max = pool_ids.shape
+    n = data.shape[0]
+    mx = graph_ids.shape[2]
+    brange = jnp.arange(b)
+
+    unexp = (pool_ids != INVALID) & (~expanded) & slot_mask[None]
+    act = jnp.any(unexp, axis=-1) & row_mask[:, None]            # (b, m)
+    sel = jnp.argmax(unexp, axis=-1)                             # (b, m)
+    u = jnp.take_along_axis(pool_ids, sel[..., None], axis=-1)[..., 0]
+    u_safe = jnp.where(act, jnp.maximum(u, 0), 0)
+    expanded = expanded.at[brange[:, None], jnp.arange(m)[None, :],
+                           sel].set(
+        jnp.take_along_axis(expanded, sel[..., None], -1)[..., 0] | act)
+
+    nbrs = graph_ids[jnp.arange(m)[None, :], u_safe]             # (b, m, Mx)
+    nbrs_safe = jnp.maximum(nbrs, 0)
+    vis = visited[brange[:, None, None], jnp.arange(m)[None, :, None],
+                  nbrs_safe]
+    valid = ((nbrs != INVALID) & (~vis) & act[..., None]
+             & (nbrs != query_ids[:, None, None]))
+    # same-id duplicates within one adjacency row count/insert once
+    # (small Mx: a triangular compare beats a sort here)
+    eq = nbrs_safe[..., :, None] == nbrs_safe[..., None, :]
+    tri = jnp.tril(jnp.ones((mx, mx), bool), k=-1)
+    dup = jnp.any(eq & tri[None, None], axis=-1)
+    valid = valid & ~dup
+
+    flat_ids = nbrs_safe.reshape(b, m * mx)
+    flat_valid = valid.reshape(b, m * mx)
+    if share_cache and m > 1:
+        first = _first_occurrence(
+            jnp.where(flat_valid, flat_ids, n + jnp.arange(m * mx)[None, :]),
+            n)                                                    # (b, m*mx)
+        first = first & flat_valid
+    else:
+        first = flat_valid
+
+    cvec = data[flat_ids]                                        # (b, m*mx, d)
+    dists = ops.gather_distance(queries, cvec)
+    if share_cache:
+        # V_delta's domain is exactly the union of per-graph visit sets, so
+        # only a has-bit is tracked; the values come from the batched kernel
+        # either way (lockstep hardware computes the tile regardless —
+        # DESIGN.md §3, §Perf iteration 5). #dist counters stay exact.
+        has = cache_has[brange[:, None], flat_ids]
+        need = flat_valid & ~has
+        scat = jnp.where(need, flat_ids, n)
+        cache_has = cache_has.at[brange[:, None], scat].set(
+            True, mode="drop")
+        n_comp = jnp.sum(need & first).astype(jnp.int32)
+    else:
+        n_comp = jnp.sum(flat_valid).astype(jnp.int32)
+    n_fresh = jnp.sum(flat_valid).astype(jnp.int32)
+
+    scat_v = jnp.where(flat_valid, flat_ids, n).reshape(b, m, mx)
+    visited = visited.at[brange[:, None, None],
+                         jnp.arange(m)[None, :, None],
+                         scat_v].set(True, mode="drop")
+
+    dists3 = dists.reshape(b, m, mx)
+    cand_ids = jnp.where(valid, nbrs, INVALID)
+    cand_dist = jnp.where(valid, dists3, jnp.inf)
+    all_ids = jnp.concatenate([pool_ids, cand_ids], axis=-1)
+    all_dist = jnp.concatenate([pool_dist, cand_dist], axis=-1)
+    all_exp = jnp.concatenate([expanded, jnp.zeros_like(valid)], axis=-1)
+    order = jnp.argsort(all_dist, axis=-1)[..., :ef_max]
+    pool_ids = jnp.take_along_axis(all_ids, order, axis=-1)
+    pool_dist = jnp.take_along_axis(all_dist, order, axis=-1)
+    expanded = jnp.take_along_axis(all_exp, order, axis=-1)
+    return (pool_ids, pool_dist, expanded, visited, cache_d, cache_has,
+            n_fresh, n_comp)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("ef_max", "max_hops", "share_cache"))
+def beam_search(
+    graph_ids: jax.Array,      # int32[m, n, Mx]
+    data: jax.Array,           # f32[n, d]
+    queries: jax.Array,        # f32[b, d]
+    query_ids: jax.Array,      # int32[b]; -1 for external queries
+    row_mask: jax.Array,       # bool[b]; False = padding row
+    ef: jax.Array,             # int32[m] per-graph pool size
+    entry: jax.Array,          # int32[b, m] entry points
+    cache_d: jax.Array | None = None,    # carried V_delta (ESO across calls)
+    cache_has: jax.Array | None = None,
+    *,
+    ef_max: int,
+    max_hops: int,
+    share_cache: bool,
+) -> SearchResult:
+    m, n, _ = graph_ids.shape
+    b = queries.shape[0]
+    brange = jnp.arange(b)
+    slot_mask = jnp.arange(ef_max)[None, :] < ef[:, None]        # (m, ef_max)
+
+    # ---- init: pool[0] = (ep, delta(q, ep)), Alg. 1 line 2 ----------------
+    pool_ids = jnp.full((b, m, ef_max), INVALID, jnp.int32)
+    pool_dist = jnp.full((b, m, ef_max), jnp.inf, jnp.float32)
+    expanded = jnp.zeros((b, m, ef_max), bool)
+    visited = jnp.zeros((b, m, n), bool)
+    if cache_d is None:
+        cache_d, cache_has = fresh_cache(b, n, share_cache)
+    n_fresh = jnp.int32(0)
+    n_comp = jnp.int32(0)
+
+    for i in range(m):
+        ep = entry[:, i]
+        ep_safe = jnp.maximum(ep, 0)
+        ok = (ep != INVALID) & (ep != query_ids) & row_mask
+        evec = data[ep_safe][:, None, :]                         # (b, 1, d)
+        d0 = ops.gather_distance(queries, evec)[:, 0]
+        if share_cache:
+            has = cache_has[brange, ep_safe]
+            need = ok & ~has
+            scat = jnp.where(need, ep_safe, n)
+            cache_has = cache_has.at[brange, scat].set(True, mode="drop")
+            n_comp += jnp.sum(need).astype(jnp.int32)
+        else:
+            n_comp += jnp.sum(ok).astype(jnp.int32)
+        n_fresh += jnp.sum(ok).astype(jnp.int32)
+        pool_ids = pool_ids.at[:, i, 0].set(jnp.where(ok, ep, INVALID))
+        pool_dist = pool_dist.at[:, i, 0].set(jnp.where(ok, d0, jnp.inf))
+        visited = visited.at[brange, i, jnp.where(ok, ep_safe, 0)].set(
+            visited[brange, i, jnp.where(ok, ep_safe, 0)] | ok)
+
+    state = (pool_ids, pool_dist, expanded, visited, cache_d, cache_has,
+             n_fresh, n_comp, jnp.int32(0))
+
+    def cond(state):
+        pool_ids, _, expanded, *_, hop = state
+        unexp = (pool_ids != INVALID) & ~expanded & slot_mask[None]
+        return (hop < max_hops) & jnp.any(unexp & row_mask[:, None, None])
+
+    def body(state):
+        (pool_ids, pool_dist, expanded, visited, cache_d, cache_has,
+         n_fresh, n_comp, hop) = state
+        (pool_ids, pool_dist, expanded, visited, cache_d, cache_has,
+         nf, nc) = _expand_all_graphs(
+            graph_ids, data, queries, query_ids, row_mask, slot_mask,
+            pool_ids, pool_dist, expanded, visited, cache_d, cache_has,
+            share_cache)
+        return (pool_ids, pool_dist, expanded, visited, cache_d, cache_has,
+                n_fresh + nf, n_comp + nc, hop + 1)
+
+    state = jax.lax.while_loop(cond, body, state)
+    (pool_ids, pool_dist, _, _, cache_d, cache_has,
+     n_fresh, n_comp, hops) = state
+    # Mask out slots beyond each graph's ef (they are not part of C(u)).
+    pool_ids = jnp.where(slot_mask[None], pool_ids, INVALID)
+    pool_dist = jnp.where(slot_mask[None], pool_dist, jnp.inf)
+    return SearchResult(pool_ids, pool_dist, n_fresh, n_comp, hops,
+                        cache_d, cache_has)
+
+
+def default_max_hops(ef_max: int) -> int:
+    """Generous hop bound: best-first search converges in ~ef expansions."""
+    return 3 * ef_max + 16
+
+
+def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
+               k: int, ef: int, entry: int | jax.Array,
+               max_hops: int | None = None) -> SearchResult:
+    """Single-graph external k-ANNS (evaluation path, Alg. 1)."""
+    if graph_ids.ndim == 2:
+        graph_ids = graph_ids[None]
+    b = queries.shape[0]
+    ep = jnp.broadcast_to(jnp.asarray(entry, jnp.int32), (b,))[:, None]
+    res = beam_search(
+        graph_ids, data, queries,
+        jnp.full((b,), INVALID, jnp.int32), jnp.ones((b,), bool),
+        jnp.array([ef], jnp.int32), ep,
+        ef_max=ef, max_hops=max_hops or default_max_hops(ef),
+        share_cache=False)
+    return SearchResult(res.pool_ids[:, 0, :k], res.pool_dist[:, 0, :k],
+                        res.n_fresh, res.n_computed, res.hops,
+                        res.cache_d, res.cache_has)

@@ -1,0 +1,117 @@
+"""Parameter estimation — the cost the paper attacks (§IV-C..F).
+
+``estimate`` builds the PGs for a batch of recommended configurations and
+measures each graph's (QPS, Recall@k) frontier.  ``group_size`` controls the
+paper's sharing: 1 = the baseline estimation every prior tuner uses (each PG
+built independently); >1 = FastPGT's simultaneous multi-PG construction with
+ESO/EPO.  Wall time and logical #dist are accounted per phase so Table I/IV
+and the ablation (Table V) read straight off the returned record.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+from typing import Any
+
+import numpy as np
+
+from repro.core import eval as evallib
+from repro.core import hnsw as hnswlib
+from repro.core.counters import BuildCounters
+from repro.core.tuner import params as pspace
+
+
+@dataclasses.dataclass
+class Estimate:
+    cfg: dict[str, Any]
+    qps: float
+    recall: float
+    points: list          # full (ef, recall, qps) sweep
+    def objectives(self) -> tuple[float, float]:
+        return self.qps, self.recall
+
+
+@dataclasses.dataclass
+class EstimationRecord:
+    estimates: list[Estimate]
+    counters: BuildCounters
+    build_seconds: float
+    eval_seconds: float
+    n_dist_eval: int = 0
+
+    @property
+    def seconds(self) -> float:
+        return self.build_seconds + self.eval_seconds
+
+
+def _eval_one(pg, build_res, gi, data, queries, gt, k, ef_grid, timing_reps):
+    if pg == "hnsw":
+        def fn(q, ef):
+            return hnswlib.hnsw_search(build_res.g, gi, data, q, k, ef)
+    else:
+        def fn(q, ef):
+            return evallib.flat_graph_search_fn(
+                build_res.g, gi, data, build_res.entry, k)(q, ef)
+    return evallib.evaluate_search_fn(fn, queries, gt, k, ef_grid,
+                                      timing_reps=timing_reps)
+
+
+def estimate(
+    pg: str,
+    data,
+    queries,
+    gt,
+    cfgs: list[dict[str, Any]],
+    *,
+    k: int = 10,
+    ef_grid: list[int] | None = None,
+    group_size: int = 1,
+    use_eso: bool = True,
+    use_epo: bool = True,
+    seed: int = 0,
+    build_batch_size: int = 256,
+    timing_reps: int = 1,
+) -> EstimationRecord:
+    """Estimate the quality of each configuration in ``cfgs``."""
+    ef_grid = ef_grid or [max(10, k), 2 * k, 4 * k, 8 * k]
+    ctr = BuildCounters()
+    estimates: list[Estimate] = []
+    t_build = 0.0
+    t_eval = 0.0
+    n_dist_eval = 0
+    group_size = max(1, group_size)
+
+    for goff in range(0, len(cfgs), group_size):
+        group = cfgs[goff:goff + group_size]
+        bps = [pspace.to_build_params(pg, c) for c in group]
+        t0 = time.perf_counter()
+        res = pspace.build_many(
+            pg, data, bps, seed=seed,
+            use_eso=use_eso and len(group) > 1,
+            use_epo=use_epo and len(group) > 1,
+            batch_size=build_batch_size)
+        t_build += time.perf_counter() - t0
+        ctr = ctr.add(res.counters)
+        t0 = time.perf_counter()
+        for gi, cfg in enumerate(group):
+            points = _eval_one(pg, res, gi, data, queries, gt, k, ef_grid,
+                               timing_reps)
+            qps, recall = evallib.frontier_objectives(points)
+            n_dist_eval += sum(p.n_dist for p in points)
+            estimates.append(Estimate(cfg=cfg, qps=qps, recall=recall,
+                                      points=points))
+        t_eval += time.perf_counter() - t0
+    return EstimationRecord(estimates=estimates, counters=ctr,
+                            build_seconds=t_build, eval_seconds=t_eval,
+                            n_dist_eval=n_dist_eval)
+
+
+def make_dataset(n: int, d: int, nq: int, *, seed: int = 0,
+                 n_clusters: int = 32, spread: float = 4.0):
+    """Synthetic clustered dataset (Sift/Glove-like geometry, DESIGN.md §8)."""
+    import jax.numpy as jnp
+    rng = np.random.default_rng(seed)
+    centers = rng.normal(size=(n_clusters, d)) * spread
+    data = centers[rng.integers(0, n_clusters, n)] + rng.normal(size=(n, d))
+    qs = centers[rng.integers(0, n_clusters, nq)] + rng.normal(size=(nq, d))
+    return (jnp.asarray(data, jnp.float32), jnp.asarray(qs, jnp.float32))

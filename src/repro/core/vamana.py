@@ -1,0 +1,129 @@
+"""BuildMultiVamana — Algorithm 6, batched TPU adaptation.
+
+m Vamana graphs with parameters {(L_i, M_i, alpha_i)} are built in one pass
+over the dataset (R = L per Theorem 1).  Each insertion batch searches the
+graph frozen at batch start (standard GPU/TPU relaxation, DESIGN.md §3),
+shares one V_delta across the m per-node searches (ESO), chains the m prunes
+through mPrune (EPO, group sorted ascending by alpha for soundness), and
+commits forward + reverse edges with overflow re-prune.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core import commit, graph, prune, search
+from repro.core.counters import BuildCounters
+from repro.core.graph import INVALID, MultiGraph
+
+
+@dataclasses.dataclass(frozen=True)
+class VamanaParams:
+    L: int          # search pool size (= R per Theorem 1)
+    M: int          # out-degree limit
+    alpha: float    # pruning parameter
+
+    def clamped(self, n: int) -> "VamanaParams":
+        return VamanaParams(min(self.L, n - 1), min(self.M, n - 1), self.alpha)
+
+
+@dataclasses.dataclass
+class BuildResult:
+    g: MultiGraph               # in the *original* parameter order
+    entry: int
+    counters: BuildCounters
+    params: list
+
+
+def build_multi_vamana(
+    data,
+    params: list[VamanaParams],
+    *,
+    seed: int = 0,
+    batch_size: int = 128,
+    use_eso: bool = True,
+    use_epo: bool = True,
+    k_in: int = 16,
+    max_hops: int | None = None,
+) -> BuildResult:
+    n, _ = data.shape
+    params = [p.clamped(n) for p in params]
+    m = len(params)
+    order = sorted(range(m), key=lambda i: params[i].alpha)   # EPO soundness
+    inv_order = np.argsort(order)
+    ps = [params[i] for i in order]
+    L = jnp.array([p.L for p in ps], jnp.int32)
+    M = jnp.array([p.M for p in ps], jnp.int32)
+    alpha = jnp.array([p.alpha for p in ps], jnp.float32)
+    # Static shape maxima rounded to buckets: per-graph masks enforce the
+    # true L_i/M_i, so padding never changes results — it keeps compiled
+    # shapes identical across tuning iterations (one XLA compile, reused).
+    L_max = graph.bucket(max(p.L for p in ps), 16)
+    M_max = graph.bucket(max(p.M for p in ps), 8)
+    ctr = BuildCounters()
+
+    # ---- Initialization: deterministic shared random KNNG (Alg. 6 l.1-2) ---
+    init_ids = graph.random_knng_ids(seed, n, M_max)          # shared prefix
+    init_dist = graph.with_distances(data, init_ids)
+    gids, gdist = [], []
+    for p in ps:
+        dm = jnp.arange(M_max)[None, :] < p.M
+        gids.append(jnp.where(dm, init_ids, INVALID))
+        gdist.append(jnp.where(dm, init_dist, jnp.inf))
+    g = MultiGraph(ids=jnp.stack(gids), dist=jnp.stack(gdist))
+    ctr.init_base += sum(n * p.M for p in ps)
+    ctr.init += n * M_max if use_eso else ctr.init_base
+
+    ep = int(graph.medoid(data))                              # Alg. 6 l.3
+    hops = max_hops or search.default_max_hops(L_max)
+
+    # ---- main pass (Alg. 6 l.4-12), batched ---------------------------------
+    for off in range(0, n, batch_size):
+        ids_np = np.arange(off, min(off + batch_size, n), dtype=np.int32)
+        b = batch_size
+        u = jnp.full((b,), n, jnp.int32).at[:len(ids_np)].set(ids_np)
+        row_mask = jnp.arange(b) < len(ids_np)
+        queries = data[jnp.minimum(u, n - 1)]
+        entry = jnp.broadcast_to(jnp.int32(ep), (b, m))
+
+        res = search.beam_search(
+            g.ids, data, queries, jnp.where(row_mask, u, INVALID), row_mask,
+            L, entry, ef_max=L_max, max_hops=hops, share_cache=use_eso)
+        ctr.search_base += int(res.n_fresh)
+        ctr.search += int(res.n_computed)
+
+        cand_ids = jnp.transpose(res.pool_ids, (1, 0, 2))     # (m, b, L_max)
+        cand_dist = jnp.transpose(res.pool_dist, (1, 0, 2))
+        valid = cand_ids != INVALID
+        pruned, nb, nc = prune.multi_prune(
+            data, cand_ids, cand_dist, valid, M, alpha,
+            m_max=M_max, use_epo=use_epo)
+        ctr.prune_base += int(nb)
+        ctr.prune += int(nc)
+
+        new_ids = g.ids
+        new_dist = g.dist
+        for i in range(m):
+            ai, ad = commit.scatter_rows(
+                new_ids[i], new_dist[i], u, pruned[i].ids, pruned[i].dist,
+                row_mask)
+            rev = commit.add_reverse_edges(
+                data, ai, ad, u, pruned[i].ids, pruned[i].dist, row_mask,
+                M[i], alpha[i], k_in=k_in, m_max=M_max)
+            ctr.prune_base += int(rev.n_checks)
+            ctr.prune += int(rev.n_checks)
+            new_ids = new_ids.at[i].set(rev.adj_ids)
+            new_dist = new_dist.at[i].set(rev.adj_dist)
+        g = MultiGraph(ids=new_ids, dist=new_dist)
+
+    g = MultiGraph(ids=g.ids[inv_order], dist=g.dist[inv_order])
+    return BuildResult(g=g, entry=ep, counters=ctr, params=params)
+
+
+def build_vamana(data, p: VamanaParams, **kw) -> BuildResult:
+    """Single-graph build (baseline estimation path: no sharing possible)."""
+    kw.setdefault("use_eso", False)
+    kw.setdefault("use_epo", False)
+    return build_multi_vamana(data, [p], **kw)

@@ -1,0 +1,129 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility fallback.
+
+Model code annotates tensors with *logical* axis names
+(``constrain(x, "batch", "seq", "embed")``); a rules table maps logical
+names to mesh axes.  A mapping is applied only when the dimension size is
+divisible by the mesh-axis size — otherwise that dim silently replicates.
+This keeps every (arch x mesh) cell compiling out of the box; the §Perf
+hillclimb then attacks cells where fallback replication hurts (e.g. head
+counts not divisible by the TP axis — see EXPERIMENTS.md).
+
+Use ``activate(mesh, rules)`` as a context manager; ``constrain`` is a no-op
+when nothing is active, so all model code runs unmodified on a single CPU.
+"""
+from __future__ import annotations
+
+import contextlib
+import threading
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+# logical name -> mesh axis name (or tuple of axes)
+DEFAULT_RULES: dict[str, object] = {
+    "batch": ("pod", "data"),      # data parallel over pod x data
+    "seq": None,                   # sequence kept whole by default
+    "seq_shard": "model",          # context-parallel sequence axis (opt-in)
+    "kv_seq": "data",              # long-context KV cache sharding (B=1)
+    "embed": None,                 # activation d_model dim
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "kv_head_dim": None,           # kv projections replicate over TP
+    # fallback TP axis: used when head counts don't divide the TP axis
+    # (yi/arctic/llava 56H, whisper 12H, GQA kv=8 on a 16-way axis) — every
+    # assigned arch has head_dim % 16 == 0, so attention always TP-shards.
+    "head_dim": "model",
+    "mlp": "model",                # d_ff (column parallel)
+    "mlp_in": "data",              # FSDP shard of the d_model dim of weights
+    "kv_seq_full": None,           # attention KV must be seq-complete
+    "expert": "model",
+    "expert_mlp": None,            # grok-style fallback: shard inside expert
+    "conv": None,
+    "state": None,
+    "layers": None,
+}
+
+_local = threading.local()
+
+
+def _state():
+    if not hasattr(_local, "ctx"):
+        _local.ctx = None
+    return _local.ctx
+
+
+@contextlib.contextmanager
+def activate(mesh: Mesh, rules: dict[str, object] | None = None):
+    """Enable logical sharding constraints within the block."""
+    prev = _state()
+    _local.ctx = (mesh, dict(DEFAULT_RULES, **(rules or {})))
+    try:
+        yield
+    finally:
+        _local.ctx = prev
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, (tuple, list)):
+        s = 1
+        for a in axis:
+            s *= mesh.shape[a]
+        return s
+    return mesh.shape[axis]
+
+
+def spec_for(shape: tuple[int, ...], names: tuple[str | None, ...],
+             mesh: Mesh, rules: dict) -> P:
+    """PartitionSpec for logical names; replicate non-divisible dims."""
+    assert len(shape) == len(names), (shape, names)
+    out = []
+    used: set = set()
+    for dim, name in zip(shape, names):
+        axis = rules.get(name) if name else None
+        if axis is None:
+            out.append(None)
+            continue
+        axes = tuple(axis) if isinstance(axis, (tuple, list)) else (axis,)
+        # drop axes absent from this mesh (e.g. 'pod' on the single-pod mesh)
+        axes = tuple(a for a in axes if a in mesh.shape)
+        if not axes or any(a in used for a in axes):
+            out.append(None)
+            continue
+        size = 1
+        for a in axes:
+            size *= mesh.shape[a]
+        if size > 1 and dim % size == 0:
+            out.append(axes[0] if len(axes) == 1 else axes)
+            used.update(axes)
+        else:
+            out.append(None)
+    return P(*out)
+
+
+def constrain(x: jax.Array, *names: str | None) -> jax.Array:
+    """with_sharding_constraint by logical names (no-op when inactive)."""
+    ctx = _state()
+    if ctx is None:
+        return x
+    mesh, rules = ctx
+    spec = spec_for(x.shape, names, mesh, rules)
+    return jax.lax.with_sharding_constraint(x, NamedSharding(mesh, spec))
+
+
+def named_sharding(mesh: Mesh, shape: tuple[int, ...],
+                   names: tuple[str | None, ...],
+                   rules: dict | None = None) -> NamedSharding:
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    return NamedSharding(mesh, spec_for(shape, names, mesh, rules))
+
+
+def tree_shardings(mesh: Mesh, tree_shapes, tree_names, rules=None):
+    """Map (shape pytree, logical-name pytree) -> NamedSharding pytree."""
+    return jax.tree_util.tree_map(
+        lambda sh, nm: named_sharding(mesh, sh, nm, rules),
+        tree_shapes, tree_names,
+        is_leaf=lambda x: isinstance(x, tuple) and all(
+            isinstance(e, (int,)) for e in x))

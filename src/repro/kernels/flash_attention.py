@@ -1,0 +1,137 @@
+"""Blocked flash attention Pallas kernel for the LM substrate.
+
+Targets the TPU MXU with (bq, dh)x(dh, bk) logit tiles and online softmax;
+supports the features the assigned architectures need:
+
+  * causal masking (decoder LMs)
+  * sliding local window (gemma2/gemma3 local layers)
+  * logit soft-capping ``softcap * tanh(logits / softcap)`` (gemma2)
+  * ``q_offset`` for chunked prefill / decode against a longer KV
+
+Grid: (batch*heads, sq/bq, sk/bk) with the KV axis innermost; (m, l, acc)
+accumulators live in VMEM scratch and are carried across KV steps, so each
+(q-block) owns a single running softmax — the standard flash formulation.
+
+Fully-masked KV blocks are *masked*, not skipped, so the kernel stays a
+static grid (interpret-mode friendly); on hardware a causal-block skip via
+``pl.when`` on the block index is a straightforward extension and is noted
+in EXPERIMENTS.md §Perf.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BQ = 128
+DEFAULT_BK = 128
+_NEG_INF = -1e30  # finite sentinel: avoids inf-inf NaNs in online softmax
+
+
+def _fa_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+               scale, causal, window, softcap, q_offset, bq, bk, nkb, kv_len):
+    qi_blk = pl.program_id(1)
+    kv_blk = pl.program_id(2)
+
+    @pl.when(kv_blk == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, _NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q = q_ref[0].astype(jnp.float32)                      # (bq, dh)
+    k = k_ref[0].astype(jnp.float32)                      # (bk, dh)
+    v = v_ref[0].astype(jnp.float32)                      # (bk, dh)
+
+    logits = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32) * scale        # (bq, bk)
+    if softcap > 0.0:
+        logits = softcap * jnp.tanh(logits / softcap)
+
+    qpos = q_offset + qi_blk * bq + jax.lax.broadcasted_iota(
+        jnp.int32, (bq, bk), 0)
+    kpos = kv_blk * bk + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+    mask = kpos < kv_len  # zero-padded KV tail is never attended
+    if causal:
+        mask &= kpos <= qpos
+    if window > 0:
+        mask &= kpos > qpos - window
+    logits = jnp.where(mask, logits, _NEG_INF)
+
+    m_prev = m_ref[...]                                    # (bq, 1)
+    l_prev = l_ref[...]                                    # (bq, 1)
+    m_cur = jnp.max(logits, axis=-1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(logits - m_new)
+    p = jnp.where(mask, p, 0.0)
+    alpha = jnp.exp(m_prev - m_new)                        # <= 1
+    l_new = alpha * l_prev + jnp.sum(p, axis=-1, keepdims=True)
+    pv = jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (bq, dh)
+    acc_ref[...] = acc_ref[...] * alpha + pv
+    m_ref[...] = m_new
+    l_ref[...] = l_new
+
+    @pl.when(kv_blk == nkb - 1)
+    def _finalize():
+        l = l_ref[...]
+        o = acc_ref[...] / jnp.where(l > 0.0, l, 1.0)
+        o_ref[0] = o.astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "softcap", "scale", "q_offset",
+                     "bq", "bk", "kv_len", "interpret"))
+def flash_attention(
+    q: jax.Array,
+    k: jax.Array,
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    softcap: float = 0.0,
+    scale: float | None = None,
+    q_offset: int = 0,
+    bq: int = DEFAULT_BQ,
+    bk: int = DEFAULT_BK,
+    kv_len: int | None = None,
+    interpret: bool = False,
+) -> jax.Array:
+    """(bh, sq, dh), (bh, sk, dh), (bh, sk, dh) -> (bh, sq, dh).
+
+    Batch and (already GQA-repeated) head dims must be flattened into the
+    leading axis.  sq % bq == 0 and sk % bk == 0 (ops.py pads).
+    """
+    bh, sq, dh = q.shape
+    _, sk, _ = k.shape
+    assert sq % bq == 0 and sk % bk == 0, (sq, sk, bq, bk)
+    s = float(scale) if scale is not None else 1.0 / (dh ** 0.5)
+    nkb = sk // bk
+    grid = (bh, sq // bq, nkb)
+    kernel = functools.partial(
+        _fa_kernel, scale=s, causal=causal, window=window, softcap=softcap,
+        q_offset=q_offset, bq=bq, bk=bk, nkb=nkb,
+        kv_len=sk if kv_len is None else kv_len)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, bk, dh), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, dh), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

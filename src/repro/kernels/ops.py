@@ -1,0 +1,100 @@
+"""Public jit'd wrappers around the Pallas kernels.
+
+Dispatch policy:
+  * TPU backend           -> compiled Pallas kernel.
+  * CPU (this container)  -> pure-jnp reference (fast, same semantics), unless
+                             ``REPRO_PALLAS_INTERPRET=1`` forces interpret-mode
+                             Pallas (used by tests to validate the kernels).
+
+All wrappers pad to kernel block alignment and strip padding on the way out,
+so callers never see alignment constraints.
+"""
+from __future__ import annotations
+
+import os
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import flash_attention as _fa
+from repro.kernels import gather_distance as _gd
+from repro.kernels import l2_distance as _l2
+from repro.kernels import ref
+
+
+def _use_pallas() -> bool:
+    return jax.default_backend() == "tpu"
+
+
+def _use_interpret() -> bool:
+    return os.environ.get("REPRO_PALLAS_INTERPRET", "0") == "1"
+
+
+def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
+    n = x.shape[axis]
+    rem = (-n) % mult
+    if rem == 0:
+        return x
+    pad = [(0, 0)] * x.ndim
+    pad[axis] = (0, rem)
+    return jnp.pad(x, pad, constant_values=value)
+
+
+def l2_distance(q: jax.Array, x: jax.Array) -> jax.Array:
+    """Pairwise squared L2: (nq, d), (nx, d) -> (nq, nx) f32."""
+    if not (_use_pallas() or _use_interpret()):
+        return ref.l2_distance_ref(q, x)
+    nq, nx = q.shape[0], x.shape[0]
+    bq = min(_l2.DEFAULT_BQ, max(8, nq))
+    bx = min(_l2.DEFAULT_BX, max(8, nx))
+    qp = _pad_to(_pad_to(q, 0, bq), 1, 128)
+    xp = _pad_to(_pad_to(x, 0, bx), 1, 128)
+    out = _l2.l2_distance(qp, xp, bq=bq, bx=bx, interpret=_use_interpret())
+    return out[:nq, :nx]
+
+
+def gather_distance(u, c, cached=None, mask=None) -> jax.Array:
+    """V_delta-aware gathered distances: see kernels/gather_distance.py."""
+    b, k = c.shape[0], c.shape[1]
+    if cached is None:
+        cached = jnp.zeros((b, k), jnp.float32)
+        mask = jnp.ones((b, k), dtype=bool)
+    if not (_use_pallas() or _use_interpret()):
+        return ref.gather_distance_ref(u, c, cached, mask)
+    bk = min(_gd.DEFAULT_BK, max(8, k))
+    cp = _pad_to(c, 1, bk)
+    cachedp = _pad_to(cached, 1, bk)
+    maskp = _pad_to(mask, 1, bk, value=True)
+    up = _pad_to(u, 1, 128)
+    cp = _pad_to(cp, 2, 128)
+    out = _gd.gather_distance(up, cp, cachedp, maskp, bk=bk,
+                              interpret=_use_interpret())
+    return out[:, :k]
+
+
+def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
+                    scale=None, q_offset=0) -> jax.Array:
+    """(b, h, sq, dh) x (b, h, sk, dh) -> (b, h, sq, dh).
+
+    Heads must already be GQA-repeated to match q's head count.
+    """
+    if not (_use_pallas() or _use_interpret()):
+        if k.shape[2] > 1024:     # memory-bounded path for long sequences
+            return ref.flash_attention_chunked(
+                q, k, v, causal=causal, window=window, softcap=softcap,
+                scale=scale, q_offset=q_offset)
+        return ref.flash_attention_ref(
+            q, k, v, causal=causal, window=window, softcap=softcap,
+            scale=scale, q_offset=q_offset)
+    b, h, sq, dh = q.shape
+    sk = k.shape[2]
+    bq = min(_fa.DEFAULT_BQ, max(8, sq))
+    bk = min(_fa.DEFAULT_BK, max(8, sk))
+    qf = _pad_to(q.reshape(b * h, sq, dh), 1, bq)
+    kf = _pad_to(k.reshape(b * h, sk, dh), 1, bk)
+    vf = _pad_to(v.reshape(b * h, sk, dh), 1, bk)
+    out = _fa.flash_attention(
+        qf, kf, vf, causal=causal, window=window, softcap=softcap,
+        scale=scale, q_offset=q_offset, bq=bq, bk=bk, kv_len=sk,
+        interpret=_use_interpret())
+    return out[:, :sq].reshape(b, h, sq, dh)

@@ -1,0 +1,295 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+"""Multi-pod dry-run: lower + compile every (arch x shape x mesh) cell.
+
+For each cell this builds the production mesh (16x16 single-pod or 2x16x16
+multi-pod), constructs ShapeDtypeStruct stand-ins for the train/serve step
+inputs (no allocation), jits with explicit in/out shardings from the
+logical-axis rules, ``.lower().compile()``s, and records:
+
+  * memory_analysis()        — proves the cell fits per-device HBM,
+  * cost_analysis()          — raw XLA FLOPs/bytes (body-once, see below),
+  * hlo_analysis.analyze()   — trip-count-corrected FLOPs / output bytes /
+                               per-kind collective bytes (§Roofline inputs),
+  * wall-clock trace/compile seconds.
+
+Results append incrementally to results/dryrun/<cell>.json so interrupted
+sweeps resume.  Usage:
+
+  PYTHONPATH=src python -m repro.launch.dryrun [--arch a] [--shape s]
+      [--mesh single|multi|both] [--force] [--list]
+"""
+import argparse
+import dataclasses
+import json
+import time
+import traceback
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import registry
+from repro.configs.base import SHAPES, ArchConfig, ShapeConfig
+from repro.distributed import sharding as shlib
+from repro.launch import hlo_analysis
+from repro.launch.mesh import make_production_mesh, mesh_chips
+from repro.models import model as M
+from repro.train import train_loop
+from repro.train.optimizer import AdamWConfig
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+BATCH_AXES = {
+    "tokens": ("batch", None),
+    "labels": ("batch", None),
+    "enc_input": ("batch", None, "embed"),
+    "patches": ("batch", None, "embed"),
+    "token": ("batch", None),
+    "pos": (),
+    "enc_memory": ("batch", None, "embed"),
+}
+
+ACT_BUDGET_BYTES = 5e9   # per-device residual budget drives microbatching
+
+
+def pick_microbatches(cfg: ArchConfig, shape: ShapeConfig, dp: int) -> int:
+    if shape.kind != "train":
+        return 1
+    bshard = max(1, shape.global_batch // dp)
+    resid_per_seq = cfg.n_layers * shape.seq_len * cfg.d_model * 2  # bf16
+    mb = 1
+    while (bshard // mb > 1 and bshard % mb == 0
+           and (bshard // mb) * resid_per_seq > ACT_BUDGET_BYTES):
+        mb *= 2
+    while bshard % mb:
+        mb //= 2
+    return max(1, mb)
+
+
+def _shardings_for(mesh, shapes_tree, axes_tree, rules=None):
+    return jax.tree_util.tree_map(
+        lambda sds, ax: shlib.named_sharding(mesh, sds.shape, ax, rules),
+        shapes_tree, axes_tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t))
+
+
+def _state_axes(cfg: ArchConfig, step_cfg) -> train_loop.TrainState:
+    pax = M.param_axes(cfg)
+    from repro.train.optimizer import AdamWState
+    ef_ax = pax if step_cfg.grad_compression != "none" else None
+    return train_loop.TrainState(
+        params=pax,
+        opt=AdamWState(step=(), mu=pax, nu=pax),
+        ef=ef_ax, step=())
+
+
+def arch_rules(cfg: ArchConfig, tp: int) -> dict:
+    """Per-arch sharding-rule overrides (§Perf iteration 3).
+
+    Architectures whose head counts don't divide the TP axis (yi/arctic/
+    llava 56H, whisper 12H) switch attention to context parallelism: shard
+    the sequence over 'model' and all-gather KV per layer — this removes
+    the per-chunk logit all-reduces that head_dim-TP caused (29 TB/chip on
+    yi prefill_32k in the v0 baseline).
+    """
+    if cfg.n_heads % tp != 0:
+        return {"heads": None, "kv_heads": None, "head_dim": None,
+                "seq": "model"}
+    return {}
+
+
+def lower_cell(arch: str, shape_name: str, mesh_kind: str,
+               *, grad_compression: str = "none") -> dict:
+    cfg = registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    ok, reason = registry.cell_is_runnable(cfg, shape)
+    if not ok:
+        return {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                "status": "skipped", "reason": reason}
+
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh_chips(mesh)
+    dp = mesh.shape.get("data", 1) * mesh.shape.get("pod", 1)
+    rules = arch_rules(cfg, mesh.shape.get("model", 1))
+    rec: dict = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+                 "chips": chips, "status": "error"}
+    t0 = time.perf_counter()
+    key = jax.random.PRNGKey(0)
+
+    specs = registry.input_specs(cfg, shape)
+    batch_axes = {k: BATCH_AXES[k] for k in specs}
+    batch_sh = _shardings_for(mesh, specs, batch_axes, rules)
+
+    if shape.kind == "train":
+        mb = pick_microbatches(cfg, shape, dp)
+        step_cfg = train_loop.StepConfig(
+            microbatches=mb, compute_dtype="bfloat16", remat=True,
+            grad_compression=grad_compression)
+        opt_cfg = AdamWConfig()
+        state_sds = jax.eval_shape(
+            lambda k: train_loop.init_state(k, cfg, opt_cfg, step_cfg), key)
+        state_ax = _state_axes(cfg, step_cfg)
+        state_sh = _shardings_for(mesh, state_sds, state_ax, rules)
+        step = train_loop.make_train_step(cfg, opt_cfg, step_cfg)
+        rec["microbatches"] = mb
+
+        def run(state, batch):
+            with shlib.activate(mesh, rules):
+                return step(state, batch)
+
+        jitted = jax.jit(run, in_shardings=(state_sh, batch_sh),
+                         out_shardings=(state_sh, None))
+        args = (state_sds, specs)
+    elif shape.kind == "prefill":
+        params_sds = jax.eval_shape(lambda k: M.init_params(k, cfg), key)
+        params_sh = _shardings_for(mesh, params_sds, M.param_axes(cfg),
+                                   rules)
+
+        def run(params, batch):
+            with shlib.activate(mesh, rules):
+                p = train_loop.cast_tree(params, jnp.bfloat16)
+                extras = {k: v for k, v in batch.items() if k != "tokens"}
+                return M.forward(p, cfg, batch["tokens"], extras=extras,
+                                 remat=False)
+
+        jitted = jax.jit(run, in_shardings=(params_sh, batch_sh))
+        args = (params_sds, specs)
+    else:  # decode
+        params_sds = jax.eval_shape(lambda k: M.init_params(k, cfg), key)
+        params_sh = _shardings_for(mesh, params_sds, M.param_axes(cfg),
+                                   rules)
+        cache_sds = jax.eval_shape(
+            lambda p: M.init_cache(p, cfg, shape.global_batch, shape.seq_len,
+                                   kv_dtype=jnp.bfloat16), params_sds)
+        cax = M.cache_axes(cfg)
+        cache_ax = {k: dict(cax[k]) for k in cache_sds}
+        cache_sh = _shardings_for(mesh, cache_sds, cache_ax, rules)
+        tok_sh = {k: v for k, v in batch_sh.items()}
+
+        def run(params, cache, batch):
+            with shlib.activate(mesh, rules):
+                p = train_loop.cast_tree(params, jnp.bfloat16)
+                extras = {k: v for k, v in batch.items()
+                          if k not in ("token", "pos")}
+                return M.decode_step(p, cfg, batch["token"], cache,
+                                     batch["pos"], extras=extras)
+
+        jitted = jax.jit(run, in_shardings=(params_sh, cache_sh, tok_sh),
+                         out_shardings=(None, cache_sh))
+        args = (params_sds, cache_sds, specs)
+
+    lowered = jitted.lower(*args)
+    t1 = time.perf_counter()
+    compiled = lowered.compile()
+    t2 = time.perf_counter()
+
+    try:
+        ma = compiled.memory_analysis()
+        rec["memory"] = {
+            "argument_bytes": int(ma.argument_size_in_bytes),
+            "output_bytes": int(ma.output_size_in_bytes),
+            "temp_bytes": int(ma.temp_size_in_bytes),
+            "alias_bytes": int(ma.alias_size_in_bytes),
+            "peak_bytes_per_device": int(
+                ma.argument_size_in_bytes + ma.output_size_in_bytes
+                + ma.temp_size_in_bytes - ma.alias_size_in_bytes),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["memory"] = {"error": str(e)}
+    try:
+        ca = compiled.cost_analysis()
+        rec["cost_analysis"] = {
+            "flops": float(ca.get("flops", 0.0)),
+            "bytes_accessed": float(ca.get("bytes accessed", 0.0)),
+        }
+    except Exception as e:  # pragma: no cover
+        rec["cost_analysis"] = {"error": str(e)}
+
+    mc = hlo_analysis.analyze(compiled.as_text())
+    rec["hlo"] = {
+        "flops_per_chip": mc.flops,
+        "out_bytes_per_chip": mc.out_bytes,
+        "collective_bytes": {k: float(v) for k, v in mc.coll_bytes.items()},
+        "collective_bytes_effective":
+            hlo_analysis.effective_collective_bytes(mc.coll_bytes),
+        "trip_counts": mc.trip_counts,
+    }
+    rec["seconds"] = {"trace_lower": round(t1 - t0, 2),
+                      "compile": round(t2 - t1, 2)}
+    rec["status"] = "ok"
+    return rec
+
+
+def cell_path(arch, shape_name, mesh_kind):
+    os.makedirs(RESULTS_DIR, exist_ok=True)
+    return os.path.join(RESULTS_DIR,
+                        f"{arch}__{shape_name}__{mesh_kind}.json")
+
+
+def run_cell(arch, shape_name, mesh_kind, force=False) -> dict:
+    path = cell_path(arch, shape_name, mesh_kind)
+    if os.path.exists(path) and not force:
+        with open(path) as f:
+            return json.load(f)
+    try:
+        rec = lower_cell(arch, shape_name, mesh_kind)
+    except Exception as e:
+        rec = {"arch": arch, "shape": shape_name, "mesh": mesh_kind,
+               "status": "error", "error": f"{type(e).__name__}: {e}",
+               "trace": traceback.format_exc()[-2000:]}
+    with open(path, "w") as f:
+        json.dump(rec, f, indent=1)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--mesh", default="both",
+                    choices=["single", "multi", "both"])
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--list", action="store_true")
+    args = ap.parse_args()
+
+    archs = [args.arch] if args.arch else registry.ARCH_IDS
+    shapes = [args.shape] if args.shape else list(SHAPES)
+    meshes = (["single", "multi"] if args.mesh == "both" else [args.mesh])
+
+    if args.list:
+        for a in archs:
+            for s in shapes:
+                ok, why = registry.cell_is_runnable(
+                    registry.get_config(a), SHAPES[s])
+                print(f"{a:18s} {s:12s} {'RUN' if ok else 'SKIP: ' + why}")
+        return
+
+    n_ok = n_err = n_skip = 0
+    for a in archs:
+        for s in shapes:
+            for mk in meshes:
+                rec = run_cell(a, s, mk, force=args.force)
+                tag = rec["status"]
+                if tag == "ok":
+                    n_ok += 1
+                    h = rec["hlo"]
+                    print(f"OK   {a:18s} {s:12s} {mk:6s} "
+                          f"flops/chip={h['flops_per_chip']:.3e} "
+                          f"coll={h['collective_bytes_effective']:.3e}B "
+                          f"peak={rec['memory'].get('peak_bytes_per_device', 0)/1e9:.2f}GB "
+                          f"compile={rec['seconds']['compile']:.0f}s")
+                elif tag == "skipped":
+                    n_skip += 1
+                    print(f"SKIP {a:18s} {s:12s} {mk:6s} {rec['reason']}")
+                else:
+                    n_err += 1
+                    print(f"ERR  {a:18s} {s:12s} {mk:6s} "
+                          f"{rec.get('error', '?')}")
+    print(f"\ndone: {n_ok} ok, {n_skip} skipped, {n_err} errors")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,226 @@
+"""HLO text analysis: trip-count-corrected FLOPs, bytes, collective bytes.
+
+XLA's ``cost_analysis`` counts a while-loop body once (verified on this
+backend — see EXPERIMENTS.md §Dry-run), so layer-scanned models undercount
+by ~n_layers.  This analyzer parses ``compiled.as_text()``:
+
+  * splits the module into computations,
+  * per computation counts dot FLOPs (2 * prod(out) * contracted), op
+    output bytes (write-traffic proxy), and collective result bytes by kind,
+  * resolves ``calls=`` / ``body=`` / ``condition=`` edges,
+  * extracts while trip counts from the loop condition's compare constant,
+  * rolls everything up from ENTRY with body costs multiplied by trips.
+
+Shapes in the partitioned module are per-device, so totals are per-chip —
+exactly what the roofline terms need.
+"""
+from __future__ import annotations
+
+import dataclasses
+import re
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "bf16": 2, "f16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "c64": 8, "c128": 16, "token": 0,
+    "s4": 1, "u4": 1,
+}
+
+COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+               "collective-permute")
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([\d,]*)\]")
+_CALLS_RE = re.compile(r"calls=%?([\w\.\-]+)")
+_BODY_RE = re.compile(r"body=%?([\w\.\-]+)")
+_COND_RE = re.compile(r"condition=%?([\w\.\-]+)")
+_CONST_RE = re.compile(r"=\s*s32\[\]\s*constant\((\d+)\)")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w\.\-]+)\s*=\s*([a-z0-9]+\[[\d,]*\])")
+_OPERANDS_RE = re.compile(r"%([\w\.\-]+)")
+
+
+def _shape_numel_bytes(text: str) -> tuple[int, int]:
+    """(numel, bytes) of the first shape literal in ``text``."""
+    m = _SHAPE_RE.search(text)
+    if not m:
+        return 0, 0
+    dt, dims = m.group(1), m.group(2)
+    numel = 1
+    if dims:
+        for d in dims.split(","):
+            numel *= int(d)
+    return numel, numel * _DTYPE_BYTES.get(dt, 4)
+
+
+def _all_shapes(text: str) -> list[tuple[str, list[int]]]:
+    out = []
+    for m in _SHAPE_RE.finditer(text):
+        dims = [int(d) for d in m.group(2).split(",")] if m.group(2) else []
+        out.append((m.group(1), dims))
+    return out
+
+
+@dataclasses.dataclass
+class CompCost:
+    flops: float = 0.0
+    out_bytes: float = 0.0      # top-level materializing ops only
+    coll_bytes: dict = dataclasses.field(default_factory=dict)
+    calls: list = dataclasses.field(default_factory=list)      # fusions etc.
+    whiles: list = dataclasses.field(default_factory=list)     # (body, cond)
+    max_const: int = 1
+
+
+# ops whose "output" is free (no HBM write): bookkeeping / aliasing
+_FREE_OPS = ("get-tuple-element", "bitcast", "parameter", "constant(",
+             "tuple(", "after-all", "reshape(", "copy-done", "copy-start")
+
+
+def _dot_flops(line: str, symtab: dict[str, list[int]]) -> float:
+    """2 * prod(output) * prod(contracted lhs dims).
+
+    Compiled HLO omits operand types; the lhs shape comes from the
+    computation-local symbol table of result shapes.
+    """
+    lhs_c = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", line)
+    shapes = _all_shapes(line)
+    if not shapes:
+        return 0.0
+    out_dims = shapes[0][1]
+    numel_out = 1
+    for d in out_dims:
+        numel_out *= d
+    contract = 1
+    m = re.search(r"\bdot\(([^)]*)\)", line)
+    if lhs_c and m:
+        opnames = _OPERANDS_RE.findall(m.group(1))
+        if opnames and opnames[0] in symtab:
+            lhs_dims = symtab[opnames[0]]
+            idxs = (lhs_c.group(1).split(",") if lhs_c.group(1) else [])
+            for idx in idxs:
+                i = int(idx)
+                if i < len(lhs_dims):
+                    contract *= lhs_dims[i]
+    return 2.0 * numel_out * contract
+
+
+def _split_computations(text: str) -> tuple[list[tuple[str, list[str]]], str]:
+    """[(name, body lines)], entry_name."""
+    comps: list[tuple[str, list[str]]] = []
+    entry_name = ""
+    cur_name, cur_lines = None, []
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        s = line.strip()
+        if line.endswith("{") and (s.startswith("%") or s.startswith("ENTRY")):
+            is_entry = s.startswith("ENTRY")
+            name = s.split()[1] if is_entry else s.split()[0]
+            name = name.lstrip("%").split("(")[0].strip()
+            if is_entry:
+                entry_name = name
+            cur_name, cur_lines = name, []
+            continue
+        if s == "}":
+            if cur_name is not None:
+                comps.append((cur_name, cur_lines))
+            cur_name, cur_lines = None, []
+            continue
+        if cur_name is not None:
+            cur_lines.append(s)
+    return comps, entry_name
+
+
+def parse_module(text: str) -> dict[str, CompCost]:
+    comps: dict[str, CompCost] = {}
+    blocks, entry_name = _split_computations(text)
+    for name, lines in blocks:
+        cur = comps.setdefault(name, CompCost())
+        symtab: dict[str, list[int]] = {}
+        for line in lines:
+            dm = _DEF_RE.match(line)
+            if dm:
+                symtab[dm.group(1)] = _all_shapes(dm.group(2))[0][1]
+        for line in lines:
+            if " dot(" in line:
+                cur.flops += _dot_flops(line, symtab)
+            cm = _CONST_RE.search(line)
+            if cm:
+                cur.max_const = max(cur.max_const, int(cm.group(1)))
+            matched_coll = False
+            for kind in COLLECTIVES:
+                if f" {kind}(" in line or f"={kind}(" in line:
+                    _, b = _shape_numel_bytes(line.split("=", 1)[-1])
+                    cur.coll_bytes[kind] = cur.coll_bytes.get(kind, 0) + b
+                    matched_coll = True
+                    break
+            del matched_coll
+            if ("=" in line and "[" in line
+                    and not any(f in line for f in _FREE_OPS)):
+                _, b = _shape_numel_bytes(line.split("=", 1)[-1])
+                cur.out_bytes += b
+            bm = _BODY_RE.search(line)
+            if bm:
+                cm2 = _COND_RE.search(line)
+                cur.whiles.append((bm.group(1),
+                                   cm2.group(1) if cm2 else None))
+            for cname in _CALLS_RE.findall(line):
+                cur.calls.append(cname)
+    comps["__entry__"] = comps.get(entry_name, CompCost())
+    return comps
+
+
+@dataclasses.dataclass
+class ModuleCost:
+    flops: float
+    out_bytes: float
+    coll_bytes: dict
+    trip_counts: dict
+
+
+def rollup(comps: dict, root: str = "__entry__") -> ModuleCost:
+    trip_counts: dict[str, int] = {}
+    memo: dict[str, tuple] = {}
+
+    def visit(name: str, stack=()) -> tuple:
+        if name in memo:
+            return memo[name]
+        if name in stack or name not in comps or name == "__entry_name__":
+            return (0.0, 0.0, {})
+        c = comps[name]
+        if not isinstance(c, CompCost):
+            return (0.0, 0.0, {})
+        fl, ob = c.flops, c.out_bytes
+        cb = dict(c.coll_bytes)
+        for callee in c.calls:
+            # FLOPs live inside fusions; fusion-internal outputs stay in
+            # registers/VMEM and do NOT count as HBM traffic (the fusion
+            # op's own output was already counted at this level).
+            f2, _b2, c2 = visit(callee, stack + (name,))
+            fl += f2
+            for k, v in c2.items():
+                cb[k] = cb.get(k, 0) + v
+        for body, cond in c.whiles:
+            trips = 1
+            if cond and cond in comps and isinstance(comps[cond], CompCost):
+                trips = max(1, comps[cond].max_const)
+            trip_counts[body] = trips
+            f2, b2, c2 = visit(body, stack + (name,))
+            fl += f2 * trips
+            ob += b2 * trips
+            for k, v in c2.items():
+                cb[k] = cb.get(k, 0) + v * trips
+        memo[name] = (fl, ob, cb)
+        return memo[name]
+
+    fl, ob, cb = visit(root)
+    return ModuleCost(flops=fl, out_bytes=ob, coll_bytes=cb,
+                      trip_counts=trip_counts)
+
+
+def analyze(text: str) -> ModuleCost:
+    return rollup(parse_module(text))
+
+
+def effective_collective_bytes(coll_bytes: dict) -> float:
+    """Ring-algorithm wire-bytes factors per collective kind."""
+    factors = {"all-reduce": 2.0, "all-gather": 1.0, "reduce-scatter": 1.0,
+               "all-to-all": 1.0, "collective-permute": 1.0}
+    return sum(v * factors.get(k, 1.0) for k, v in coll_bytes.items())

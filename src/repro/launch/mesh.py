@@ -1,0 +1,32 @@
+"""Production mesh construction (spec-mandated API).
+
+Defined as functions — importing this module never touches jax device
+state.  Single pod: (16, 16) = 256 chips, axes (data, model).  Multi-pod:
+(2, 16, 16) = 512 chips, axes (pod, data, model); the pod axis carries
+data parallelism with gradient compression across the slower inter-pod
+links (train/compression.py).
+"""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_debug_mesh(devices=None):
+    """1x1 mesh over the local device — smoke tests / examples."""
+    import numpy as np
+    devices = devices if devices is not None else jax.devices()[:1]
+    return jax.sharding.Mesh(
+        np.array(devices).reshape(1, 1), ("data", "model"))
+
+
+def mesh_chips(mesh) -> int:
+    n = 1
+    for s in mesh.shape.values():
+        n *= s
+    return n

@@ -1,0 +1,148 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline deliverable).
+
+Per (arch x shape x mesh) cell, from results/dryrun/*.json:
+
+  compute term    = FLOPs_per_chip / peak_FLOPs        (197 TFLOP/s bf16)
+  memory term     = bytes_per_chip / HBM_bw            (819 GB/s)
+  collective term = wire_bytes_per_chip / link_bw      (~50 GB/s/link ICI)
+
+FLOPs/bytes are the trip-count-corrected per-chip numbers from
+hlo_analysis (XLA's cost_analysis counts scan bodies once — both raw and
+corrected are recorded).  The dominant term is the bottleneck; MODEL_FLOPS
+uses 6*N*D (dense) / 6*N_active*D (MoE) and the ratio MODEL/HLO exposes
+remat & overhead waste.  Output: markdown table + per-cell JSON, consumed
+by EXPERIMENTS.md.
+
+Usage: PYTHONPATH=src python -m repro.launch.roofline [--out file.md]
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+
+from repro.configs import registry
+from repro.configs.base import SHAPES
+
+# TPU v5e-class hardware constants (per chip)
+PEAK_FLOPS = 197e12          # bf16
+HBM_BW = 819e9               # bytes/s
+ICI_BW = 50e9                # bytes/s/link (effective, per direction)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__), "..", "..", "..",
+                           "results", "dryrun")
+
+
+def model_flops(arch: str, shape_name: str) -> float:
+    """6*N*D convention (D = tokens processed; decode: 1 token/seq)."""
+    cfg = registry.get_config(arch)
+    shape = SHAPES[shape_name]
+    n_active = cfg.active_params_per_token()
+    if shape.kind == "train":
+        tokens = shape.global_batch * shape.seq_len
+        return 6.0 * n_active * tokens
+    if shape.kind == "prefill":
+        tokens = shape.global_batch * shape.seq_len
+        return 2.0 * n_active * tokens            # forward only
+    tokens = shape.global_batch                    # one new token per seq
+    return 2.0 * n_active * tokens
+
+
+def analyze_cell(rec: dict) -> dict | None:
+    if rec.get("status") != "ok":
+        return None
+    chips = rec["chips"]
+    h = rec["hlo"]
+    flops_chip = h["flops_per_chip"]
+    # HBM traffic ≈ top-level op writes + one read of every argument
+    # (weights/optimizer state) per step — both per-device quantities.
+    arg_bytes = rec.get("memory", {}).get("argument_bytes", 0)
+    bytes_chip = h["out_bytes_per_chip"] + arg_bytes
+    coll_chip = h["collective_bytes_effective"]
+    t_comp = flops_chip / PEAK_FLOPS
+    t_mem = bytes_chip / HBM_BW
+    t_coll = coll_chip / ICI_BW
+    terms = {"compute": t_comp, "memory": t_mem, "collective": t_coll}
+    dominant = max(terms, key=terms.get)
+    mf = model_flops(rec["arch"], rec["shape"])
+    mf_chip = mf / chips
+    total = max(t_comp, t_mem, t_coll)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "t_compute_s": t_comp, "t_memory_s": t_mem, "t_collective_s": t_coll,
+        "dominant": dominant,
+        "model_flops_total": mf,
+        "model_flops_per_chip": mf_chip,
+        "hlo_flops_per_chip": flops_chip,
+        "useful_flop_ratio": (mf_chip / flops_chip) if flops_chip else 0.0,
+        "roofline_fraction": (mf_chip / PEAK_FLOPS) / total if total else 0.0,
+        "step_time_bound_s": total,
+        "peak_gb": rec.get("memory", {}).get("peak_bytes_per_device", 0)/1e9,
+        "raw_cost_analysis": rec.get("cost_analysis", {}),
+        "microbatches": rec.get("microbatches"),
+    }
+
+
+def suggestion(row: dict) -> str:
+    d = row["dominant"]
+    if d == "compute":
+        if row["useful_flop_ratio"] < 0.5:
+            return ("compute-bound with low useful-FLOP ratio: cut remat "
+                    "recompute / quadratic-mixer overhead")
+        return "compute-bound near useful peak: increase arithmetic intensity"
+    if d == "memory":
+        return ("memory-bound: fuse elementwise chains, cast caches/params "
+                "to bf16, raise per-step tokens per weight read")
+    return ("collective-bound: reshard to cut all-gathers (FSDP->TP swap), "
+            "overlap collectives with compute, compress cross-pod grads")
+
+
+def load_cells() -> list[dict]:
+    rows = []
+    for path in sorted(glob.glob(os.path.join(RESULTS_DIR, "*.json"))):
+        with open(path) as f:
+            rec = json.load(f)
+        row = analyze_cell(rec)
+        if row:
+            rows.append(row)
+    return rows
+
+
+def to_markdown(rows: list[dict]) -> str:
+    hdr = ("| arch | shape | mesh | compute s | memory s | coll s | "
+           "bound | useful | roofline frac | peak GB |\n"
+           "|---|---|---|---|---|---|---|---|---|---|\n")
+    lines = []
+    for r in rows:
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['mesh']} "
+            f"| {r['t_compute_s']:.2e} | {r['t_memory_s']:.2e} "
+            f"| {r['t_collective_s']:.2e} | **{r['dominant']}** "
+            f"| {r['useful_flop_ratio']:.2f} "
+            f"| {r['roofline_fraction']:.2%} | {r['peak_gb']:.1f} |")
+    return hdr + "\n".join(lines) + "\n"
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default=None)
+    ap.add_argument("--json", default=None)
+    args = ap.parse_args()
+    rows = load_cells()
+    md = to_markdown(rows)
+    print(md)
+    for r in rows:
+        print(f"{r['arch']:18s} {r['shape']:12s} {r['mesh']:6s} -> "
+              f"{r['dominant']}: {suggestion(r)}")
+    if args.out:
+        with open(args.out, "w") as f:
+            f.write(md)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump(rows, f, indent=1)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,216 @@
+"""Core transformer layers: norms, RoPE, GQA attention, MLPs, embeddings.
+
+Pure-JAX parameter pytrees (nested dicts).  Every init_* has a matching
+*_axes sibling returning the logical-axis names used by the sharding rules
+(tests assert the trees stay congruent).  Computation uses bf16-friendly
+patterns with f32 accumulation where it matters.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.kernels import ops
+
+
+def _init(key, shape, scale=None, dtype=jnp.float32):
+    fan_in = shape[0] if len(shape) > 1 else 1
+    scale = scale if scale is not None else (1.0 / max(fan_in, 1)) ** 0.5
+    return jax.random.normal(key, shape, dtype) * scale
+
+
+# ----------------------------------------------------------------- norms ---
+def init_rmsnorm(d):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rmsnorm_axes():
+    return {"scale": ("embed",)}
+
+
+def rmsnorm(p, x, eps=1e-6):
+    x32 = x.astype(jnp.float32)
+    var = jnp.mean(x32 * x32, axis=-1, keepdims=True)
+    y = x32 * jax.lax.rsqrt(var + eps)
+    return (y * (1.0 + p["scale"] if p.get("_gemma", False) else p["scale"])
+            ).astype(x.dtype)
+
+
+# ------------------------------------------------------------------ rope ---
+def rope(x: jax.Array, pos: jax.Array, theta: float = 1e4) -> jax.Array:
+    """x: (B, S, H, dh); pos: (B, S) absolute positions."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = theta ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = pos[..., None].astype(jnp.float32) * freqs       # (B, S, half)
+    cos = jnp.cos(ang)[:, :, None, :]
+    sin = jnp.sin(ang)[:, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate(
+        [x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1).astype(x.dtype)
+
+
+# ------------------------------------------------------------- attention ---
+def init_attention(key, d, n_heads, n_kv, d_head, cross=False):
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": _init(ks[0], (d, n_heads, d_head)),
+        "wk": _init(ks[1], (d, n_kv, d_head)),
+        "wv": _init(ks[2], (d, n_kv, d_head)),
+        "wo": _init(ks[3], (n_heads, d_head, d), scale=(1.0 / (n_heads * d_head)) ** 0.5),
+    }
+    return p
+
+
+def attention_axes():
+    # kv projections REPLICATE over TP ("kv_head_dim" -> None): GQA kv-head
+    # counts (8, 4, 12) don't divide the 16-way TP axis, and letting the
+    # head_dim fallback shard them makes the attention einsum contract over
+    # a sharded dim -> f32 logit all-reduces inside the flash region for
+    # every GQA arch (EXPERIMENTS.md §Perf iteration 8).  kv weights are
+    # tiny (granite: 8 MB bf16), so replication is free.
+    return {
+        "wq": ("mlp_in", "heads", "head_dim"),
+        "wk": ("mlp_in", "kv_heads", "kv_head_dim"),
+        "wv": ("mlp_in", "kv_heads", "kv_head_dim"),
+        "wo": ("heads", "head_dim", "mlp_in"),
+    }
+
+
+def _repeat_kv(k: jax.Array, n_heads: int) -> jax.Array:
+    n_kv = k.shape[2]
+    if n_kv == n_heads:
+        return k
+    return jnp.repeat(k, n_heads // n_kv, axis=2)
+
+
+def attention_train(p, x, *, n_heads, n_kv, d_head, causal=True, window=0,
+                    softcap=0.0, rope_theta=1e4, pos0=0, memory=None):
+    """Full-sequence attention (train / prefill).
+
+    memory: optional (B, S_kv, d) encoder output for cross-attention
+    (whisper decoder); cross-attention is non-causal over memory.
+    """
+    b, s, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    src = memory if memory is not None else x
+    k = jnp.einsum("bsd,dhk->bshk", src, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", src, p["wv"])
+    if memory is None:
+        pos = pos0 + jnp.arange(s)[None, :]
+        q = rope(q, jnp.broadcast_to(pos, (b, s)), rope_theta)
+        kpos = jnp.arange(k.shape[1])[None, :]
+        k = rope(k, jnp.broadcast_to(kpos, (b, k.shape[1])), rope_theta)
+    q = constrain(q, "batch", "seq", "heads", "head_dim")
+    k = _repeat_kv(k, n_heads)
+    v = _repeat_kv(v, n_heads)
+    # keep KV seq-complete: under context-parallel sharding (seq -> model)
+    # this is the per-layer KV all-gather; under head-TP it is a no-op
+    k = constrain(k, "batch", "kv_seq_full", "heads", "head_dim")
+    v = constrain(v, "batch", "kv_seq_full", "heads", "head_dim")
+    out = ops.flash_attention(
+        jnp.transpose(q, (0, 2, 1, 3)), jnp.transpose(k, (0, 2, 1, 3)),
+        jnp.transpose(v, (0, 2, 1, 3)),
+        causal=causal and memory is None, window=window, softcap=softcap,
+        q_offset=pos0)
+    out = jnp.transpose(out, (0, 2, 1, 3))                  # (B, S, H, dh)
+    return jnp.einsum("bshk,hkd->bsd", out, p["wo"])
+
+
+def attention_decode(p, x1, cache_k, cache_v, pos, *, n_heads, n_kv, d_head,
+                     window=0, softcap=0.0, rope_theta=1e4, memory=None):
+    """One-token decode against a KV cache.
+
+    x1: (B, 1, d); cache_k/v: (B, S_max, n_kv, dh); pos: () current index.
+    Returns (y (B, 1, d), cache_k, cache_v).
+    """
+    b = x1.shape[0]
+    q = jnp.einsum("bsd,dhk->bshk", x1, p["wq"])
+    if memory is None:
+        posb = jnp.broadcast_to(pos[None, None], (b, 1))
+        q = rope(q, posb, rope_theta)
+        k1 = jnp.einsum("bsd,dhk->bshk", x1, p["wk"])
+        v1 = jnp.einsum("bsd,dhk->bshk", x1, p["wv"])
+        k1 = rope(k1, posb, rope_theta)
+        cache_k = jax.lax.dynamic_update_slice_in_dim(
+            cache_k, k1.astype(cache_k.dtype), pos, 1)
+        cache_v = jax.lax.dynamic_update_slice_in_dim(
+            cache_v, v1.astype(cache_v.dtype), pos, 1)
+        keys, vals = cache_k, cache_v
+        s_kv = keys.shape[1]
+        kpos = jnp.arange(s_kv)
+        mask = kpos <= pos
+        if window > 0:
+            mask &= kpos > pos - window
+    else:
+        keys = jnp.einsum("bsd,dhk->bshk", memory, p["wk"])
+        vals = jnp.einsum("bsd,dhk->bshk", memory, p["wv"])
+        mask = jnp.ones((keys.shape[1],), bool)
+    keys = constrain(keys, "batch", "kv_seq", "kv_heads", "head_dim")
+    vals = constrain(vals, "batch", "kv_seq", "kv_heads", "head_dim")
+    kk = _repeat_kv(keys, n_heads)
+    vv = _repeat_kv(vals, n_heads)
+    logits = jnp.einsum("bqhk,bshk->bhqs", q.astype(jnp.float32),
+                        kk.astype(jnp.float32)) / (d_head ** 0.5)
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    logits = jnp.where(mask[None, None, None, :], logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    out = jnp.einsum("bhqs,bshk->bqhk", w, vv.astype(jnp.float32))
+    y = jnp.einsum("bshk,hkd->bsd", out.astype(x1.dtype), p["wo"])
+    return y, cache_k, cache_v
+
+
+# -------------------------------------------------------------------- mlp ---
+def init_mlp(key, d, d_ff, act="swiglu"):
+    ks = jax.random.split(key, 3)
+    if act == "swiglu":
+        return {"wi": _init(ks[0], (d, d_ff)), "wg": _init(ks[1], (d, d_ff)),
+                "wo": _init(ks[2], (d_ff, d))}
+    return {"wi": _init(ks[0], (d, d_ff)), "wo": _init(ks[2], (d_ff, d))}
+
+
+def mlp_axes(act="swiglu"):
+    ax = {"wi": ("mlp_in", "mlp"), "wo": ("mlp", "mlp_in")}
+    if act == "swiglu":
+        ax["wg"] = ("mlp_in", "mlp")
+    return ax
+
+
+def mlp(p, x, act="swiglu"):
+    h = x @ p["wi"]
+    if act == "swiglu":
+        h = jax.nn.silu(h) * (x @ p["wg"])
+    else:
+        h = jax.nn.gelu(h)
+    names = ("batch", "seq", "mlp") if h.ndim == 3 else ("batch", "mlp")
+    h = constrain(h, *names)
+    return h @ p["wo"]
+
+
+# ------------------------------------------------------------- embedding ---
+def init_embed(key, vocab, d, tie=True):
+    p = {"emb": _init(key, (vocab, d), scale=1.0)}
+    if not tie:
+        p["head"] = _init(jax.random.fold_in(key, 1), (d, vocab))
+    return p
+
+
+def embed_axes(tie=True):
+    ax = {"emb": ("vocab", "embed")}
+    if not tie:
+        ax["head"] = ("embed", "vocab")
+    return ax
+
+
+def embed(p, tokens):
+    return constrain(p["emb"][tokens], "batch", "seq", "embed")
+
+
+def unembed(p, x, softcap=0.0):
+    w = p.get("head")
+    logits = x @ w if w is not None else x @ p["emb"].T
+    if softcap > 0:
+        logits = softcap * jnp.tanh(logits / softcap)
+    return constrain(logits, "batch", "seq", "vocab")

@@ -1,0 +1,129 @@
+"""Mamba selective-SSM block (jamba's recurrent layer).
+
+Chunked selective scan: the sequence is split into chunks; within a chunk
+the linear recurrence h_t = Abar_t h_{t-1} + Bbar_t x_t runs as an
+associative scan (parallel prefix, TPU-friendly), and a lax.scan carries the
+(B, d_inner, d_state) state across chunks — O(S) FLOPs, chunk-bounded
+memory.  Decode is the exact single-step recurrence with a carried state
+and a rolling conv window.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import _init
+
+CONV_K = 4
+CHUNK = 128
+
+
+def init_mamba(key, d, *, expand=2, d_state=16, dt_rank=None):
+    di = expand * d
+    dt_rank = dt_rank or max(1, d // 16)
+    ks = jax.random.split(key, 7)
+    return {
+        "in_proj": _init(ks[0], (d, 2 * di)),
+        "conv_w": _init(ks[1], (CONV_K, di), scale=0.5),
+        "conv_b": jnp.zeros((di,)),
+        "x_proj": _init(ks[2], (di, dt_rank + 2 * d_state)),
+        "dt_proj": _init(ks[3], (dt_rank, di)),
+        "dt_bias": jnp.full((di,), -4.6),                 # softplus^-1(0.01)
+        "A_log": jnp.log(jnp.tile(jnp.arange(1., d_state + 1.), (di, 1))),
+        "D": jnp.ones((di,)),
+        "out_proj": _init(ks[4], (di, d)),
+    }
+
+
+def mamba_axes():
+    return {
+        "in_proj": ("mlp_in", "mlp"), "conv_w": ("conv", "mlp"),
+        "conv_b": ("mlp",), "x_proj": ("mlp", None), "dt_proj": (None, "mlp"),
+        "dt_bias": ("mlp",), "A_log": ("mlp", "state"), "D": ("mlp",),
+        "out_proj": ("mlp", "mlp_in"),
+    }
+
+
+def _ssm_inputs(p, xc, d_state):
+    """Common discretization: returns (abar, bx, c) for scan steps."""
+    dt_rank = p["dt_proj"].shape[0]
+    xdb = xc @ p["x_proj"]                                  # (..., r+2s)
+    dt = jax.nn.softplus(xdb[..., :dt_rank] @ p["dt_proj"] + p["dt_bias"])
+    bmat = xdb[..., dt_rank:dt_rank + d_state]              # (..., s)
+    cmat = xdb[..., dt_rank + d_state:]                     # (..., s)
+    a = -jnp.exp(p["A_log"])                                # (di, s)
+    abar = jnp.exp(dt[..., None] * a)                       # (..., di, s)
+    bx = (dt * xc)[..., None] * bmat[..., None, :]          # (..., di, s)
+    return abar, bx, cmat
+
+
+def _chunk_scan(carry, abar, bx):
+    """Associative scan within a chunk given incoming state ``carry``."""
+    def op(l, r):
+        al, bl = l
+        ar, br = r
+        return al * ar, bl * ar + br
+    a_acc, h = jax.lax.associative_scan(op, (abar, bx), axis=1)
+    h = h + a_acc * carry[:, None]                          # inject carry
+    return h, h[:, -1]
+
+
+def mamba_forward(p, x, *, d_state=16):
+    """x: (B, S, d) -> (B, S, d).  Tail-pads S to a chunk multiple."""
+    b, s, d = x.shape
+    di = p["in_proj"].shape[1] // 2
+    xz = x @ p["in_proj"]
+    xin, z = xz[..., :di], xz[..., di:]
+    xin = constrain(xin, "batch", "seq", "mlp")
+
+    # causal depthwise conv (width CONV_K)
+    pad = jnp.pad(xin, ((0, 0), (CONV_K - 1, 0), (0, 0)))
+    xc = sum(pad[:, i:i + s] * p["conv_w"][i] for i in range(CONV_K))
+    xc = jax.nn.silu(xc + p["conv_b"])
+
+    chunk = min(CHUNK, s)
+    s_pad = -(-s // chunk) * chunk
+    if s_pad != s:
+        xc = jnp.pad(xc, ((0, 0), (0, s_pad - s), (0, 0)))
+    nchunk = s_pad // chunk
+    xcc = xc.reshape(b, nchunk, chunk, di)
+
+    def step(carry, xck):
+        abar, bx, cmat = _ssm_inputs(p, xck, d_state)       # (B,W,di,s)
+        h, new_carry = _chunk_scan(carry, abar, bx)
+        y = jnp.einsum("bwds,bws->bwd", h, cmat)
+        return new_carry, y
+
+    carry0 = jnp.zeros((b, di, d_state), x.dtype)
+    _, ys = jax.lax.scan(step, carry0, jnp.moveaxis(xcc, 1, 0))
+    y = jnp.moveaxis(ys, 0, 1).reshape(b, s_pad, di)[:, :s]
+    y = y + xc[:, :s] * p["D"]
+    y = y * jax.nn.silu(z)
+    return y @ p["out_proj"]
+
+
+def init_mamba_cache(p, batch):
+    di = p["in_proj"].shape[1] // 2
+    d_state = p["A_log"].shape[1]
+    return {
+        "h": jnp.zeros((batch, di, d_state), jnp.float32),
+        "conv": jnp.zeros((batch, CONV_K - 1, di), jnp.float32),
+    }
+
+
+def mamba_decode_step(p, x1, cache, *, d_state=16):
+    """x1: (B, 1, d); exact single-step recurrence."""
+    b = x1.shape[0]
+    di = p["in_proj"].shape[1] // 2
+    xz = x1[:, 0] @ p["in_proj"]
+    xin, z = xz[..., :di], xz[..., di:]
+    window = jnp.concatenate([cache["conv"], xin[:, None]], axis=1)
+    xc = jnp.einsum("bkd,kd->bd", window, p["conv_w"])
+    xc = jax.nn.silu(xc + p["conv_b"])
+    abar, bx, cmat = _ssm_inputs(p, xc, d_state)            # (B,di,s)
+    h = abar * cache["h"] + bx
+    y = jnp.einsum("bds,bs->bd", h, cmat) + xc * p["D"]
+    y = y * jax.nn.silu(z)
+    out = (y @ p["out_proj"])[:, None]
+    return out, {"h": h, "conv": window[:, 1:]}

@@ -1,0 +1,391 @@
+"""Model assembly: config -> init / train-forward / prefill / decode.
+
+Layers stack as ``lax.scan`` over *period groups*: the repeating pattern
+(gemma local:global, jamba attn:mamba 1:7, xlstm mLSTM:sLSTM 7:1, MoE
+interleave) defines a group of heterogeneous sublayers; groups are
+homogeneous so parameters stack to (n_groups, ...) leaves and the HLO stays
+layer-count-independent (compile time and cost-analysis sanity at 60-layer
+scale).  ``jax.checkpoint`` wraps the group body (remat).
+
+The uniform API (used by train/serve/launch):
+  init(key) -> params
+  forward(params, batch) -> logits            # train/prefill path
+  init_cache(batch_size, max_seq) -> cache
+  prefill(params, tokens, cache, extras) -> (logits, cache)
+  decode_step(params, token, cache, pos, extras) -> (logits, cache)
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+from jax.ad_checkpoint import checkpoint_name
+
+from repro.configs.base import ArchConfig
+from repro.distributed.sharding import constrain
+from repro.models import layers as L
+from repro.models import mamba as mamba_lib
+from repro.models import moe as moe_lib
+from repro.models import xlstm as xlstm_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class LayerKind:
+    mixer: str          # 'attn' | 'mamba' | 'mlstm' | 'slstm'
+    window: int = 0     # 0 = global attention
+    moe: bool = False
+    mlp: bool = True    # has an FFN sublayer (False for xlstm blocks)
+    cross: bool = False
+
+
+def layer_plan(cfg: ArchConfig) -> list[LayerKind]:
+    """The repeating pattern of one period group."""
+    plan = []
+    for j in range(cfg.period):
+        # mixer choice
+        if cfg.ssm == "xlstm":
+            mixer = ("slstm" if cfg.slstm_period and
+                     (j % cfg.slstm_period == cfg.slstm_period - 1)
+                     else "mlstm")
+        elif cfg.ssm == "mamba":
+            is_attn = cfg.attn_period and (
+                j % cfg.attn_period == cfg.attn_period // 2)
+            mixer = "attn" if is_attn else "mamba"
+        else:
+            mixer = "attn"
+        # local/global window pattern (gemma: global every p-th layer)
+        window = 0
+        if cfg.local_global_period and mixer == "attn":
+            if j % cfg.local_global_period != cfg.local_global_period - 1:
+                window = cfg.window
+        elif cfg.window and not cfg.local_global_period:
+            window = cfg.window
+        moe = bool(cfg.n_experts) and (j % cfg.moe_period
+                                       == cfg.moe_period - 1)
+        mlp = cfg.d_ff > 0 and not (mixer in ("mlstm",))
+        plan.append(LayerKind(mixer=mixer, window=window, moe=moe, mlp=mlp,
+                              cross=cfg.is_encdec))
+    return plan
+
+
+# --------------------------------------------------------------- init -------
+def _init_sublayer(key, cfg: ArchConfig, kind: LayerKind) -> dict:
+    d = cfg.d_model
+    ks = jax.random.split(key, 8)
+    p: dict[str, Any] = {"ln1": L.init_rmsnorm(d)}
+    if kind.mixer == "attn":
+        p["attn"] = L.init_attention(ks[0], d, cfg.n_heads, cfg.n_kv_heads,
+                                     cfg.head_dim)
+    elif kind.mixer == "mamba":
+        p["mamba"] = mamba_lib.init_mamba(ks[0], d, d_state=cfg.d_state)
+    elif kind.mixer == "mlstm":
+        p["mlstm"] = xlstm_lib.init_mlstm(ks[0], d, cfg.n_heads)
+    elif kind.mixer == "slstm":
+        p["slstm"] = xlstm_lib.init_slstm(ks[0], d, cfg.n_heads)
+    if kind.cross:
+        p["ln_x"] = L.init_rmsnorm(d)
+        p["cross"] = L.init_attention(ks[1], d, cfg.n_heads, cfg.n_kv_heads,
+                                      cfg.head_dim, cross=True)
+    if kind.moe:
+        p["ln2"] = L.init_rmsnorm(d)
+        p["moe"] = moe_lib.init_moe(ks[2], d, cfg.d_ff, cfg.n_experts,
+                                    cfg.act)
+        if cfg.dense_residual:
+            p["dense_mlp"] = L.init_mlp(ks[3], d, cfg.d_ff, cfg.act)
+    elif kind.mlp:
+        p["ln2"] = L.init_rmsnorm(d)
+        p["mlp"] = L.init_mlp(ks[2], d, cfg.d_ff, cfg.act)
+    elif kind.mixer == "slstm":
+        p["ln2"] = L.init_rmsnorm(d)
+        p["mlp"] = L.init_mlp(ks[2], d, max(1, 4 * d // 3), cfg.act)
+    return p
+
+
+def init_params(key, cfg: ArchConfig):
+    plan = layer_plan(cfg)
+    kb, ke, kh, kenc = jax.random.split(key, 4)
+    group_keys = jax.random.split(kb, cfg.n_groups)
+
+    def one_group(k):
+        sub_keys = jax.random.split(k, len(plan))
+        return {f"sub{j}": _init_sublayer(sub_keys[j], cfg, plan[j])
+                for j in range(len(plan))}
+
+    blocks = jax.vmap(one_group)(group_keys)    # stacked (n_groups, ...)
+    params = {
+        "embed": L.init_embed(ke, cfg.vocab, cfg.d_model,
+                              tie=cfg.tie_embeddings),
+        "blocks": blocks,
+        "final_norm": L.init_rmsnorm(cfg.d_model),
+    }
+    if cfg.is_encdec:
+        enc_keys = jax.random.split(kenc, cfg.n_enc_layers)
+        enc_kind = LayerKind(mixer="attn")
+
+        def one_enc(k):
+            return _init_sublayer(k, cfg, enc_kind)
+        params["encoder"] = jax.vmap(one_enc)(enc_keys)
+        params["enc_norm"] = L.init_rmsnorm(cfg.d_model)
+    return params
+
+
+# ---------------------------------------------------------- logical axes ----
+def _sublayer_axes(cfg: ArchConfig, kind: LayerKind) -> dict:
+    ax: dict[str, Any] = {"ln1": L.rmsnorm_axes()}
+    if kind.mixer == "attn":
+        ax["attn"] = L.attention_axes()
+    elif kind.mixer == "mamba":
+        ax["mamba"] = mamba_lib.mamba_axes()
+    elif kind.mixer == "mlstm":
+        ax["mlstm"] = xlstm_lib.mlstm_axes()
+    elif kind.mixer == "slstm":
+        ax["slstm"] = xlstm_lib.slstm_axes()
+    if kind.cross:
+        ax["ln_x"] = L.rmsnorm_axes()
+        ax["cross"] = L.attention_axes()
+    if kind.moe:
+        ax["ln2"] = L.rmsnorm_axes()
+        ax["moe"] = moe_lib.moe_axes(cfg.act)
+        if cfg.dense_residual:
+            ax["dense_mlp"] = L.mlp_axes(cfg.act)
+    elif kind.mlp or kind.mixer == "slstm":
+        ax["ln2"] = L.rmsnorm_axes()
+        ax["mlp"] = L.mlp_axes(cfg.act)
+    return ax
+
+
+def _stack_axes(tree):
+    return jax.tree_util.tree_map(
+        lambda t: ("layers", *t), tree,
+        is_leaf=lambda t: isinstance(t, tuple) and all(
+            isinstance(e, (str, type(None))) for e in t))
+
+
+def param_axes(cfg: ArchConfig) -> dict:
+    """Logical-axis names mirroring init_params' structure exactly."""
+    plan = layer_plan(cfg)
+    blocks = {f"sub{j}": _sublayer_axes(cfg, plan[j])
+              for j in range(len(plan))}
+    axes = {
+        "embed": L.embed_axes(tie=cfg.tie_embeddings),
+        "blocks": _stack_axes(blocks),
+        "final_norm": L.rmsnorm_axes(),
+    }
+    if cfg.is_encdec:
+        enc = _sublayer_axes(cfg, LayerKind(mixer="attn"))
+        axes["encoder"] = _stack_axes(enc)
+        axes["enc_norm"] = L.rmsnorm_axes()
+    return axes
+
+
+def cache_axes(cfg: ArchConfig) -> dict:
+    plan = layer_plan(cfg)
+    c = {}
+    for j, kind in enumerate(plan):
+        if kind.mixer == "attn":
+            kv = ("layers", "batch", "kv_seq", "kv_heads", "head_dim")
+            c[f"sub{j}"] = {"k": kv, "v": kv}
+        elif kind.mixer == "mamba":
+            c[f"sub{j}"] = {"h": ("layers", "batch", "mlp", "state"),
+                            "conv": ("layers", "batch", "conv", "mlp")}
+        elif kind.mixer == "mlstm":
+            c[f"sub{j}"] = {"c": ("layers", "batch", "heads", None, None),
+                            "n": ("layers", "batch", "heads", "head_dim"),
+                            "m": ("layers", "batch", "heads")}
+        else:
+            ax = ("layers", "batch", "heads", "head_dim")
+            c[f"sub{j}"] = {"c": ax, "n": ax, "m": ax, "h": ax}
+    return c
+
+
+# ------------------------------------------------------------ sublayer ------
+def _apply_sublayer(p, x, cfg: ArchConfig, kind: LayerKind, *,
+                    memory=None, pos0=0):
+    d = cfg.d_model
+    h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+    if kind.mixer == "attn":
+        mix = L.attention_train(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            d_head=cfg.head_dim, causal=True, window=kind.window,
+            softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta, pos0=pos0)
+        mix = checkpoint_name(mix, "tp_reduced")   # saved under remat policy
+    elif kind.mixer == "mamba":
+        mix = mamba_lib.mamba_forward(p["mamba"], h, d_state=cfg.d_state)
+    elif kind.mixer == "mlstm":
+        mix = xlstm_lib.mlstm_forward(p["mlstm"], h)
+    else:
+        mix = xlstm_lib.slstm_forward(p["slstm"], h)
+    x = x + mix.astype(x.dtype)
+    if kind.cross and memory is not None:
+        h = L.rmsnorm(p["ln_x"], x, cfg.norm_eps)
+        x = x + L.attention_train(
+            p["cross"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            d_head=cfg.head_dim, causal=False,
+            memory=memory).astype(x.dtype)
+    if kind.moe:
+        h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        t = h.reshape(-1, d)
+        y = moe_lib.moe_ffn(p["moe"], t, n_experts=cfg.n_experts,
+                            top_k=cfg.experts_per_tok, act=cfg.act,
+                            capacity_factor=cfg.moe_capacity_factor)
+        if cfg.dense_residual:
+            y = y + L.mlp(p["dense_mlp"], t, cfg.act)
+        x = x + y.reshape(x.shape).astype(x.dtype)
+    elif "mlp" in p:
+        h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        y = checkpoint_name(L.mlp(p["mlp"], h, cfg.act), "tp_reduced")
+        x = x + y.astype(x.dtype)
+    return constrain(x, "batch", "seq", "embed")
+
+
+# ---------------------------------------------------------------- forward ---
+def _encode(params, cfg: ArchConfig, enc_input):
+    """Whisper-style encoder over stubbed frame embeddings (B, S_enc, d)."""
+    x = enc_input
+    kind = LayerKind(mixer="attn")
+
+    def body(x, p):
+        h = L.rmsnorm(p["ln1"], x, cfg.norm_eps)
+        mix = L.attention_train(
+            p["attn"], h, n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+            d_head=cfg.head_dim, causal=False)
+        x = x + mix
+        h = L.rmsnorm(p["ln2"], x, cfg.norm_eps)
+        x = x + L.mlp(p["mlp"], h, cfg.act)
+        return x, None
+
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rmsnorm(params["enc_norm"], x, cfg.norm_eps)
+
+
+def forward(params, cfg: ArchConfig, tokens, *, extras=None, pos0=0,
+            remat: bool = True):
+    """Training/prefill forward -> logits (B, S, V)."""
+    extras = extras or {}
+    x = L.embed(params["embed"], tokens)
+    if cfg.vision_stub and "patches" in extras:
+        npatch = extras["patches"].shape[1]
+        x = x.at[:, :npatch].set(extras["patches"].astype(x.dtype))
+    memory = None
+    if cfg.is_encdec:
+        memory = _encode(params, cfg, extras["enc_input"])
+    plan = layer_plan(cfg)
+
+    def group_body(x, gp):
+        for j, kind in enumerate(plan):
+            x = _apply_sublayer(gp[f"sub{j}"], x, cfg, kind,
+                                memory=memory, pos0=pos0)
+        return x, None
+
+    # remat policy: keep the TP-all-reduced sublayer outputs so the
+    # backward recompute never re-runs collectives (§Perf iteration 9);
+    # everything else recomputes as usual.
+    policy = jax.checkpoint_policies.save_only_these_names("tp_reduced")
+    body = jax.checkpoint(group_body, policy=policy) if remat else group_body
+    x, _ = jax.lax.scan(body, x, params["blocks"])
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    return L.unembed(params["embed"], x, cfg.logit_softcap)
+
+
+def loss_fn(params, cfg: ArchConfig, batch, *, remat: bool = True):
+    logits = forward(params, cfg, batch["tokens"],
+                     extras={k: v for k, v in batch.items()
+                             if k not in ("tokens", "labels")},
+                     remat=remat)
+    labels = batch["labels"]
+    logp = jax.nn.log_softmax(logits.astype(jnp.float32), axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[..., None], axis=-1)[..., 0]
+    mask = (labels >= 0).astype(jnp.float32)
+    return jnp.sum(nll * mask) / jnp.maximum(jnp.sum(mask), 1.0)
+
+
+# ----------------------------------------------------------------- decode ---
+def init_cache(params, cfg: ArchConfig, batch: int, max_seq: int,
+               kv_dtype=jnp.float32):
+    """Per-group stacked cache pytree matching the scan layout."""
+    plan = layer_plan(cfg)
+
+    def one_group(gp):
+        c = {}
+        for j, kind in enumerate(plan):
+            sp = gp[f"sub{j}"]
+            if kind.mixer == "attn":
+                c[f"sub{j}"] = {
+                    "k": jnp.zeros((batch, max_seq, cfg.n_kv_heads,
+                                    cfg.head_dim), kv_dtype),
+                    "v": jnp.zeros((batch, max_seq, cfg.n_kv_heads,
+                                    cfg.head_dim), kv_dtype),
+                }
+            elif kind.mixer == "mamba":
+                c[f"sub{j}"] = mamba_lib.init_mamba_cache(sp["mamba"], batch)
+            elif kind.mixer == "mlstm":
+                c[f"sub{j}"] = xlstm_lib.init_mlstm_cache(sp["mlstm"], batch)
+            else:
+                c[f"sub{j}"] = xlstm_lib.init_slstm_cache(sp["slstm"], batch)
+        return c
+
+    return jax.vmap(one_group)(params["blocks"])
+
+
+def decode_step(params, cfg: ArchConfig, token, cache, pos, *, extras=None):
+    """One-token decode. token: (B, 1) int32; pos: () int32.
+
+    Returns (logits (B, 1, V), cache).
+    """
+    extras = extras or {}
+    x = L.embed(params["embed"], token)
+    memory = extras.get("enc_memory")       # pre-encoded for enc-dec serving
+    plan = layer_plan(cfg)
+
+    def group_body(x, scanned):
+        gp, gc = scanned
+        new_c = {}
+        for j, kind in enumerate(plan):
+            sp = gp[f"sub{j}"]
+            c = gc[f"sub{j}"]
+            h = L.rmsnorm(sp["ln1"], x, cfg.norm_eps)
+            if kind.mixer == "attn":
+                mix, ck, cv = L.attention_decode(
+                    sp["attn"], h, c["k"], c["v"], pos,
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                    d_head=cfg.head_dim, window=kind.window,
+                    softcap=cfg.attn_softcap, rope_theta=cfg.rope_theta)
+                new_c[f"sub{j}"] = {"k": ck, "v": cv}
+            elif kind.mixer == "mamba":
+                mix, new_c[f"sub{j}"] = mamba_lib.mamba_decode_step(
+                    sp["mamba"], h, c, d_state=cfg.d_state)
+            elif kind.mixer == "mlstm":
+                mix, new_c[f"sub{j}"] = xlstm_lib.mlstm_decode_step(
+                    sp["mlstm"], h, c)
+            else:
+                mix, new_c[f"sub{j}"] = xlstm_lib.slstm_decode_step(
+                    sp["slstm"], h, c)
+            x = x + mix.astype(x.dtype)
+            if kind.cross and memory is not None:
+                h = L.rmsnorm(sp["ln_x"], x, cfg.norm_eps)
+                y, _, _ = L.attention_decode(
+                    sp["cross"], h, c.get("k"), c.get("v"), pos,
+                    n_heads=cfg.n_heads, n_kv=cfg.n_kv_heads,
+                    d_head=cfg.head_dim, memory=memory)
+                x = x + y.astype(x.dtype)
+            if kind.moe:
+                h = L.rmsnorm(sp["ln2"], x, cfg.norm_eps)
+                t = h.reshape(-1, cfg.d_model)
+                y = moe_lib.moe_ffn(sp["moe"], t, n_experts=cfg.n_experts,
+                                    top_k=cfg.experts_per_tok, act=cfg.act,
+                                    capacity_factor=cfg.moe_capacity_factor)
+                if cfg.dense_residual:
+                    y = y + L.mlp(sp["dense_mlp"], t, cfg.act)
+                x = x + y.reshape(x.shape).astype(x.dtype)
+            elif "mlp" in sp:
+                h = L.rmsnorm(sp["ln2"], x, cfg.norm_eps)
+                x = x + L.mlp(sp["mlp"], h, cfg.act).astype(x.dtype)
+        return x, new_c
+
+    x, new_cache = jax.lax.scan(group_body, x, (params["blocks"], cache))
+    x = L.rmsnorm(params["final_norm"], x, cfg.norm_eps)
+    logits = L.unembed(params["embed"], x, cfg.logit_softcap)
+    return logits, new_cache

@@ -1,0 +1,121 @@
+"""Mixture-of-Experts FFN with sort-based (linear-FLOPs) dispatch.
+
+Top-k routing with a static per-expert capacity C = ceil(T*k/E * cf):
+token->expert assignments are grouped by a sort + run-rank (no atomics,
+static shapes — the same grouping primitive as core/commit.py), dispatched
+with one scatter, processed as a single (E, C, d) x (E, d, f) batched MXU
+contraction, and combined with a weighted scatter-add.  Overflow beyond
+capacity is dropped (standard GShard/MaxText behaviour).
+
+Sharding: the expert axis maps to the TP mesh axis when divisible
+(arctic 128e, jamba 16e); otherwise experts replicate and each expert's d_ff
+shards (grok 8e over a 16-way axis) — see distributed/sharding.py.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import _init
+
+
+def init_moe(key, d, d_ff, n_experts, act="swiglu"):
+    ks = jax.random.split(key, 4)
+    p = {
+        "router": _init(ks[0], (d, n_experts)),
+        "wi": _init(ks[1], (n_experts, d, d_ff)),
+        "wo": _init(ks[3], (n_experts, d_ff, d)),
+    }
+    if act == "swiglu":
+        p["wg"] = _init(ks[2], (n_experts, d, d_ff))
+    return p
+
+
+def moe_axes(act="swiglu"):
+    ax = {
+        "router": ("embed", None),
+        "wi": ("expert", "mlp_in", "mlp"),
+        "wo": ("expert", "mlp", "mlp_in"),
+    }
+    if act == "swiglu":
+        ax["wg"] = ("expert", "mlp_in", "mlp")
+    return ax
+
+
+def _group_ranks(sorted_ids: jax.Array) -> jax.Array:
+    e = sorted_ids.shape[0]
+    idx = jnp.arange(e)
+    is_start = jnp.concatenate(
+        [jnp.array([True]), sorted_ids[1:] != sorted_ids[:-1]])
+    start = jax.lax.cummax(jnp.where(is_start, idx, 0))
+    return idx - start
+
+
+def moe_ffn(p, x, *, n_experts, top_k=2, capacity_factor=1.25,
+            act="swiglu"):
+    """x: (T, d) flattened tokens -> (T, d)."""
+    t, d = x.shape
+    e = n_experts
+    cap = max(1, int(capacity_factor * t * top_k / e))
+    cap = -(-cap // 8) * 8                                  # bucketed
+
+    gates = x @ p["router"]                                 # (T, E)
+    top_vals, top_idx = jax.lax.top_k(gates, top_k)         # (T, k)
+    probs = jax.nn.softmax(top_vals.astype(jnp.float32), axis=-1)
+
+    flat_e = top_idx.reshape(-1)                            # (T*k,)
+    flat_t = jnp.repeat(jnp.arange(t), top_k)
+    flat_p = probs.reshape(-1)
+    order = jnp.argsort(flat_e)
+    se, st, sp = flat_e[order], flat_t[order], flat_p[order]
+    rank = _group_ranks(se)
+    keep = rank < cap
+    slot = jnp.where(keep, se * cap + rank, e * cap)        # drop overflow
+
+    # Gather-based dispatch/combine: scattering (T*k, d) token rows into an
+    # EXPERT-SHARDED buffer lowers to SPMD's replicate-and-reduce fallback
+    # (a u32[T*k, d] all-reduce — 2.1 TB/chip on arctic train_4k v1).  Only
+    # tiny int32 INDEX tables are scattered; the wide data movement is two
+    # gathers the partitioner turns into all-to-all-class traffic.  When the
+    # expert dim replicates (grok: 8e < 16-way TP) the scatter is local and
+    # cheaper — keep it there (EXPERIMENTS.md §Perf iterations 6-7).
+    if n_experts >= 16:          # expert axis shards on the production mesh
+        slot_to_tok = jnp.full((e * cap,), t, jnp.int32).at[slot].set(
+            st.astype(jnp.int32), mode="drop")              # (E*C,) int32
+        xin = jnp.where((slot_to_tok < t)[:, None],
+                        x[jnp.minimum(slot_to_tok, t - 1)], 0.0)
+        xin = xin.reshape(e, cap, d)
+    else:
+        xin = jnp.zeros((e * cap, d), x.dtype).at[slot].set(
+            x[st], mode="drop").reshape(e, cap, d)
+    # capacity dim shards over the DP axes so per-chip expert FLOPs scale
+    # with the fleet (EXPERIMENTS.md §Perf iteration 2)
+    xin = constrain(xin, "expert", "batch", "embed")
+    h = jnp.einsum("ecd,edf->ecf", xin, p["wi"])
+    if act == "swiglu":
+        h = jax.nn.silu(h) * jnp.einsum("ecd,edf->ecf", xin, p["wg"])
+    else:
+        h = jax.nn.gelu(h)
+    h = constrain(h, "expert", "batch", "mlp")
+    y = jnp.einsum("ecf,efd->ecd", h, p["wo"]).reshape(e * cap, d)
+
+    # combine: token t reads back its k slots (gather in flat token order —
+    # the inverse of the dispatch sort), weighted by gate probs
+    inv = jnp.argsort(order)
+    slot_by_flat = jnp.where(keep, slot, e * cap)[inv]      # (T*k,) flat order
+    y_pad = jnp.concatenate([y, jnp.zeros((1, d), y.dtype)], axis=0)
+    contrib = y_pad[slot_by_flat].reshape(t, top_k, d)
+    w = probs.astype(x.dtype).reshape(t, top_k, 1)
+    out = jnp.sum(contrib * w, axis=1)
+    return constrain(out, "batch", "embed")
+
+
+def aux_load_balance_loss(p, x, *, n_experts, top_k=2):
+    """Switch-style load-balance auxiliary loss (mean fraction * mean prob)."""
+    gates = jax.nn.softmax((x @ p["router"]).astype(jnp.float32), axis=-1)
+    _, top_idx = jax.lax.top_k(gates, top_k)
+    onehot = jax.nn.one_hot(top_idx, n_experts).sum(axis=1)  # (T, E)
+    frac = jnp.mean(onehot, axis=0)
+    prob = jnp.mean(gates, axis=0)
+    return n_experts * jnp.sum(frac * prob)

@@ -1,0 +1,221 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, exponential gating, sequential scan).
+
+mLSTM trains with the chunkwise linear-attention formulation (intra-chunk
+quadratic on W=128 windows + carried (dk, dv) state — O(S) FLOPs, constant
+memory per chunk) and decodes with the exact per-step recurrence including
+the paper's stabilizer.  Training-path input gates are clipped instead of
+carrying the running-max stabilizer across chunks (DESIGN.md §8 notes the
+simplification; decode is exact).
+
+sLSTM keeps per-cell states (c, n, m) with block-diagonal per-head
+recurrent weights and runs as a lax.scan — inherently sequential, exactly
+like the paper.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.distributed.sharding import constrain
+from repro.models.layers import _init, init_rmsnorm, rmsnorm
+
+CHUNK = 128
+
+
+# ------------------------------------------------------------------ mLSTM ---
+def init_mlstm(key, d, n_heads, *, expand=2):
+    di = expand * d
+    dh = di // n_heads
+    ks = jax.random.split(key, 8)
+    return {
+        "up": _init(ks[0], (d, 2 * di)),
+        "wq": _init(ks[1], (di, n_heads, dh)),
+        "wk": _init(ks[2], (di, n_heads, dh)),
+        "wv": _init(ks[3], (di, n_heads, dh)),
+        "wi": _init(ks[4], (di, n_heads)),
+        "wf": _init(ks[5], (di, n_heads)),
+        "fb": jnp.full((n_heads,), 3.0),      # forget-gate bias (open)
+        "down": _init(ks[6], (di, d)),
+    }
+
+
+def mlstm_axes():
+    return {"up": ("mlp_in", "mlp"), "wq": ("mlp", "heads", "head_dim"),
+            "wk": ("mlp", "heads", "head_dim"),
+            "wv": ("mlp", "heads", "head_dim"),
+            "wi": ("mlp", "heads"), "wf": ("mlp", "heads"), "fb": ("heads",),
+            "down": ("mlp", "mlp_in")}
+
+
+def _mlstm_gates(p, xi):
+    logi = jnp.clip(xi @ p["wi"], -10.0, 10.0)              # (..., H)
+    logf = jax.nn.log_sigmoid(xi @ p["wf"] + p["fb"])
+    return logi, logf
+
+
+def mlstm_forward(p, x):
+    """x: (B, S, d) -> (B, S, d); tail-pads S to a chunk multiple."""
+    b, s, d = x.shape
+    di = p["down"].shape[0]
+    h2 = x @ p["up"]
+    xi, z = h2[..., :di], h2[..., di:]
+    xi = constrain(xi, "batch", "seq", "mlp")
+    q = jnp.einsum("bsd,dhk->bshk", xi, p["wq"])
+    k = jnp.einsum("bsd,dhk->bshk", xi, p["wk"]) / (q.shape[-1] ** 0.5)
+    v = jnp.einsum("bsd,dhk->bshk", xi, p["wv"])
+    logi, logf = _mlstm_gates(p, xi)                        # (B,S,H)
+
+    chunk = min(CHUNK, s)
+    s_pad = -(-s // chunk) * chunk
+    nw = s_pad // chunk
+
+    def rs(t):
+        if s_pad != s:
+            pad = [(0, 0), (0, s_pad - s)] + [(0, 0)] * (t.ndim - 2)
+            t = jnp.pad(t, pad)
+        return jnp.moveaxis(t.reshape(b, nw, chunk, *t.shape[2:]), 1, 0)
+
+    qc, kc, vc, ic, fc = map(rs, (q, k, v, logi, logf))
+
+    def step(carry, inp):
+        cmat, nvec = carry                                  # (B,H,dk,dv),(B,H,dk)
+        qw, kw, vw, iw, fw = inp
+        w = qw.shape[1]
+        lf = jnp.cumsum(fw, axis=1)                         # (B,W,H)
+        # intra-chunk: scores[t,s] = exp(lf_t - lf_s + i_s), s <= t
+        gap = lf[:, :, None, :] - lf[:, None, :, :] + iw[:, None, :, :]
+        wmask = jnp.tril(jnp.ones((w, w), bool))
+        sc = jnp.where(wmask[None, :, :, None], jnp.exp(gap), 0.0)
+        qk = jnp.einsum("bthk,bshk->btsh", qw, kw)          # (B,W,W,H)
+        intra = jnp.einsum("btsh,btsh,bshv->bthv", qk, sc, vw)
+        nintra = jnp.einsum("btsh,bshk->bthk", sc, kw)      # normalizer keys
+        # inter-chunk from carried state
+        dec = jnp.exp(lf)                                   # (B,W,H)
+        inter = jnp.einsum("bthk,bhkv,bth->bthv", qw, cmat, dec)
+        ninter = jnp.einsum("bthk,bhk,bth->bth", qw, nvec, dec)
+        hnum = intra + inter                                # (B,W,H,dv)
+        nden = jnp.einsum("bthk,bthk->bth", qw, nintra) + ninter
+        hout = hnum / jnp.maximum(jnp.abs(nden), 1.0)[..., None]
+        # carry update
+        tot = lf[:, -1]                                     # (B,H)
+        wk_dec = jnp.exp(tot[:, None, :] - lf + iw)         # (B,W,H)
+        cnew = (cmat * jnp.exp(tot)[..., None, None]
+                + jnp.einsum("bshk,bsh,bshv->bhkv", kw, wk_dec, vw))
+        nnew = (nvec * jnp.exp(tot)[..., None]
+                + jnp.einsum("bshk,bsh->bhk", kw, wk_dec))
+        return (cnew, nnew), hout
+
+    nh, dh = q.shape[2], q.shape[3]
+    carry0 = (jnp.zeros((b, nh, dh, dh), jnp.float32),
+              jnp.zeros((b, nh, dh), jnp.float32))
+    _, hs = jax.lax.scan(step, carry0, (qc, kc, vc, ic, fc))
+    hout = jnp.moveaxis(hs, 0, 1).reshape(b, s_pad, di)[:, :s]
+    return (hout * jax.nn.silu(z)) @ p["down"]
+
+
+def init_mlstm_cache(p, batch):
+    nh = p["wq"].shape[1]
+    dh = p["wq"].shape[2]
+    return {"c": jnp.zeros((batch, nh, dh, dh), jnp.float32),
+            "n": jnp.zeros((batch, nh, dh), jnp.float32),
+            "m": jnp.full((batch, nh), -1e30, jnp.float32)}
+
+
+def mlstm_decode_step(p, x1, cache):
+    """Exact stabilized recurrence, one token.  x1: (B, 1, d)."""
+    b = x1.shape[0]
+    di = p["down"].shape[0]
+    h2 = x1[:, 0] @ p["up"]
+    xi, z = h2[..., :di], h2[..., di:]
+    q = jnp.einsum("bd,dhk->bhk", xi, p["wq"])
+    k = jnp.einsum("bd,dhk->bhk", xi, p["wk"]) / (q.shape[-1] ** 0.5)
+    v = jnp.einsum("bd,dhk->bhk", xi, p["wv"])
+    logi = jnp.clip(xi @ p["wi"], -10.0, 10.0)
+    logf = jax.nn.log_sigmoid(xi @ p["wf"] + p["fb"])
+    m_new = jnp.maximum(logf + cache["m"], logi)            # stabilizer
+    i = jnp.exp(logi - m_new)
+    f = jnp.exp(logf + cache["m"] - m_new)
+    c = f[..., None, None] * cache["c"] + i[..., None, None] * (
+        k[..., :, None] * v[..., None, :])
+    n = f[..., None] * cache["n"] + i[..., None] * k
+    num = jnp.einsum("bhk,bhkv->bhv", q, c)
+    # stabilized form: true values carry exp(m); the |.|>=1 floor therefore
+    # rescales to exp(-m) in stabilized coordinates (xLSTM eq. 15)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhk,bhk->bh", q, n)),
+                      jnp.exp(-m_new))
+    hout = (num / den[..., None]).reshape(b, di)
+    y = (hout * jax.nn.silu(z)) @ p["down"]
+    return y[:, None], {"c": c, "n": n, "m": m_new}
+
+
+# ------------------------------------------------------------------ sLSTM ---
+def init_slstm(key, d, n_heads):
+    dh = d // n_heads
+    ks = jax.random.split(key, 10)
+    p = {"w": _init(ks[0], (d, 4 * d)),                    # z,i,f,o inputs
+         "r": _init(ks[1], (4, n_heads, dh, dh), scale=0.3 / dh ** 0.5),
+         "b": jnp.zeros((4 * d,)).at[2 * d:3 * d].set(2.0),  # forget open
+         "down": _init(ks[2], (d, d))}
+    return p
+
+
+def slstm_axes():
+    return {"w": ("mlp_in", "mlp"), "r": (None, "heads", None, "head_dim"),
+            "b": ("mlp",), "down": ("mlp_in", "mlp_in")}
+
+
+def slstm_forward(p, x):
+    """x: (B, S, d) -> (B, S, d); sequential scan (inherently recurrent)."""
+    b, s, d = x.shape
+    nh = p["r"].shape[1]
+    dh = d // nh
+    pre = x @ p["w"] + p["b"]                               # (B,S,4d)
+
+    def step(carry, pre_t):
+        c, n, m, h = carry                                  # (B,nh,dh) each
+        rec = jnp.einsum("bhk,ghkl->bghl", h, p["r"])       # (B,4,nh,dh)
+        g = pre_t.reshape(b, 4, nh, dh) + rec
+        zt = jnp.tanh(g[:, 0])
+        it = g[:, 1]
+        ft = g[:, 2]
+        ot = jax.nn.sigmoid(g[:, 3])
+        m_new = jnp.maximum(jax.nn.log_sigmoid(ft) + m, it)
+        i = jnp.exp(it - m_new)
+        f = jnp.exp(jax.nn.log_sigmoid(ft) + m - m_new)
+        c_new = f * c + i * zt
+        n_new = f * n + i
+        h_new = ot * c_new / jnp.maximum(n_new, 1.0)
+        return (c_new, n_new, m_new, h_new), h_new
+
+    z0 = jnp.zeros((b, nh, dh), jnp.float32)
+    carry0 = (z0, z0, jnp.full((b, nh, dh), -1e30), z0)
+    _, hs = jax.lax.scan(step, carry0, jnp.moveaxis(pre, 1, 0))
+    h = jnp.moveaxis(hs, 0, 1).reshape(b, s, d)
+    return h @ p["down"]
+
+
+def init_slstm_cache(p, batch):
+    nh = p["r"].shape[1]
+    dh = p["r"].shape[2]
+    z = jnp.zeros((batch, nh, dh), jnp.float32)
+    return {"c": z, "n": z, "m": jnp.full((batch, nh, dh), -1e30), "h": z}
+
+
+def slstm_decode_step(p, x1, cache):
+    b, _, d = x1.shape
+    nh = p["r"].shape[1]
+    dh = d // nh
+    pre = (x1[:, 0] @ p["w"] + p["b"]).reshape(b, 4, nh, dh)
+    rec = jnp.einsum("bhk,ghkl->bghl", cache["h"], p["r"])
+    g = pre + rec
+    zt, it, ft, ot = (jnp.tanh(g[:, 0]), g[:, 1], g[:, 2],
+                      jax.nn.sigmoid(g[:, 3]))
+    m_new = jnp.maximum(jax.nn.log_sigmoid(ft) + cache["m"], it)
+    i = jnp.exp(it - m_new)
+    f = jnp.exp(jax.nn.log_sigmoid(ft) + cache["m"] - m_new)
+    c = f * cache["c"] + i * zt
+    n = f * cache["n"] + i
+    h = ot * c / jnp.maximum(n, 1.0)
+    y = h.reshape(b, d) @ p["down"]
+    return y[:, None], {"c": c, "n": n, "m": m_new, "h": h}

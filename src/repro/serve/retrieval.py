@@ -1,0 +1,78 @@
+"""Retrieval attention: the paper's technique serving the LM stack.
+
+Long-context decode attends over an enormous KV cache; RetrievalAttention
+(paper ref [8]) replaces the exhaustive pass with k-ANNS over cached keys
+using a proximity graph.  This module builds a Vamana PG over a layer's
+keys and answers decode-time attention by searching top-k keys, attending
+only to those — and the PG's construction parameters are exactly what
+FastPGT tunes (examples/serve_retrieval.py runs the tuner over this index).
+
+Scope: per-(layer, head) indexes over a frozen prefill cache (the common
+RAG/long-doc serving pattern); incremental insertion reuses the same
+builders batch-wise.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import search as search_lib
+from repro.core import vamana as vamana_lib
+
+
+@dataclasses.dataclass
+class RetrievalIndex:
+    graph_ids: jax.Array       # (n_ctx, M_max) over one head's keys
+    keys: jax.Array            # (n_ctx, dh) — note: inner-product queries
+    values: jax.Array          # (n_ctx, dh)
+    entry: int
+    params: vamana_lib.VamanaParams
+
+
+def build_index(keys: jax.Array, values: jax.Array,
+                params: vamana_lib.VamanaParams, *, seed: int = 0,
+                batch_size: int = 256) -> RetrievalIndex:
+    """Index one head's keys.  L2 PG over unit-normalized keys approximates
+    max-inner-product ranking for decode queries (standard MIPS reduction)."""
+    norm = jnp.linalg.norm(keys, axis=-1, keepdims=True)
+    kn = keys / jnp.maximum(norm, 1e-6)
+    res = vamana_lib.build_vamana(kn, params, seed=seed,
+                                  batch_size=batch_size)
+    return RetrievalIndex(graph_ids=res.g.ids[0], keys=keys, values=values,
+                          entry=res.entry, params=params)
+
+
+def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
+                        ef: int, scale: float | None = None
+                        ) -> tuple[jax.Array, search_lib.SearchResult]:
+    """Approximate attention for decode queries q: (B, dh).
+
+    Searches the PG for top_k keys per query and softmax-attends over just
+    those.  Returns (out (B, dh), SearchResult for instrumentation).
+    """
+    dh = q.shape[-1]
+    scale = scale or 1.0 / (dh ** 0.5)
+    qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-6)
+    res = search_lib.knn_search(idx.graph_ids, idx.keys / jnp.maximum(
+        jnp.linalg.norm(idx.keys, axis=-1, keepdims=True), 1e-6),
+        qn, top_k, ef, idx.entry)
+    ids = jnp.maximum(res.pool_ids, 0)                    # (B, k)
+    valid = res.pool_ids >= 0
+    k_sel = idx.keys[ids]                                 # (B, k, dh)
+    v_sel = idx.values[ids]
+    logits = jnp.einsum("bd,bkd->bk", q, k_sel) * scale
+    logits = jnp.where(valid, logits, -1e30)
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bk,bkd->bd", w, v_sel), res
+
+
+def exact_attention(keys: jax.Array, values: jax.Array, q: jax.Array,
+                    scale: float | None = None) -> jax.Array:
+    """Dense reference for quality checks (recall of attention mass)."""
+    dh = q.shape[-1]
+    scale = scale or 1.0 / (dh ** 0.5)
+    logits = jnp.einsum("bd,nd->bn", q, keys) * scale
+    w = jax.nn.softmax(logits, axis=-1)
+    return jnp.einsum("bn,nd->bd", w, values)

@@ -1,0 +1,119 @@
+"""Checkpointing: atomic, resumable, async-capable, retention-managed.
+
+Pytrees flatten to path-keyed npz archives (np arrays host-side); a JSON
+sidecar holds step metadata and the tree structure.  Writes go to a temp
+file + atomic rename, so a preempted node never leaves a torn checkpoint —
+restore always sees the newest *complete* step (fault-tolerance path).
+``save_async`` overlaps the host write with the next training step.
+"""
+from __future__ import annotations
+
+import concurrent.futures as cf
+import json
+import os
+import re
+import shutil
+import tempfile
+
+import jax
+import numpy as np
+
+_SEP = "/"
+_executor = cf.ThreadPoolExecutor(max_workers=1)
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = _SEP.join(_part(p) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def _part(p) -> str:
+    if hasattr(p, "key"):
+        return str(p.key)
+    if hasattr(p, "idx"):
+        return str(p.idx)
+    return str(p)
+
+
+def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
+         extra: dict | None = None) -> str:
+    """Atomic checkpoint write; returns the final path."""
+    os.makedirs(ckpt_dir, exist_ok=True)
+    flat = _flatten(tree)
+    final = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as fh:         # handle: savez won't add .npz
+            np.savez(fh, **flat)
+        os.replace(tmp, final)              # atomic on POSIX
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+    meta = {"step": step, "keys": sorted(flat), **(extra or {})}
+    mtmp = final + ".meta.tmp"
+    with open(mtmp, "w") as f:
+        json.dump(meta, f)
+    os.replace(mtmp, final + ".meta")
+    _retain(ckpt_dir, keep)
+    return final
+
+
+def save_async(ckpt_dir: str, step: int, tree, **kw) -> cf.Future:
+    """Overlap checkpoint IO with compute; device->host copy happens now."""
+    host_tree = jax.tree_util.tree_map(np.asarray, tree)
+    return _executor.submit(save, ckpt_dir, step, host_tree, **kw)
+
+
+def _retain(ckpt_dir: str, keep: int):
+    steps = sorted(list_steps(ckpt_dir))
+    for s in steps[:-keep] if keep > 0 else []:
+        p = os.path.join(ckpt_dir, f"step_{s:08d}.npz")
+        for f in (p, p + ".meta"):
+            if os.path.exists(f):
+                os.unlink(f)
+
+
+def list_steps(ckpt_dir: str) -> list[int]:
+    if not os.path.isdir(ckpt_dir):
+        return []
+    out = []
+    for f in os.listdir(ckpt_dir):
+        m = re.fullmatch(r"step_(\d+)\.npz", f)
+        if m and os.path.exists(os.path.join(ckpt_dir, f) + ".meta"):
+            out.append(int(m.group(1)))
+    return sorted(out)
+
+
+def latest_step(ckpt_dir: str) -> int | None:
+    steps = list_steps(ckpt_dir)
+    return steps[-1] if steps else None
+
+
+def restore(ckpt_dir: str, tree_like, step: int | None = None):
+    """Restore into the structure of ``tree_like``; returns (tree, step).
+
+    Leaf placement (sharding) follows the example tree when its leaves carry
+    shardings (restore-then-reshard for elastic restarts).
+    """
+    step = step if step is not None else latest_step(ckpt_dir)
+    if step is None:
+        raise FileNotFoundError(f"no checkpoint in {ckpt_dir}")
+    path = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
+    with np.load(path) as z:
+        flat = {k: z[k] for k in z.files}
+    paths, treedef = jax.tree_util.tree_flatten_with_path(tree_like)
+    leaves = []
+    for p, like in paths:
+        key = _SEP.join(_part(x) for x in p)
+        if key not in flat:
+            raise KeyError(f"checkpoint missing {key}")
+        arr = flat[key]
+        if hasattr(like, "sharding") and hasattr(like, "shape"):
+            leaves.append(jax.device_put(arr, like.sharding))
+        else:
+            leaves.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, leaves), step

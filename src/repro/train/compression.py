@@ -1,0 +1,78 @@
+"""Gradient compression for cross-pod data parallelism.
+
+At 1000+-node scale the DP all-reduce over the slow pod interconnect
+dominates step time; int8 quantization with error feedback cuts those bytes
+4x (vs f32) with negligible quality loss, and top-k sparsification goes
+further for very-low-bandwidth links.  Both keep a residual (error-feedback)
+state so the compression error is re-injected next step — the standard
+convergence-preserving construction.
+
+Usage (train loop): grads are compressed *before* the cross-pod reduce and
+decompressed after; within-pod reduction stays full precision.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class EFState(NamedTuple):
+    residual: dict      # pytree like grads
+
+
+def init_ef(params) -> EFState:
+    return EFState(residual=jax.tree_util.tree_map(
+        lambda p: jnp.zeros(p.shape, jnp.float32), params))
+
+
+def quantize_int8(x: jax.Array) -> tuple[jax.Array, jax.Array]:
+    scale = jnp.maximum(jnp.max(jnp.abs(x)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def compress_int8_ef(grads, ef: EFState):
+    """-> (quantized pytree of (q, scale), new EFState)."""
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        q, s = quantize_int8(x)
+        err = x - dequantize_int8(q, s)
+        return (q, s), err
+    out = jax.tree_util.tree_map(one, grads, ef.residual)
+    qs = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=_is_pair)
+    errs = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=_is_pair)
+    return qs, EFState(residual=errs)
+
+
+def _is_pair(t):
+    return isinstance(t, tuple) and len(t) == 2
+
+
+def decompress_int8(qs):
+    return jax.tree_util.tree_map(
+        lambda t: dequantize_int8(*t), qs, is_leaf=_is_pair)
+
+
+def topk_sparsify(x: jax.Array, frac: float) -> jax.Array:
+    """Keep the top ``frac`` fraction by magnitude (dense mask form)."""
+    k = max(1, int(x.size * frac))
+    flat = jnp.abs(x.reshape(-1))
+    thresh = jax.lax.top_k(flat, k)[0][-1]
+    return jnp.where(jnp.abs(x) >= thresh, x, 0.0)
+
+
+def compress_topk_ef(grads, ef: EFState, frac: float = 0.05):
+    def one(g, r):
+        x = g.astype(jnp.float32) + r
+        kept = topk_sparsify(x, frac)
+        return kept, x - kept
+    out = jax.tree_util.tree_map(one, grads, ef.residual)
+    kept = jax.tree_util.tree_map(lambda t: t[0], out, is_leaf=_is_pair)
+    errs = jax.tree_util.tree_map(lambda t: t[1], out, is_leaf=_is_pair)
+    return kept, EFState(residual=errs)

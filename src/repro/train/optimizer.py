@@ -1,0 +1,103 @@
+"""AdamW + LR schedules, pure JAX (no optax in this environment).
+
+Optimizer state is a pytree mirroring params; ``adamw`` returns
+(init_fn, update_fn) closures.  Global-norm clipping and decoupled weight
+decay follow the standard formulation.  Moments can be kept in bf16
+(``moment_dtype``) to halve optimizer memory at scale.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    schedule: str = "cosine"      # 'cosine' | 'constant' | 'linear'
+    moment_dtype: jnp.dtype = jnp.float32
+
+
+def schedule_lr(cfg: AdamWConfig, step: jax.Array) -> jax.Array:
+    s = step.astype(jnp.float32)
+    warm = jnp.minimum(1.0, s / jnp.maximum(cfg.warmup_steps, 1))
+    if cfg.schedule == "constant":
+        decay = 1.0
+    elif cfg.schedule == "linear":
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 1.0 - frac
+    else:
+        frac = jnp.clip((s - cfg.warmup_steps)
+                        / max(cfg.total_steps - cfg.warmup_steps, 1), 0, 1)
+        decay = 0.5 * (1.0 + jnp.cos(jnp.pi * frac))
+    return cfg.lr * warm * decay
+
+
+def global_norm(tree) -> jax.Array:
+    leaves = jax.tree_util.tree_leaves(tree)
+    return jnp.sqrt(sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+                        for x in leaves))
+
+
+def clip_by_global_norm(tree, max_norm: float):
+    norm = global_norm(tree)
+    scale = jnp.minimum(1.0, max_norm / jnp.maximum(norm, 1e-9))
+    return jax.tree_util.tree_map(lambda g: g * scale, tree), norm
+
+
+def adamw(cfg: AdamWConfig) -> tuple[Callable, Callable]:
+    def init(params) -> AdamWState:
+        zeros = lambda p: jnp.zeros(p.shape, cfg.moment_dtype)
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=jax.tree_util.tree_map(zeros, params),
+                          nu=jax.tree_util.tree_map(zeros, params))
+
+    def update(grads, state: AdamWState, params):
+        grads, gnorm = clip_by_global_norm(grads, cfg.clip_norm)
+        step = state.step + 1
+        t = step.astype(jnp.float32)
+        lr = schedule_lr(cfg, step)
+
+        def upd(g, m, v, p):
+            g32 = g.astype(jnp.float32)
+            m = (cfg.b1 * m.astype(jnp.float32)
+                 + (1 - cfg.b1) * g32)
+            v = (cfg.b2 * v.astype(jnp.float32)
+                 + (1 - cfg.b2) * g32 * g32)
+            mh = m / (1 - cfg.b1 ** t)
+            vh = v / (1 - cfg.b2 ** t)
+            delta = mh / (jnp.sqrt(vh) + cfg.eps)
+            if p.ndim >= 2:                      # decay matrices only
+                delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+            newp = p.astype(jnp.float32) - lr * delta
+            return (newp.astype(p.dtype), m.astype(cfg.moment_dtype),
+                    v.astype(cfg.moment_dtype))
+
+        flat = jax.tree_util.tree_map(upd, grads, state.mu, state.nu, params)
+        newp = jax.tree_util.tree_map(lambda x: x[0], flat,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        newm = jax.tree_util.tree_map(lambda x: x[1], flat,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        newv = jax.tree_util.tree_map(lambda x: x[2], flat,
+                                      is_leaf=lambda x: isinstance(x, tuple))
+        return newp, AdamWState(step=step, mu=newm, nu=newv), {
+            "lr": lr, "grad_norm": gnorm}
+
+    return init, update

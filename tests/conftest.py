@@ -1,0 +1,18 @@
+import numpy as np
+import pytest
+
+
+@pytest.fixture(scope="session")
+def rng():
+    return np.random.default_rng(0)
+
+
+@pytest.fixture(scope="session")
+def small_dataset():
+    """Clustered (data, queries) used across core tests."""
+    import jax.numpy as jnp
+    r = np.random.default_rng(7)
+    centers = r.normal(size=(8, 16)) * 3.0
+    data = centers[r.integers(0, 8, 800)] + r.normal(size=(800, 16))
+    queries = centers[r.integers(0, 8, 40)] + r.normal(size=(40, 16))
+    return (jnp.asarray(data, jnp.float32), jnp.asarray(queries, jnp.float32))

@@ -1,0 +1,86 @@
+"""PG builders: multi == single invariance (core paper claim: ESO/EPO are
+pure optimizations), recall quality, and counter reductions."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import eval as evallib
+from repro.core import hnsw, nsg, vamana
+
+
+@pytest.fixture(scope="module")
+def ds():
+    r = np.random.default_rng(11)
+    data = jnp.asarray(r.normal(size=(600, 12)), jnp.float32)
+    queries = jnp.asarray(r.normal(size=(30, 12)), jnp.float32)
+    gt = evallib.ground_truth(data, queries, 10)
+    return data, queries, gt
+
+
+def test_multi_vamana_equals_singles(ds):
+    """Graph i of a shared multi-build must be IDENTICAL to building
+    parameter i alone — sharing must never change results."""
+    data, _, _ = ds
+    ps = [vamana.VamanaParams(L=24, M=10, alpha=1.1),
+          vamana.VamanaParams(L=32, M=12, alpha=1.3)]
+    multi = vamana.build_multi_vamana(data, ps, seed=5, batch_size=128)
+    for i, p in enumerate(ps):
+        single = vamana.build_multi_vamana(data, [p], seed=5, batch_size=128,
+                                           use_eso=False, use_epo=False)
+        np.testing.assert_array_equal(
+            np.asarray(multi.g.ids[i])[:, :p.M],
+            np.asarray(single.g.ids[0])[:, :p.M])
+
+
+def test_multi_vamana_counter_savings(ds):
+    data, _, _ = ds
+    ps = [vamana.VamanaParams(L=24, M=10, alpha=1.1),
+          vamana.VamanaParams(L=28, M=12, alpha=1.2),
+          vamana.VamanaParams(L=32, M=12, alpha=1.3)]
+    shared = vamana.build_multi_vamana(data, ps, seed=5, batch_size=128)
+    assert shared.counters.search < shared.counters.search_base
+    assert shared.counters.prune <= shared.counters.prune_base
+    assert shared.counters.total < shared.counters.total_base
+
+
+@pytest.mark.parametrize("builder,params,searcher", [
+    ("vamana", vamana.VamanaParams(L=48, M=16, alpha=1.2), None),
+    ("nsg", nsg.NSGParams(K=16, L=48, M=16), None),
+    ("hnsw", hnsw.HNSWParams(efc=48, M=16), None),
+])
+def test_builder_recall(ds, builder, params, searcher):
+    data, queries, gt = ds
+    if builder == "vamana":
+        res = vamana.build_multi_vamana(data, [params], batch_size=128)
+        fn = evallib.flat_graph_search_fn(res.g, 0, data, res.entry, 10)
+        got = fn(queries, 60).pool_ids[:, :10]
+    elif builder == "nsg":
+        res = nsg.build_multi_nsg(data, [params], batch_size=128)
+        fn = evallib.flat_graph_search_fn(res.g, 0, data, res.entry, 10)
+        got = fn(queries, 60).pool_ids[:, :10]
+    else:
+        res = hnsw.build_multi_hnsw(data, [params], batch_size=128)
+        got = hnsw.hnsw_search(res.g, 0, data, queries, 10, 60).pool_ids
+    rec = evallib.recall_at_k(got, gt)
+    assert rec > 0.80, f"{builder} recall {rec}"
+
+
+def test_hnsw_shared_levels_and_multi(ds):
+    data, queries, gt = ds
+    ps = [hnsw.HNSWParams(efc=32, M=12), hnsw.HNSWParams(efc=48, M=16)]
+    multi = hnsw.build_multi_hnsw(data, ps, seed=2, batch_size=128)
+    assert multi.counters.search < multi.counters.search_base
+    # levels identical across graphs by construction (deterministic random)
+    for gi in range(2):
+        got = hnsw.hnsw_search(multi.g, gi, data, queries, 10, 60).pool_ids
+        assert evallib.recall_at_k(got, gt) > 0.75
+
+
+def test_nsg_connectivity_repair(ds):
+    data, queries, gt = ds
+    res = nsg.build_multi_nsg(data, [nsg.NSGParams(K=12, L=32, M=10)],
+                              batch_size=128)
+    # after repair, searches from the medoid must reach >90% of gt space
+    fn = evallib.flat_graph_search_fn(res.g, 0, data, res.entry, 10)
+    rec = evallib.recall_at_k(fn(queries, 80).pool_ids[:, :10], gt)
+    assert rec > 0.7

@@ -1,0 +1,137 @@
+"""Checkpoint + fault tolerance: roundtrip, retention, resume equivalence,
+failure-injection recovery, straggler detection."""
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import registry
+from repro.train import checkpoint as ck
+from repro.train import data as data_lib
+from repro.train import fault_tolerance as ft
+from repro.train import train_loop
+from repro.train.optimizer import AdamWConfig
+
+
+def _tiny_setup(seed=0):
+    import dataclasses
+    cfg = registry.get_config("granite_3_8b").smoke()
+    cfg = dataclasses.replace(cfg, vocab=32, n_layers=1, d_model=32,
+                              d_ff=64, n_heads=2, n_kv_heads=2, d_head=16)
+    dcfg = data_lib.DataConfig(vocab=32, seq_len=16, global_batch=4,
+                               seed=seed)
+    ds = data_lib.SyntheticLM(dcfg)
+    opt = AdamWConfig(lr=1e-3)
+    scfg = train_loop.StepConfig(compute_dtype="float32", remat=False)
+    state = train_loop.init_state(jax.random.PRNGKey(seed), cfg, opt, scfg)
+    step = jax.jit(train_loop.make_train_step(cfg, opt, scfg))
+    return state, step, ds
+
+
+def test_roundtrip_bit_exact(tmp_path):
+    state, step, ds = _tiny_setup()
+    state, _ = step(state, ds.global_batch(0))
+    ck.save(str(tmp_path), 1, state)
+    restored, got_step = ck.restore(str(tmp_path), state)
+    assert got_step == 1
+    for a, b in zip(jax.tree_util.tree_leaves(state),
+                    jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_retention(tmp_path):
+    state, _, _ = _tiny_setup()
+    for s in (1, 2, 3, 4, 5):
+        ck.save(str(tmp_path), s, {"x": jnp.ones(3) * s}, keep=2)
+    assert ck.list_steps(str(tmp_path)) == [4, 5]
+
+
+def test_no_torn_tmp_files(tmp_path):
+    ck.save(str(tmp_path), 1, {"x": jnp.ones(3)})
+    assert not [f for f in os.listdir(tmp_path) if f.endswith(".tmp")]
+
+
+def test_resume_equivalence(tmp_path):
+    """5 straight steps == 3 steps + ckpt + restore + 2 steps, bit-for-bit
+    (deterministic pipeline + atomic checkpoints)."""
+    state_a, step, ds = _tiny_setup(seed=4)
+    for s in range(5):
+        state_a, _ = step(state_a, ds.global_batch(s))
+
+    state_b, step2, ds2 = _tiny_setup(seed=4)
+    for s in range(3):
+        state_b, _ = step2(state_b, ds2.global_batch(s))
+    ck.save(str(tmp_path), 3, state_b)
+    restored, at = ck.restore(str(tmp_path), state_b)
+    for s in range(at, 5):
+        restored, _ = step2(restored, ds2.global_batch(s))
+    np.testing.assert_allclose(
+        np.asarray(jax.tree_util.tree_leaves(state_a.params)[0]),
+        np.asarray(jax.tree_util.tree_leaves(restored.params)[0]),
+        rtol=1e-6, atol=1e-7)
+
+
+def test_run_resumable_with_failures(tmp_path):
+    """Injected failures recover from the latest checkpoint and reach the
+    same final state as an uninterrupted run."""
+    state, step, ds = _tiny_setup(seed=9)
+    fails = {4, 7}
+
+    def injector(s):
+        if s in fails:
+            fails.discard(s)
+            return True
+        return False
+
+    final, steps, restarts = ft.run_resumable(
+        state, step, lambda s: ds.global_batch(s), n_steps=10,
+        ckpt_dir=str(tmp_path), ckpt_every=2, fail_injector=injector)
+    assert steps == 10 and restarts == 2
+
+    clean, *_ = ft.run_resumable(
+        state, step, lambda s: ds.global_batch(s), n_steps=10,
+        ckpt_dir=str(tmp_path) + "_clean", ckpt_every=100)
+    np.testing.assert_allclose(
+        np.asarray(jax.tree_util.tree_leaves(final.params)[0]),
+        np.asarray(jax.tree_util.tree_leaves(clean.params)[0]),
+        rtol=1e-6, atol=1e-7)
+
+
+def test_heartbeat_monitor():
+    mon = ft.HeartbeatMonitor(["w0", "w1"], timeout_s=10)
+    mon.beat("w0", at=100.0)
+    mon.beat("w1", at=100.0)
+    assert mon.dead_workers(now=105.0) == []
+    mon.beat("w0", at=111.0)
+    assert mon.dead_workers(now=115.0) == ["w1"]
+
+
+def test_straggler_mitigator():
+    sm = ft.StragglerMitigator(tolerance=2.0)
+    for _ in range(10):
+        assert not sm.record(1.0)
+    assert sm.record(5.0)           # 5x median: flagged
+    assert not sm.record(1.1)
+    assert sm.deadline() == pytest.approx(2.0, rel=0.2)
+
+
+def test_elastic_reshard_roundtrip(tmp_path):
+    """Checkpoint written under one layout restores into another template
+    (device-count change simulated by a fresh state object)."""
+    state, step, ds = _tiny_setup(seed=2)
+    state, _ = step(state, ds.global_batch(0))
+    ck.save(str(tmp_path), 1, state)
+    template, _, _ = _tiny_setup(seed=2)        # fresh arrays, same tree
+    restored, s = ft.elastic_reshard(str(tmp_path), template)
+    assert s == 1
+    np.testing.assert_array_equal(
+        np.asarray(jax.tree_util.tree_leaves(state.params)[0]),
+        np.asarray(jax.tree_util.tree_leaves(restored.params)[0]))
+
+
+def test_save_async(tmp_path):
+    fut = ck.save_async(str(tmp_path), 7, {"x": jnp.arange(5)})
+    fut.result(timeout=30)
+    assert ck.latest_step(str(tmp_path)) == 7

@@ -1,0 +1,75 @@
+"""HLO analyzer: trip-count correction, dot FLOPs, collective byte parse."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.launch import hlo_analysis as H
+
+
+def test_scan_trip_count_correction():
+    def f(x, ws):
+        def body(c, w):
+            return jnp.tanh(c @ w), None
+        y, _ = jax.lax.scan(body, x, ws)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((128, 256), jnp.float32)
+    ws = jax.ShapeDtypeStruct((10, 256, 256), jnp.float32)
+    txt = jax.jit(f).lower(x, ws).compile().as_text()
+    mc = H.analyze(txt)
+    analytic = 10 * 2 * 128 * 256 * 256
+    assert abs(mc.flops - analytic) / analytic < 0.01
+    assert 10 in mc.trip_counts.values()
+
+
+def test_plain_matmul_flops():
+    def f(a, b):
+        return a @ b
+    a = jax.ShapeDtypeStruct((64, 128), jnp.float32)
+    b = jax.ShapeDtypeStruct((128, 32), jnp.float32)
+    txt = jax.jit(f).lower(a, b).compile().as_text()
+    mc = H.analyze(txt)
+    assert mc.flops == 2 * 64 * 128 * 32
+
+
+def test_collective_byte_parsing_synthetic():
+    txt = """
+HloModule m
+
+%region_0.1 (a: f32[4]) -> f32[4] {
+  %x = f32[4]{0} parameter(0)
+  ROOT %r = f32[4]{0} add(%x, %x)
+}
+
+ENTRY %main (p: f32[1024,512]) -> f32[1024,512] {
+  %p0 = f32[1024,512]{1,0} parameter(0)
+  %ag = f32[2048,512]{1,0} all-gather(%p0), replica_groups={}, dimensions={0}
+  %ar = bf16[1024,512]{1,0} all-reduce(%p0), to_apply=%region_0.1
+  %cp = f32[1024,512]{1,0} collective-permute(%p0), source_target_pairs={{0,1}}
+  ROOT %out = f32[1024,512]{1,0} add(%p0, %p0)
+}
+"""
+    mc = H.analyze(txt)
+    assert mc.coll_bytes["all-gather"] == 2048 * 512 * 4
+    assert mc.coll_bytes["all-reduce"] == 1024 * 512 * 2
+    assert mc.coll_bytes["collective-permute"] == 1024 * 512 * 4
+    eff = H.effective_collective_bytes(mc.coll_bytes)
+    assert eff == (2048 * 512 * 4 + 2 * 1024 * 512 * 2 + 1024 * 512 * 4)
+
+
+def test_nested_while_multiplies():
+    def f(x, ws):
+        def outer(c, w):
+            def inner(c2, _):
+                return jnp.tanh(c2 @ w), None
+            c2, _ = jax.lax.scan(inner, c, None, length=5)
+            return c2, None
+        y, _ = jax.lax.scan(outer, x, ws)
+        return y.sum()
+
+    x = jax.ShapeDtypeStruct((32, 64), jnp.float32)
+    ws = jax.ShapeDtypeStruct((3, 64, 64), jnp.float32)
+    txt = jax.jit(f).lower(x, ws).compile().as_text()
+    mc = H.analyze(txt)
+    analytic = 3 * 5 * 2 * 32 * 64 * 64
+    assert abs(mc.flops - analytic) / analytic < 0.05

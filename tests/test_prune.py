@@ -1,0 +1,132 @@
+"""RNG pruning: sequential-reference equality + the paper's theorems as
+hypothesis property tests (Theorem 1: R-prefix, Theorem 2: M-prefix) and
+EPO soundness (mPrune == Prune when alphas ascend)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import prune
+
+
+def prune_python(cand_dist, pair_dist, M, alpha):
+    """Literal Algorithm 2 (returns accepted index list)."""
+    pn = []
+    for j in range(len(cand_dist)):
+        if len(pn) >= M:
+            break
+        dominated = False
+        for w in pn:
+            if alpha * pair_dist[j, w] < cand_dist[j]:
+                dominated = True
+        if not dominated:
+            pn.append(j)
+    return pn
+
+
+def _mk_case(r, n_cand, d=8):
+    pts = r.normal(size=(n_cand, d))
+    u = r.normal(size=(d,))
+    cd = np.sum((pts - u) ** 2, axis=1)
+    order = np.argsort(cd)
+    pts, cd = pts[order], cd[order]
+    pd = np.sum((pts[:, None] - pts[None, :]) ** 2, axis=2)
+    return cd.astype(np.float32), pd.astype(np.float32)
+
+
+@pytest.mark.parametrize("n_cand,M,alpha", [(20, 6, 1.0), (50, 10, 1.2),
+                                            (9, 20, 1.5), (32, 4, 1.0)])
+def test_rng_prune_matches_python(n_cand, M, alpha):
+    r = np.random.default_rng(n_cand * 7 + M)
+    cd, pd = _mk_case(r, n_cand)
+    exp = prune_python(cd, pd, M, alpha)
+    res = prune.rng_prune(
+        jnp.arange(n_cand, dtype=jnp.int32)[None],
+        jnp.asarray(cd)[None], jnp.asarray(pd)[None],
+        jnp.ones((1, n_cand), bool), jnp.int32(M), jnp.float32(alpha),
+        m_max=M)
+    got = np.flatnonzero(np.asarray(res.accepted[0])).tolist()
+    assert got == exp
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 30), st.integers(1, 12), st.integers(0, 10_000),
+       st.floats(1.0, 2.0))
+def test_theorem2_m_prefix(n_cand, m_small, seed, alpha):
+    """PN(M) ⊆ PN(M') for M <= M' (Theorem 2)."""
+    r = np.random.default_rng(seed)
+    cd, pd = _mk_case(r, n_cand)
+    small = set(prune_python(cd, pd, m_small, alpha))
+    big = set(prune_python(cd, pd, m_small + r.integers(0, 10), alpha))
+    assert small <= big
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.integers(2, 30), st.integers(1, 20), st.integers(0, 10_000),
+       st.floats(1.0, 2.0))
+def test_theorem1_r_prefix(n_cand, r_small, seed, alpha):
+    """PN over candidate prefix R ⊆ PN over prefix R' >= R (Theorem 1)."""
+    r = np.random.default_rng(seed)
+    cd, pd = _mk_case(r, n_cand)
+    M = 6
+    r_small = min(r_small, n_cand)
+    r_big = min(r_small + int(r.integers(0, 10)), n_cand)
+    small = set(prune_python(cd[:r_small], pd[:r_small, :r_small], M, alpha))
+    big = set(prune_python(cd[:r_big], pd[:r_big, :r_big], M, alpha))
+    assert small <= big
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(5, 25), st.integers(0, 10_000),
+       st.floats(1.0, 1.5), st.floats(0.0, 0.5))
+def test_epo_soundness(n_cand, seed, alpha_lo, alpha_gap):
+    """mPrune with the pair-skip produces EXACTLY plain Prune's result when
+    the group ascends in alpha (DESIGN.md §2 item 4)."""
+    r = np.random.default_rng(seed)
+    d = 8
+    pts = r.normal(size=(60, d)).astype(np.float32)
+    data = jnp.asarray(pts)
+    ids = np.sort(r.choice(60, size=n_cand, replace=False))
+    u = r.normal(size=(d,)).astype(np.float32)
+    cd = np.sum((pts[ids] - u) ** 2, axis=1)
+    order = np.argsort(cd)
+    ids, cd = ids[order], cd[order]
+
+    m_lims = jnp.array([5, 7], jnp.int32)
+    alphas = jnp.array([alpha_lo, alpha_lo + alpha_gap], jnp.float32)
+    cand_ids = jnp.asarray(np.stack([ids, ids]), jnp.int32)[:, None, :]
+    cand_dist = jnp.asarray(np.stack([cd, cd]), jnp.float32)[:, None, :]
+    valid = jnp.ones_like(cand_ids, dtype=bool)
+
+    with_epo, _, nc_epo = prune.multi_prune(
+        data, cand_ids, cand_dist, valid, m_lims, alphas, m_max=8,
+        use_epo=True)
+    without, _, nc_plain = prune.multi_prune(
+        data, cand_ids, cand_dist, valid, m_lims, alphas, m_max=8,
+        use_epo=False)
+    for a, b in zip(with_epo, without):
+        np.testing.assert_array_equal(np.asarray(a.ids), np.asarray(b.ids))
+    assert int(nc_epo) <= int(nc_plain)
+
+
+def test_epo_saves_checks_on_overlapping_candidates():
+    r = np.random.default_rng(3)
+    # candidates on shells around u => pairwise distances exceed distances
+    # to u => PN fills up => graph-2 re-checks of accepted pairs are skipped
+    u = np.zeros(8, np.float32)
+    dirs = r.normal(size=(30, 8))
+    dirs /= np.linalg.norm(dirs, axis=1, keepdims=True)
+    radii = np.linspace(1.0, 2.0, 30)[:, None]
+    pts = (dirs * radii).astype(np.float32)
+    data = jnp.asarray(np.concatenate([pts, u[None]]))
+    cd = np.sum(pts ** 2, axis=1)
+    order = np.argsort(cd)
+    ids = np.arange(30)[order]
+    cand_ids = jnp.asarray(np.stack([ids, ids]), jnp.int32)[:, None, :]
+    cand_dist = jnp.asarray(np.stack([cd[order]] * 2))[:, None, :]
+    valid = jnp.ones_like(cand_ids, dtype=bool)
+    _, nb, nc = prune.multi_prune(
+        data, cand_ids, cand_dist, valid,
+        jnp.array([8, 8], jnp.int32), jnp.array([1.0, 1.0], jnp.float32),
+        m_max=8, use_epo=True)
+    assert int(nc) < int(nb)        # identical candidate lists: big savings

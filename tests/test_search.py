@@ -1,0 +1,103 @@
+"""Beam search: reference equality, ESO cache invariance, counter laws."""
+import heapq
+
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import knng, search
+from repro.core.graph import INVALID
+
+
+def kanns_python(adj, data, q, ef, ep):
+    """Literal Algorithm 1 (returns sorted [(dist, id)] of pool)."""
+    d0 = float(np.sum((data[ep] - q) ** 2))
+    pool = [(d0, ep)]
+    expanded = set()
+    visited = {ep}
+    n_dist = 1
+    while True:
+        pool.sort()
+        pool = pool[:ef]
+        u = next(((dd, ii) for dd, ii in pool if ii not in expanded), None)
+        if u is None:
+            break
+        expanded.add(u[1])
+        for v in adj[u[1]]:
+            if v < 0 or v in visited:
+                continue
+            visited.add(v)
+            n_dist += 1
+            pool.append((float(np.sum((data[v] - q) ** 2)), v))
+    pool.sort()
+    return pool[:ef], n_dist
+
+
+@pytest.mark.parametrize("ef", [4, 10, 25])
+def test_beam_search_matches_python(small_dataset, ef):
+    data, queries = small_dataset
+    adj, _ = knng.build_knng(data, 12)
+    adj_np = np.asarray(adj)
+    data_np = np.asarray(data)
+    res = search.knn_search(adj, data, queries[:10], min(ef, 5), ef, 0)
+    for qi in range(10):
+        exp, _ = kanns_python(adj_np, data_np, np.asarray(queries[qi]),
+                              ef, 0)
+        got_ids = [int(i) for i in np.asarray(res.pool_ids[qi]) if i >= 0]
+        exp_ids = [i for _, i in exp][:len(got_ids)]
+        assert got_ids == exp_ids[:min(ef, 5)][:len(got_ids)]
+
+
+def test_eso_cache_does_not_change_results(small_dataset):
+    """Pools identical with and without the shared V_delta (ESO is a pure
+    caching optimization); computed <= fresh with equality when m == 1."""
+    data, queries = small_dataset
+    n = data.shape[0]
+    adj, _ = knng.build_knng(data, 10)
+    pad = jnp.full((n, 4), INVALID, jnp.int32)
+    g2 = jnp.stack([adj, jnp.concatenate([adj[:, :6], pad], axis=1)])
+    b = 16
+    qids = jnp.full((b,), INVALID, jnp.int32)
+    row = jnp.ones((b,), bool)
+    ef = jnp.array([20, 12], jnp.int32)
+    ep = jnp.zeros((b, 2), jnp.int32)
+    kw = dict(ef_max=20, max_hops=80)
+    r1 = search.beam_search(g2, data, queries[:b], qids, row, ef, ep,
+                            share_cache=True, **kw)
+    r2 = search.beam_search(g2, data, queries[:b], qids, row, ef, ep,
+                            share_cache=False, **kw)
+    np.testing.assert_array_equal(np.asarray(r1.pool_ids),
+                                  np.asarray(r2.pool_ids))
+    assert int(r1.n_fresh) == int(r2.n_fresh)
+    assert int(r1.n_computed) < int(r1.n_fresh)      # overlap ⇒ cache hits
+    assert int(r2.n_computed) == int(r2.n_fresh)
+
+
+def test_counters_union_bound(small_dataset):
+    """#computed with ESO == |union of (q, v) pairs| — never more than the
+    per-graph sum, never less than the largest single graph."""
+    data, queries = small_dataset
+    adj, _ = knng.build_knng(data, 10)
+    g2 = jnp.stack([adj, adj])               # identical graphs: full overlap
+    b = 8
+    qids = jnp.full((b,), INVALID, jnp.int32)
+    row = jnp.ones((b,), bool)
+    ef = jnp.array([15, 15], jnp.int32)
+    ep = jnp.zeros((b, 2), jnp.int32)
+    r = search.beam_search(g2, data, queries[:b], qids, row, ef, ep,
+                           ef_max=15, max_hops=60, share_cache=True)
+    # identical graphs: every distance is computed exactly once
+    assert int(r.n_computed) * 2 == int(r.n_fresh)
+
+
+def test_padding_rows_do_no_work(small_dataset):
+    data, queries = small_dataset
+    adj, _ = knng.build_knng(data, 10)
+    b = 8
+    qids = jnp.full((b,), INVALID, jnp.int32)
+    row = jnp.zeros((b,), bool).at[0].set(True)
+    r = search.beam_search(adj[None], data, queries[:b], qids, row,
+                           jnp.array([10], jnp.int32),
+                           jnp.zeros((b, 1), jnp.int32),
+                           ef_max=10, max_hops=50, share_cache=False)
+    assert bool(jnp.all(r.pool_ids[1:] == INVALID))

@@ -1,0 +1,143 @@
+"""Tuner stack: GP regression, hypervolume, EHVI/mEHVI, tuning loop modes."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core.tuner import ehvi, estimator, fastpgt, gp, pareto
+from repro.core.tuner import params as pspace
+
+
+def test_gp_interpolates():
+    r = np.random.default_rng(0)
+    x = r.random((30, 2))
+    y = np.sin(3 * x[:, 0]) + x[:, 1] ** 2
+    g = gp.fit(x, y)
+    mean, var = gp.predict(g, x)
+    np.testing.assert_allclose(np.asarray(mean), y, atol=0.1)
+    xq = r.random((10, 2))
+    mean_q, var_q = gp.predict(g, xq)
+    yq = np.sin(3 * xq[:, 0]) + xq[:, 1] ** 2
+    assert float(np.mean(np.abs(np.asarray(mean_q) - yq))) < 0.25
+    assert bool(np.all(np.asarray(var_q) >= 0))
+
+
+def test_gp_posterior_sampling_moments():
+    r = np.random.default_rng(1)
+    x = r.random((20, 2))
+    y = x[:, 0] * 2
+    g = gp.fit(x, y)
+    xq = r.random((5, 2))
+    s = np.asarray(gp.sample(g, xq, jax.random.PRNGKey(0), 2000))
+    mean, var = gp.predict(g, xq)
+    np.testing.assert_allclose(s.mean(0), np.asarray(mean), atol=0.1)
+
+
+def test_hypervolume_known_values():
+    ref = np.array([0.0, 0.0])
+    pts = np.array([[1.0, 1.0]])
+    assert pareto.hypervolume_2d(pts, ref) == pytest.approx(1.0)
+    pts = np.array([[2.0, 1.0], [1.0, 2.0]])
+    assert pareto.hypervolume_2d(pts, ref) == pytest.approx(3.0)
+    # dominated point adds nothing
+    pts = np.array([[2.0, 1.0], [1.0, 2.0], [0.5, 0.5]])
+    assert pareto.hypervolume_2d(pts, ref) == pytest.approx(3.0)
+
+
+def test_non_dominated_mask():
+    pts = np.array([[1, 5], [2, 4], [3, 3], [2, 2], [0, 6]])
+    mask = pareto.non_dominated_mask(pts)
+    np.testing.assert_array_equal(mask, [True, True, True, False, True])
+
+
+def test_balanced_point():
+    pts = np.array([[10.0, 0.1], [5.0, 0.5], [1.0, 1.0]])
+    bal = pareto.balanced_point(pts)
+    np.testing.assert_array_equal(bal, [5.0, 0.5])
+
+
+def test_ehvi_prefers_improving_candidates():
+    r = np.random.default_rng(2)
+    x = r.random((12, 2))
+    y1 = x[:, 0]
+    y2 = 1 - x[:, 0]
+    g1 = gp.fit(x, y1)
+    g2 = gp.fit(x, y2)
+    front = pareto.pareto_front(np.stack([y1, y2], 1))
+    ref = np.array([-0.2, -0.2])
+    cands = np.array([[0.95, 0.5], [0.05, 0.5]])
+    scores = ehvi.ehvi_scores(g1, g2, cands, front, ref,
+                              jax.random.PRNGKey(0), n_samples=64)
+    assert scores.shape == (2,)
+    assert np.all(scores >= -1e-9)
+
+
+def test_mehvi_batch_distinct():
+    r = np.random.default_rng(3)
+    x = r.random((10, 2))
+    y = np.stack([x[:, 0], 1 - x[:, 0]], 1)
+    g1 = gp.fit(x, y[:, 0])
+    g2 = gp.fit(x, y[:, 1])
+    front = pareto.pareto_front(y)
+    ref = pareto.default_reference(y)
+    cands = r.random((12, 2))
+    idx = ehvi.select_batch_mehvi(g1, g2, cands, front, ref, 4,
+                                  jax.random.PRNGKey(1), n_samples=16)
+    assert len(idx) == 4 and len(set(idx)) == 4
+
+
+def test_param_space_roundtrip():
+    for pg in ("hnsw", "vamana", "nsg"):
+        sp = pspace.space(pg, scale=0.2)
+        r = np.random.default_rng(0)
+        xs = sp.sample(r, 16)
+        for x in xs:
+            cfg = sp.decode(x)
+            bp = pspace.to_build_params(pg, cfg)
+            assert bp is not None
+        g = sp.grid(3)
+        assert g.shape[1] == sp.d
+
+
+def test_theorem1_r_removed_from_spaces():
+    """Per Theorem 1, R is not a tunable dimension in any space."""
+    for pg in ("hnsw", "vamana", "nsg"):
+        names = [d.name for d in pspace.space(pg).dims]
+        assert "R" not in names
+
+
+@pytest.mark.parametrize("mode", ["random", "random_plus", "grid"])
+def test_tune_modes_smoke(mode):
+    data, queries = estimator.make_dataset(400, 8, 20, seed=1)
+    res = fastpgt.tune("vamana", data, queries, mode=mode, budget=4,
+                       batch=2, seed=0, scale=0.1, build_batch_size=256,
+                       ef_grid=[10, 20])
+    assert len(res.objectives) == 4
+    assert res.t_estimate > 0
+    assert res.counters.total > 0
+    if mode == "random_plus":
+        assert res.counters.total < res.counters.total_base
+
+
+def test_tune_fastpgt_vs_vdtuner_dist_savings():
+    data, queries = estimator.make_dataset(500, 8, 20, seed=2)
+    kw = dict(budget=6, batch=3, seed=3, scale=0.1, build_batch_size=256,
+              ef_grid=[10, 20], mc_samples=16)
+    fast = fastpgt.tune("vamana", data, queries, mode="fastpgt", **kw)
+    slow = fastpgt.tune("vamana", data, queries, mode="vdtuner", **kw)
+    assert fast.counters.total < slow.counters.total
+    assert fast.best_qps_at(0.0) > 0
+
+
+def test_estimator_groups_match_singles():
+    """Grouped estimation returns the same (recall) objectives as
+    independent estimation — sharing never changes measured quality."""
+    data, queries = estimator.make_dataset(400, 8, 30, seed=5)
+    from repro.core import eval as evallib
+    gt = evallib.ground_truth(data, queries, 10)
+    cfgs = [{"L": 24, "M": 8, "alpha": 1.1}, {"L": 32, "M": 12, "alpha": 1.3}]
+    grouped = estimator.estimate("vamana", data, queries, gt, cfgs,
+                                 group_size=2, ef_grid=[20])
+    single = estimator.estimate("vamana", data, queries, gt, cfgs,
+                                group_size=1, ef_grid=[20])
+    for a, b in zip(grouped.estimates, single.estimates):
+        assert a.recall == pytest.approx(b.recall, abs=1e-6)
