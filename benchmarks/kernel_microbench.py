@@ -34,6 +34,13 @@ def run() -> list[str]:
         rows.append(common.row(
             f"kernel/l2_distance/{nq}x{nx}x{d}", sec * 1e6,
             f"gflops={gflops:.1f}"))
+        for metric in ("ip", "cosine"):
+            f = jax.jit(lambda q, x, m=metric: ops.pairwise_distance(q, x, m))
+            sec = _time(f, q, x)
+            gflops = 2 * nq * nx * d / sec / 1e9
+            rows.append(common.row(
+                f"kernel/{metric}_distance/{nq}x{nx}x{d}", sec * 1e6,
+                f"gflops={gflops:.1f}"))
     for b, h, s, dh in [(2, 4, 1024, 64), (1, 8, 4096, 128)]:
         q = jnp.asarray(r.normal(size=(b, h, s, dh)), jnp.float32)
         f = jax.jit(lambda q: ops.flash_attention(q, q, q, causal=True))

@@ -39,19 +39,21 @@ def main():
     values = jnp.asarray(r.normal(size=(n_ctx, dh)), jnp.float32)
     q = keys[r.integers(0, n_ctx, 16)] * 4.0      # concentrated attention
 
-    # tune the index construction parameters with FastPGT (tiny budget)
-    print("\ntuning the KV index with FastPGT ...")
+    # tune the index construction parameters with FastPGT (tiny budget).
+    # Attention ranks keys by inner product, so tune and build under the
+    # native "ip" metric — no normalize-and-L2 reduction anywhere.
+    print("\ntuning the KV index with FastPGT (metric=ip) ...")
     res = fastpgt.tune(
         "vamana", keys, keys[:64], mode="fastpgt", budget=4, batch=2,
-        seed=0, scale=0.1, build_batch_size=512, ef_grid=[16, 32],
-        mc_samples=8)
+        seed=0, scale=0.2, build_batch_size=512, ef_grid=[16, 32],
+        mc_samples=8, metric="ip")
     best = max(zip(res.cfgs, res.objectives), key=lambda t: t[1][1])
     print(f"best cfg: {best[0]} -> recall={best[1][1]:.3f}")
 
     bp = vamana.VamanaParams(L=best[0]["L"], M=best[0]["M"],
                              alpha=best[0]["alpha"])
-    idx = retrieval.build_index(keys, values, bp)
-    approx, sr = retrieval.retrieval_attention(idx, q, top_k=48, ef=64)
+    idx = retrieval.build_index(keys, values, bp, metric="ip")
+    approx, sr = retrieval.retrieval_attention(idx, q, top_k=48, ef=96)
     exact = retrieval.exact_attention(keys, values, q)
     cos = jnp.sum(approx * exact, -1) / (
         jnp.linalg.norm(approx, axis=-1) * jnp.linalg.norm(exact, axis=-1))

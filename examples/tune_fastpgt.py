@@ -14,6 +14,8 @@ def main():
     ap.add_argument("--pg", default=PGW.pg,
                     choices=["hnsw", "vamana", "nsg"])
     ap.add_argument("--budget", type=int, default=12)
+    ap.add_argument("--metric", default="l2",
+                    choices=["l2", "ip", "cosine"])
     ap.add_argument("--batch", type=int, default=6)
     ap.add_argument("--n", type=int, default=PGW.n // 2)
     args = ap.parse_args()
@@ -21,10 +23,11 @@ def main():
     data, queries = estimator.make_dataset(args.n, PGW.d, PGW.n_queries,
                                            seed=0)
     kw = dict(budget=args.budget, batch=args.batch, k=PGW.k, seed=0,
-              scale=0.15, build_batch_size=512, ef_grid=[10, 20, 40])
+              scale=0.15, build_batch_size=512, ef_grid=[10, 20, 40],
+              metric=args.metric)
 
-    print(f"=== FastPGT tuning {args.pg} (budget {args.budget}, "
-          f"batch {args.batch}) ===")
+    print(f"=== FastPGT tuning {args.pg} / {args.metric} "
+          f"(budget {args.budget}, batch {args.batch}) ===")
     fast = fastpgt.tune(args.pg, data, queries, mode="fastpgt", **kw)
     print(fast.summary())
 

@@ -49,7 +49,7 @@ def _group_ranks(sorted_dst: jax.Array) -> jax.Array:
     return idx - start_idx
 
 
-@functools.partial(jax.jit, static_argnames=("k_in", "m_max"))
+@functools.partial(jax.jit, static_argnames=("k_in", "m_max", "metric"))
 def add_reverse_edges(
     data: jax.Array,
     adj_ids: jax.Array,      # int32[n, M_max]
@@ -63,6 +63,7 @@ def add_reverse_edges(
     *,
     k_in: int,
     m_max: int,
+    metric: str = "l2",
 ) -> ReverseResult:
     n = adj_ids.shape[0]
     b, mx = fwd_ids.shape
@@ -116,7 +117,7 @@ def add_reverse_edges(
 
     # ---- 4. overflow rows re-prune (Alg. 2); others append -----------------
     overflow = n_cand > m_limit                                  # (E,)
-    pd = pairwise_candidate_dist(data, cand_ids_m)
+    pd = pairwise_candidate_dist(data, cand_ids_m, metric)
     pruned = rng_prune(cand_ids_m, cand_dist, pd, cvalid & overflow[:, None],
                        m_limit, alpha, None, m_max=m_max)
     app_ids = jnp.where(cvalid, cand_ids_m, INVALID)[:, :m_max]
@@ -128,3 +129,38 @@ def add_reverse_edges(
     adj_ids = adj_ids.at[wr].set(new_ids, mode="drop")
     adj_dist = adj_dist.at[wr].set(new_dist, mode="drop")
     return ReverseResult(adj_ids, adj_dist, pruned.n_checks, n_dropped)
+
+
+def commit_group(
+    data,
+    adj_ids,      # int32[m, n, M_max] stacked adjacency (one graph per row)
+    adj_dist,     # float32[m, n, M_max]
+    src,          # int32[b] inserted nodes
+    pruned,       # list[PruneResult] per graph, from multi_prune
+    row_mask,     # bool[b]
+    m_limits,     # int32[m] per-graph out-degree limits
+    alphas,       # float32[m]
+    counters,     # BuildCounters, mutated in place (prune/prune_base)
+    *,
+    k_in: int,
+    m_max: int,
+    metric: str = "l2",
+):
+    """Forward + reverse commit for all m graphs of one insertion batch.
+
+    The scatter_rows -> add_reverse_edges -> counter-update loop every
+    multi-builder runs after multi_prune, factored out so HNSW / Vamana /
+    NSG share one implementation.  Returns the updated (ids, dist) stack.
+    """
+    new_ids, new_dist = adj_ids, adj_dist
+    for i, pr in enumerate(pruned):
+        ai, ad = scatter_rows(new_ids[i], new_dist[i], src, pr.ids, pr.dist,
+                              row_mask)
+        rev = add_reverse_edges(
+            data, ai, ad, src, pr.ids, pr.dist, row_mask,
+            m_limits[i], alphas[i], k_in=k_in, m_max=m_max, metric=metric)
+        counters.prune_base += int(rev.n_checks)
+        counters.prune += int(rev.n_checks)
+        new_ids = new_ids.at[i].set(rev.adj_ids)
+        new_dist = new_dist.at[i].set(rev.adj_dist)
+    return new_ids, new_dist

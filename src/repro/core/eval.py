@@ -35,8 +35,10 @@ def recall_at_k(found_ids: jax.Array, gt_ids: jax.Array) -> float:
     return float(jnp.mean(jnp.sum(hits, axis=-1) / k))
 
 
-def ground_truth(data, queries, k: int) -> jax.Array:
-    ids, _ = knng.exact_knn(data, queries, k)
+def ground_truth(data, queries, k: int, metric: str = "l2") -> jax.Array:
+    """Metric-correct exact top-k ids (recall denominators must match the
+    metric the index ranks by, or cross-metric frontiers aren't comparable)."""
+    ids, _ = knng.exact_knn(data, queries, k, metric=metric)
     return ids
 
 
@@ -72,11 +74,11 @@ def evaluate_search_fn(
 
 
 def flat_graph_search_fn(g: MultiGraph, graph_idx: int, data, entry: int,
-                         k: int):
+                         k: int, metric: str = "l2"):
     """Search closure for single-layer graphs (Vamana/NSG)."""
     def fn(queries, ef):
         return search.knn_search(
-            g.ids[graph_idx], data, queries, k, ef, entry)
+            g.ids[graph_idx], data, queries, k, ef, entry, metric=metric)
     return fn
 
 

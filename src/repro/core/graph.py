@@ -13,6 +13,8 @@ from typing import Any
 import jax
 import jax.numpy as jnp
 
+from repro.core import metric as metric_lib
+
 INVALID = -1
 INF = jnp.inf
 
@@ -54,11 +56,13 @@ def degree(g: MultiGraph) -> jax.Array:
     return jnp.sum(g.ids != INVALID, axis=-1).astype(jnp.int32)
 
 
-def medoid(data: jax.Array) -> jax.Array:
-    """Index of the vector closest to the dataset centroid."""
+def medoid(data: jax.Array, metric: str = "l2") -> jax.Array:
+    """Index of the vector closest (under ``metric``) to the dataset centroid."""
+    met = metric_lib.resolve(metric)
+    data = met.prepare(data)
     c = jnp.mean(data, axis=0, keepdims=True)
-    diff = data - c
-    return jnp.argmin(jnp.sum(diff * diff, axis=-1)).astype(jnp.int32)
+    d = metric_lib.kernel_distance(data, c, met.kernel)
+    return jnp.argmin(d).astype(jnp.int32)
 
 
 def sort_edges(ids: jax.Array, dist: jax.Array) -> tuple[jax.Array, jax.Array]:
@@ -100,12 +104,14 @@ def random_knng_ids(seed: int, n: int, degree: int) -> jax.Array:
     return jnp.where(ids == rows, (ids + 1) % n, ids)
 
 
-def with_distances(data: jax.Array, ids: jax.Array) -> jax.Array:
+def with_distances(data: jax.Array, ids: jax.Array,
+                   metric: str = "l2") -> jax.Array:
     """Edge distances float32[..., k] for id matrix int32[n, k] (INVALID->inf)."""
+    met = metric_lib.resolve(metric)
+    data = met.prepare(data)
     src = data[jnp.arange(ids.shape[0])[:, None]]          # (n, 1, d) via bcast
     dst = data[jnp.clip(ids, 0, None)]                     # (n, k, d)
-    diff = dst - src
-    d2 = jnp.sum(diff * diff, axis=-1)
+    d2 = metric_lib.kernel_distance(dst, src, met.kernel)
     return jnp.where(ids == INVALID, INF, d2).astype(jnp.float32)
 
 

@@ -19,6 +19,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import commit, graph, prune, search
+from repro.core import metric as metric_lib
 from repro.core.counters import BuildCounters
 from repro.core.graph import INVALID
 
@@ -46,6 +47,7 @@ class HNSWBuildResult:
     g: HNSWGraphs
     counters: BuildCounters
     params: list
+    metric: str = "l2"          # metric the graphs were built (and rank) under
 
 
 def _mk_entry(b: int, m: int, ep: int) -> jnp.ndarray:
@@ -63,7 +65,11 @@ def build_multi_hnsw(
     k_in: int = 16,
     max_level: int = 4,
     max_hops: int | None = None,
+    metric: str = "l2",
 ) -> HNSWBuildResult:
+    met = metric_lib.resolve(metric)
+    data = met.prepare(data)      # normalize ONCE for cosine (no-op otherwise)
+    kform = met.kernel
     n, _ = data.shape
     params = [p.clamped(n) for p in params]
     m = len(params)
@@ -115,7 +121,8 @@ def build_multi_hnsw(
                 res = search.beam_search(
                     lids[layer], data, queries, qids, jnp.array(desc_np),
                     ones, entry, cache_d, cache_has,
-                    ef_max=1, max_hops=hops, share_cache=use_eso)
+                    ef_max=1, max_hops=hops, share_cache=use_eso,
+                    metric=kform)
                 cache_d, cache_has = res.cache_d, res.cache_has
                 ctr.search_base += int(res.n_fresh)
                 ctr.search += int(res.n_computed)
@@ -128,7 +135,8 @@ def build_multi_hnsw(
                 res = search.beam_search(
                     lids[layer], data, queries, qids, ins_mask,
                     efc, entry, cache_d, cache_has,
-                    ef_max=efc_max, max_hops=hops, share_cache=use_eso)
+                    ef_max=efc_max, max_hops=hops, share_cache=use_eso,
+                    metric=kform)
                 cache_d, cache_has = res.cache_d, res.cache_has
                 ctr.search_base += int(res.n_fresh)
                 ctr.search += int(res.n_computed)
@@ -141,25 +149,19 @@ def build_multi_hnsw(
                 valid = cand_ids != INVALID
                 pruned, nb, nc = prune.multi_prune(
                     data, cand_ids, cand_dist, valid, M, alpha1,
-                    m_max=M_max, use_epo=use_epo)
+                    m_max=M_max, use_epo=use_epo, metric=kform)
                 ctr.prune_base += int(nb)
                 ctr.prune += int(nc)
-                for i in range(m):
-                    ai, ad = commit.scatter_rows(
-                        lids[layer, i], ldist[layer, i], u,
-                        pruned[i].ids, pruned[i].dist, ins_mask)
-                    rev = commit.add_reverse_edges(
-                        data, ai, ad, u, pruned[i].ids, pruned[i].dist,
-                        ins_mask, M[i], alpha1[i], k_in=k_in, m_max=M_max)
-                    ctr.prune_base += int(rev.n_checks)
-                    ctr.prune += int(rev.n_checks)
-                    lids = lids.at[layer, i].set(rev.adj_ids)
-                    ldist = ldist.at[layer, i].set(rev.adj_dist)
+                nl, nd = commit.commit_group(
+                    data, lids[layer], ldist[layer], u, pruned, ins_mask,
+                    M, alpha1, ctr, k_in=k_in, m_max=M_max, metric=kform)
+                lids = lids.at[layer].set(nl)
+                ldist = ldist.at[layer].set(nd)
             entry = next_entry
 
     g = HNSWGraphs(layer_ids=lids, layer_dist=ldist, levels=levels,
                    entry=ep, top=top)
-    return HNSWBuildResult(g=g, counters=ctr, params=params)
+    return HNSWBuildResult(g=g, counters=ctr, params=params, metric=met.name)
 
 
 def build_hnsw(data, p: HNSWParams, **kw) -> HNSWBuildResult:
@@ -169,8 +171,13 @@ def build_hnsw(data, p: HNSWParams, **kw) -> HNSWBuildResult:
 
 
 def hnsw_search(g: HNSWGraphs, graph_idx: int, data, queries, k: int, ef: int,
-                max_hops: int | None = None) -> search.SearchResult:
+                max_hops: int | None = None, *,
+                metric: str = "l2") -> search.SearchResult:
     """Layered k-ANNS on one of the m built HNSW graphs."""
+    met = metric_lib.resolve(metric)
+    data = met.prepare(data)          # once, not per layer
+    queries = met.prepare(queries)
+    metric = met.kernel
     b = queries.shape[0]
     qids = jnp.full((b,), INVALID, jnp.int32)
     row = jnp.ones((b,), bool)
@@ -181,14 +188,14 @@ def hnsw_search(g: HNSWGraphs, graph_idx: int, data, queries, k: int, ef: int,
         res = search.beam_search(
             g.layer_ids[layer, graph_idx][None], data, queries, qids, row,
             jnp.ones((1,), jnp.int32), entry,
-            ef_max=1, max_hops=hops, share_cache=False)
+            ef_max=1, max_hops=hops, share_cache=False, metric=metric)
         got = res.pool_ids[:, :, 0]
         entry = jnp.where(got != INVALID, got, entry)
         nf += int(res.n_fresh); nc += int(res.n_computed)
     res = search.beam_search(
         g.layer_ids[0, graph_idx][None], data, queries, qids, row,
         jnp.array([ef], jnp.int32), entry,
-        ef_max=ef, max_hops=hops, share_cache=False)
+        ef_max=ef, max_hops=hops, share_cache=False, metric=metric)
     return search.SearchResult(
         res.pool_ids[:, 0, :k], res.pool_dist[:, 0, :k],
         res.n_fresh + nf, res.n_computed + nc, res.hops,

@@ -10,6 +10,7 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import metric as metric_lib
 from repro.kernels import ops
 
 
@@ -20,19 +21,23 @@ def exact_knn(
     *,
     block: int = 1024,
     exclude_self: bool = False,
+    metric: str = "l2",
 ) -> tuple[jax.Array, jax.Array]:
-    """Exact k-NN of ``queries`` against ``data``.
+    """Exact k-NN of ``queries`` against ``data`` under ``metric``.
 
     Returns (ids int32[nq, k], dist float32[nq, k]) ascending by distance.
-    ``exclude_self`` masks the zero-distance identity match when queries are
-    the dataset itself (KNNG construction).
+    ``exclude_self`` masks the self-identity match when queries are the
+    dataset itself (KNNG construction).
     """
+    met = metric_lib.resolve(metric)
+    data = met.prepare(data)          # once, not per query block
+    queries = met.prepare(queries)
     n = data.shape[0]
     nq = queries.shape[0]
     kk = min(k + (1 if exclude_self else 0), n)
 
     def one_block(qb, qoff):
-        d2 = ops.l2_distance(qb, data)                     # (b, n)
+        d2 = ops.pairwise_distance(qb, data, met.kernel)   # (b, n)
         if exclude_self:
             rows = qoff + jnp.arange(qb.shape[0])
             cols = jnp.arange(n)
@@ -51,10 +56,11 @@ def exact_knn(
     return ids, dist
 
 
-def build_knng(data: jax.Array, k: int, *, block: int = 1024
-               ) -> tuple[jax.Array, jax.Array]:
+def build_knng(data: jax.Array, k: int, *, block: int = 1024,
+               metric: str = "l2") -> tuple[jax.Array, jax.Array]:
     """Exact KNNG over ``data`` (self-match excluded)."""
-    return exact_knn(data, data, k, block=block, exclude_self=True)
+    return exact_knn(data, data, k, block=block, exclude_self=True,
+                     metric=metric)
 
 
 def knng_dist_count(n: int, nq: int | None = None) -> int:

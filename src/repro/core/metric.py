@@ -1,0 +1,109 @@
+"""First-class distance metrics: L2, inner product, cosine.
+
+Every layer of the stack (kernels -> search -> builders -> tuner -> serving)
+ranks vectors by a *distance* (smaller = closer).  This module fixes the
+similarity->distance convention once:
+
+  l2      d(q, x) = ||q - x||^2                       (squared L2, >= 0)
+  ip      d(q, x) = 1 - <q, x>                        (hnswlib convention)
+  cosine  d(q, x) = 1 - cos(q, x) = 1 - <q~, x~>      (in [0, 2])
+
+Monotone-transform notes:
+  * ``1 - s`` is strictly decreasing in the similarity ``s``, so argmin over
+    ip/cosine distance is exactly argmax over inner product / cosine
+    similarity — rankings, top-k sets and Recall@k are unaffected by the
+    affine shift (the +1 only keeps cosine distances non-negative, which the
+    alpha-pruning rule ``alpha * d(v, w) < d(u, v)`` relies on: scaling by
+    ``alpha >= 1`` must weaken, not strengthen, domination).
+  * cosine reduces to ip on unit-normalized vectors, so the fused matmul
+    kernel serves both; normalization happens ONCE at the data boundary
+    (``Metric.prepare``), never inside the kernels or the search loop.
+  * raw ip distance can be negative (unbounded similarity); pools pad with
+    +inf so merges need no special-casing.
+
+Only two *kernel forms* exist ("l2" and "ip"); ``Metric.kernel`` names the
+form and ``Metric.prepare`` performs any required pre-transform.  Builders
+resolve their metric once, prepare the dataset once, and thread the kernel
+form through search/prune/commit — so the hot loops never re-normalize.
+"""
+from __future__ import annotations
+
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+
+KERNEL_FORMS = ("l2", "ip")
+
+
+def normalize(x: jax.Array, *, eps: float = 1e-12) -> jax.Array:
+    """Unit-normalize along the last axis (zero vectors stay zero-safe)."""
+    n = jnp.linalg.norm(x, axis=-1, keepdims=True)
+    return x / jnp.maximum(n, eps)
+
+
+def kernel_distance(a: jax.Array, b: jax.Array, kernel: str) -> jax.Array:
+    """Distance along the last axis with broadcasting, per kernel form.
+
+    Host-side elementwise helper shared by medoid / edge-distance / oracle
+    sites; the pairwise hot paths (Pallas kernels, matmul-formulated
+    references) keep their own MXU/BLAS-shaped implementations of the same
+    convention.
+    """
+    if kernel == "ip":
+        return 1.0 - jnp.sum(a * b, axis=-1)
+    diff = a - b
+    return jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0)
+
+
+@dataclasses.dataclass(frozen=True)
+class Metric:
+    """A distance metric the whole stack understands.
+
+    Attributes:
+      name:      public name ("l2" | "ip" | "cosine" | registered custom).
+      kernel:    fused-kernel form computing the distance ("l2" or "ip").
+      normalize: vectors must be unit-normalized before kernel calls;
+                 ``prepare`` applies it (idempotent on unit vectors).
+    """
+    name: str
+    kernel: str
+    normalize: bool = False
+
+    def __post_init__(self):
+        if self.kernel not in KERNEL_FORMS:
+            raise ValueError(
+                f"kernel form {self.kernel!r} not in {KERNEL_FORMS}")
+
+    def prepare(self, x: jax.Array) -> jax.Array:
+        """One-time data-boundary transform (unit-normalize for cosine)."""
+        return normalize(x) if self.normalize else x
+
+
+L2 = Metric("l2", "l2")
+IP = Metric("ip", "ip")
+COSINE = Metric("cosine", "ip", normalize=True)
+
+_REGISTRY: dict[str, Metric] = {m.name: m for m in (L2, IP, COSINE)}
+
+
+def register(metric: Metric) -> Metric:
+    """Add a custom metric to the registry (e.g. a scaled ip variant)."""
+    _REGISTRY[metric.name] = metric
+    return metric
+
+
+def names() -> tuple[str, ...]:
+    return tuple(_REGISTRY)
+
+
+def resolve(metric: "str | Metric") -> Metric:
+    """Accept a Metric or its registered name; reject anything else."""
+    if isinstance(metric, Metric):
+        return metric
+    try:
+        return _REGISTRY[metric]
+    except KeyError:
+        raise ValueError(
+            f"unknown metric {metric!r}; known: {sorted(_REGISTRY)}"
+        ) from None

@@ -18,6 +18,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import commit, graph, knng, prune, search
+from repro.core import metric as metric_lib
 from repro.core.counters import BuildCounters
 from repro.core.graph import INVALID, MultiGraph
 from repro.kernels import ops
@@ -40,6 +41,7 @@ class NSGBuildResult:
     entry: int
     counters: BuildCounters
     params: list
+    metric: str = "l2"          # metric the graph was built (and ranks) under
 
 
 def build_multi_nsg(
@@ -53,8 +55,12 @@ def build_multi_nsg(
     k_in: int = 16,
     max_hops: int | None = None,
     repair_iters: int = 2,
+    metric: str = "l2",
 ) -> NSGBuildResult:
     del seed
+    met = metric_lib.resolve(metric)
+    data = met.prepare(data)      # normalize ONCE for cosine (no-op otherwise)
+    kform = met.kernel
     n, _ = data.shape
     params = [p.clamped(n) for p in params]
     m = len(params)
@@ -68,7 +74,7 @@ def build_multi_nsg(
     hops = max_hops or search.default_max_hops(L_max)
 
     # ---- Initialization: shared exact KNNG at K_max, per-graph prefixes ----
-    knn_ids, knn_dist = knng.build_knng(data, K_max)
+    knn_ids, knn_dist = knng.build_knng(data, K_max, metric=kform)
     init_knng = []
     for p in params:
         dm = jnp.arange(K_max)[None, :] < p.K
@@ -77,7 +83,7 @@ def build_multi_nsg(
     ctr.init_base += m * knng.knng_dist_count(n)
     ctr.init += knng.knng_dist_count(n) if use_eso else ctr.init_base
 
-    ep = int(graph.medoid(data))
+    ep = int(graph.medoid(data, kform))
     g = graph.empty_multigraph(m, n, M_max)
 
     # ---- Search on the static KNNG + prune + commit (batched) --------------
@@ -93,7 +99,7 @@ def build_multi_nsg(
         res = search.beam_search(
             init_stack, data, queries, jnp.where(row_mask, u, INVALID),
             row_mask, L, entry, ef_max=L_max, max_hops=hops,
-            share_cache=use_eso)
+            share_cache=use_eso, metric=kform)
         ctr.search_base += int(res.n_fresh)
         ctr.search += int(res.n_computed)
 
@@ -126,32 +132,24 @@ def build_multi_nsg(
         valid = cand_ids != INVALID
         pruned, nb, nc = prune.multi_prune(
             data, cand_ids, cand_dist, valid, M, alpha1,
-            m_max=M_max, use_epo=use_epo)
+            m_max=M_max, use_epo=use_epo, metric=kform)
         ctr.prune_base += int(nb)
         ctr.prune += int(nc)
 
-        new_ids, new_dist = g.ids, g.dist
-        for i in range(m):
-            ai, ad = commit.scatter_rows(
-                new_ids[i], new_dist[i], u, pruned[i].ids, pruned[i].dist,
-                row_mask)
-            rev = commit.add_reverse_edges(
-                data, ai, ad, u, pruned[i].ids, pruned[i].dist, row_mask,
-                M[i], alpha1[i], k_in=k_in, m_max=M_max)
-            ctr.prune_base += int(rev.n_checks)
-            ctr.prune += int(rev.n_checks)
-            new_ids = new_ids.at[i].set(rev.adj_ids)
-            new_dist = new_dist.at[i].set(rev.adj_dist)
+        new_ids, new_dist = commit.commit_group(
+            data, g.ids, g.dist, u, pruned, row_mask, M, alpha1, ctr,
+            k_in=k_in, m_max=M_max, metric=kform)
         g = MultiGraph(ids=new_ids, dist=new_dist)
 
     # ---- connectivity repair (NSG spanning step, simplified) ---------------
     for _ in range(repair_iters):
-        g, n_fix, n_dist = _repair_connectivity(g, data, ep)
+        g, n_fix, n_dist = _repair_connectivity(g, data, ep, kform)
         ctr.connect += n_dist
         if n_fix == 0:
             break
 
-    return NSGBuildResult(g=g, entry=ep, counters=ctr, params=params)
+    return NSGBuildResult(g=g, entry=ep, counters=ctr, params=params,
+                          metric=met.name)
 
 
 def _bfs_python(ids_i, reach, iters):
@@ -169,7 +167,7 @@ def _bfs_python(ids_i, reach, iters):
     return reach, True
 
 
-def _repair_connectivity(g: MultiGraph, data, ep: int
+def _repair_connectivity(g: MultiGraph, data, ep: int, metric: str = "l2"
                          ) -> tuple[MultiGraph, int, int]:
     """Attach each unreachable node to its nearest reachable node."""
     m, n, M_max = g.ids.shape
@@ -185,7 +183,7 @@ def _repair_connectivity(g: MultiGraph, data, ep: int
         # nearest *reachable* node of each unreachable node (brute force on
         # the unreachable set — small in practice).
         q = data[jnp.array(unreach)]
-        d2 = ops.l2_distance(q, data)                     # (u, n)
+        d2 = ops.pairwise_distance(q, data, metric)       # (u, n)
         d2 = jnp.where(reach[None, :], d2, jnp.inf)
         parent = jnp.argmin(d2, axis=-1).astype(jnp.int32)
         pdist = jnp.min(d2, axis=-1)

@@ -31,6 +31,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import metric as metric_lib
 from repro.core.graph import INVALID
 
 
@@ -42,11 +43,24 @@ class PruneResult(NamedTuple):
     n_checks: jax.Array
 
 
-def pairwise_candidate_dist(data: jax.Array, cand_ids: jax.Array) -> jax.Array:
-    """float32[b, L, L] squared distances among each row's candidates."""
-    c = data[jnp.maximum(cand_ids, 0)].astype(jnp.float32)      # (b, L, d)
+def pairwise_candidate_dist(data: jax.Array, cand_ids: jax.Array,
+                            metric: str = "l2") -> jax.Array:
+    """float32[b, L, L] metric distances among each row's candidates.
+
+    The alpha-rule's directional occlusion check compares these against the
+    candidate-to-u distances, so both must be in the same metric's units
+    (core/metric.py convention).
+    """
+    met = metric_lib.resolve(metric)
+    c = met.prepare(data[jnp.maximum(cand_ids, 0)].astype(jnp.float32))
+    cross = jnp.einsum("bld,bkd->blk", c, c)                    # (b, L, L)
+    if met.kernel == "ip":
+        # Clamp at 0: raw-ip pair distances can be negative, which would
+        # invert the alpha rule (larger alpha dominating MORE) and break
+        # the monotonicity EPO's pair-skip soundness needs (DESIGN.md §4).
+        # Cosine pairs lie in [0, 2] already, so this only bites raw ip.
+        return jnp.maximum(1.0 - cross, 0.0)
     n2 = jnp.sum(c * c, axis=-1)                                # (b, L)
-    cross = jnp.einsum("bld,bkd->blk", c, c)
     pd = n2[:, :, None] + n2[:, None, :] - 2.0 * cross
     return jnp.maximum(pd, 0.0)
 
@@ -117,6 +131,7 @@ def multi_prune(
     *,
     m_max: int,
     use_epo: bool = True,
+    metric: str = "l2",
 ) -> tuple[list[PruneResult], jax.Array, jax.Array]:
     """Sequentially prune the m candidate sets with EPO chaining (Alg. 4).
 
@@ -128,7 +143,7 @@ def multi_prune(
     nb_tot = jnp.int32(0)
     nc_tot = jnp.int32(0)
     for i in range(m):
-        pd = pairwise_candidate_dist(data, cand_ids[i])
+        pd = pairwise_candidate_dist(data, cand_ids[i], metric)
         skip = None
         if use_epo and prev_acc_ids is not None:
             skip = member_mask(cand_ids[i], prev_acc_ids)

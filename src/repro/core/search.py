@@ -22,6 +22,11 @@ Counters (paper metrics):
 Per-graph pool sizes ``ef_i <= ef_max`` are enforced by slot masks; because
 pools are kept globally sorted and entries only move backwards, masking slots
 ``j >= ef_i`` is equivalent to hard eviction (see tests/test_search.py).
+
+The search is metric-generic (DESIGN.md §4): ``metric`` selects the distance
+the pools rank by; builders pass the kernel form ("l2"/"ip") over prepared
+data so the loop never normalizes, while external callers may pass "cosine"
+and get one in-jit normalization per call.
 """
 from __future__ import annotations
 
@@ -31,6 +36,7 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import metric as metric_lib
 from repro.core.graph import INVALID
 from repro.kernels import ops
 
@@ -75,7 +81,7 @@ def _first_occurrence(ids: jax.Array, sentinel: int) -> jax.Array:
 
 def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
                        slot_mask, pool_ids, pool_dist, expanded,
-                       visited, cache_d, cache_has, share_cache):
+                       visited, cache_d, cache_has, share_cache, metric):
     """One hop of ALL m graphs, fully vectorized over (b, m).
 
     Cross-graph duplicate candidates within the hop are deduplicated
@@ -120,7 +126,7 @@ def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
         first = flat_valid
 
     cvec = data[flat_ids]                                        # (b, m*mx, d)
-    dists = ops.gather_distance(queries, cvec)
+    dists = ops.gather_distance(queries, cvec, metric=metric)
     if share_cache:
         # V_delta's domain is exactly the union of per-graph visit sets, so
         # only a has-bit is tracked; the values come from the batched kernel
@@ -157,7 +163,7 @@ def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("ef_max", "max_hops", "share_cache"))
+    static_argnames=("ef_max", "max_hops", "share_cache", "metric"))
 def beam_search(
     graph_ids: jax.Array,      # int32[m, n, Mx]
     data: jax.Array,           # f32[n, d]
@@ -172,7 +178,15 @@ def beam_search(
     ef_max: int,
     max_hops: int,
     share_cache: bool,
+    metric: str = "l2",
 ) -> SearchResult:
+    met = metric_lib.resolve(metric)
+    if met.normalize:
+        # One in-jit normalization per call; builders avoid even this by
+        # preparing the dataset once and passing the kernel form ("ip").
+        data = metric_lib.normalize(data)
+        queries = metric_lib.normalize(queries)
+    metric = met.kernel
     m, n, _ = graph_ids.shape
     b = queries.shape[0]
     brange = jnp.arange(b)
@@ -193,7 +207,7 @@ def beam_search(
         ep_safe = jnp.maximum(ep, 0)
         ok = (ep != INVALID) & (ep != query_ids) & row_mask
         evec = data[ep_safe][:, None, :]                         # (b, 1, d)
-        d0 = ops.gather_distance(queries, evec)[:, 0]
+        d0 = ops.gather_distance(queries, evec, metric=metric)[:, 0]
         if share_cache:
             has = cache_has[brange, ep_safe]
             need = ok & ~has
@@ -223,7 +237,7 @@ def beam_search(
          nf, nc) = _expand_all_graphs(
             graph_ids, data, queries, query_ids, row_mask, slot_mask,
             pool_ids, pool_dist, expanded, visited, cache_d, cache_has,
-            share_cache)
+            share_cache, metric)
         return (pool_ids, pool_dist, expanded, visited, cache_d, cache_has,
                 n_fresh + nf, n_comp + nc, hop + 1)
 
@@ -244,8 +258,13 @@ def default_max_hops(ef_max: int) -> int:
 
 def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
                k: int, ef: int, entry: int | jax.Array,
-               max_hops: int | None = None) -> SearchResult:
-    """Single-graph external k-ANNS (evaluation path, Alg. 1)."""
+               max_hops: int | None = None, *,
+               metric: str = "l2") -> SearchResult:
+    """Single-graph external k-ANNS (evaluation path, Alg. 1).
+
+    ``metric`` must match the metric the graph was built under; pool
+    distances come back in that metric's units (core/metric.py convention).
+    """
     if graph_ids.ndim == 2:
         graph_ids = graph_ids[None]
     b = queries.shape[0]
@@ -255,7 +274,7 @@ def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
         jnp.full((b,), INVALID, jnp.int32), jnp.ones((b,), bool),
         jnp.array([ef], jnp.int32), ep,
         ef_max=ef, max_hops=max_hops or default_max_hops(ef),
-        share_cache=False)
+        share_cache=False, metric=metric)
     return SearchResult(res.pool_ids[:, 0, :k], res.pool_dist[:, 0, :k],
                         res.n_fresh, res.n_computed, res.hops,
                         res.cache_d, res.cache_has)

@@ -17,6 +17,7 @@ import numpy as np
 
 from repro.core import eval as evallib
 from repro.core import hnsw as hnswlib
+from repro.core import metric as metric_lib
 from repro.core.counters import BuildCounters
 from repro.core.tuner import params as pspace
 
@@ -45,13 +46,15 @@ class EstimationRecord:
 
 
 def _eval_one(pg, build_res, gi, data, queries, gt, k, ef_grid, timing_reps):
+    metric = build_res.metric     # search under the metric the graph records
     if pg == "hnsw":
         def fn(q, ef):
-            return hnswlib.hnsw_search(build_res.g, gi, data, q, k, ef)
+            return hnswlib.hnsw_search(build_res.g, gi, data, q, k, ef,
+                                       metric=metric)
     else:
         def fn(q, ef):
             return evallib.flat_graph_search_fn(
-                build_res.g, gi, data, build_res.entry, k)(q, ef)
+                build_res.g, gi, data, build_res.entry, k, metric)(q, ef)
     return evallib.evaluate_search_fn(fn, queries, gt, k, ef_grid,
                                       timing_reps=timing_reps)
 
@@ -71,9 +74,22 @@ def estimate(
     seed: int = 0,
     build_batch_size: int = 256,
     timing_reps: int = 1,
+    metric: str = "l2",
 ) -> EstimationRecord:
-    """Estimate the quality of each configuration in ``cfgs``."""
+    """Estimate the quality of each configuration in ``cfgs``.
+
+    ``gt`` must be metric-correct ground truth (eval.ground_truth(...,
+    metric=metric)) so (QPS, Recall) frontiers are comparable across metrics.
+    """
     ef_grid = ef_grid or [max(10, k), 2 * k, 4 * k, 8 * k]
+    # Prepare the data ONCE and hand the kernel form down: otherwise every
+    # timed cosine search renormalizes the full (n, d) matrix in-jit,
+    # deflating cosine QPS relative to l2/ip and skewing the frontiers the
+    # tuner compares.
+    met = metric_lib.resolve(metric)
+    data = met.prepare(data)
+    queries = met.prepare(queries)
+    metric = met.kernel
     ctr = BuildCounters()
     estimates: list[Estimate] = []
     t_build = 0.0
@@ -89,7 +105,7 @@ def estimate(
             pg, data, bps, seed=seed,
             use_eso=use_eso and len(group) > 1,
             use_epo=use_epo and len(group) > 1,
-            batch_size=build_batch_size)
+            batch_size=build_batch_size, metric=metric)
         t_build += time.perf_counter() - t0
         ctr = ctr.add(res.counters)
         t0 = time.perf_counter()

@@ -31,6 +31,7 @@ from repro.core.tuner import params as pspace
 class TuneResult:
     mode: str
     pg: str
+    metric: str
     cfgs: list[dict[str, Any]]
     objectives: list[tuple[float, float]]      # (qps, recall) per config
     counters: BuildCounters
@@ -51,7 +52,7 @@ class TuneResult:
 
     def summary(self) -> dict:
         return {
-            "mode": self.mode, "pg": self.pg,
+            "mode": self.mode, "pg": self.pg, "metric": self.metric,
             "n_configs": len(self.cfgs),
             "t_recommend_s": round(self.t_recommend, 3),
             "t_estimate_s": round(self.t_estimate, 3),
@@ -82,12 +83,14 @@ def tune(
     ef_grid: list[int] | None = None,
     mc_samples: int = 48,
     timing_reps: int = 1,
+    metric: str = "l2",
 ) -> TuneResult:
     from repro.core import eval as evallib   # local: avoids cycles
 
     rng = np.random.default_rng(seed)
-    space = pspace.space(pg, scale=scale)
-    gt = evallib.ground_truth(data, queries, k)
+    space = pspace.space(pg, scale=scale, metric=metric)
+    metric = space.metric          # single source of truth from here on
+    gt = evallib.ground_truth(data, queries, k, metric=metric)
     init_random = init_random if init_random is not None else max(batch, 6)
 
     grouped = mode in ("fastpgt", "random_plus")
@@ -112,7 +115,8 @@ def tune(
         rec = estimator.estimate(
             pg, data, queries, gt, cfgs, k=k, ef_grid=ef_grid,
             group_size=group_size, use_eso=eso, use_epo=epo, seed=seed,
-            build_batch_size=build_batch_size, timing_reps=timing_reps)
+            build_batch_size=build_batch_size, timing_reps=timing_reps,
+            metric=metric)
         t_est += time.perf_counter() - t0
         ctr = ctr.add(rec.counters)
         n_dist_eval += rec.n_dist_eval
@@ -151,6 +155,6 @@ def tune(
             run_estimation(xs)
             it += 1
 
-    return TuneResult(mode=mode, pg=pg, cfgs=cfgs_hist, objectives=obj_hist,
-                      counters=ctr, t_recommend=t_rec, t_estimate=t_est,
-                      n_dist_eval=n_dist_eval)
+    return TuneResult(mode=mode, pg=pg, metric=metric, cfgs=cfgs_hist,
+                      objectives=obj_hist, counters=ctr, t_recommend=t_rec,
+                      t_estimate=t_est, n_dist_eval=n_dist_eval)

@@ -45,6 +45,7 @@ class ParamDim:
 class ParamSpace:
     pg: str
     dims: tuple[ParamDim, ...]
+    metric: str = "l2"      # workload axis: the metric the tuned index serves
 
     @property
     def d(self) -> int:
@@ -66,8 +67,13 @@ class ParamSpace:
         return np.clip(x01 + rng.normal(0, sigma, x01.shape), 0.0, 1.0)
 
 
-def space(pg: str, scale: float = 1.0) -> ParamSpace:
-    """Paper-faithful knobs; ``scale`` shrinks upper bounds for small n."""
+def space(pg: str, scale: float = 1.0, metric: str = "l2") -> ParamSpace:
+    """Paper-faithful knobs; ``scale`` shrinks upper bounds for small n.
+
+    ``metric`` tags the space with the workload's distance metric; it is not
+    a tunable dimension (changing it changes the ground truth, not the knobs)
+    but rides along so build/eval stay consistent with the recommendation.
+    """
     s = scale
     if pg == "hnsw":
         dims = (ParamDim("efc", 16, max(32, int(512 * s)), log=True),
@@ -82,7 +88,7 @@ def space(pg: str, scale: float = 1.0) -> ParamSpace:
                 ParamDim("M", 4, max(8, int(64 * s)), log=True))
     else:
         raise ValueError(f"unknown pg type {pg!r}")
-    return ParamSpace(pg=pg, dims=dims)
+    return ParamSpace(pg=pg, dims=dims, metric=metric)
 
 
 def to_build_params(pg: str, cfg: dict[str, Any]):
@@ -97,18 +103,19 @@ def to_build_params(pg: str, cfg: dict[str, Any]):
 
 
 def build_many(pg: str, data, build_params: list, *, seed: int,
-               use_eso: bool, use_epo: bool, batch_size: int):
+               use_eso: bool, use_epo: bool, batch_size: int,
+               metric: str = "l2"):
     """Dispatch to the multi-builders. Returns the per-PG BuildResult."""
     if pg == "hnsw":
         return hnswlib.build_multi_hnsw(
             data, build_params, seed=seed, use_eso=use_eso, use_epo=use_epo,
-            batch_size=batch_size)
+            batch_size=batch_size, metric=metric)
     if pg == "vamana":
         return vamanalib.build_multi_vamana(
             data, build_params, seed=seed, use_eso=use_eso, use_epo=use_epo,
-            batch_size=batch_size)
+            batch_size=batch_size, metric=metric)
     if pg == "nsg":
         return nsglib.build_multi_nsg(
             data, build_params, seed=seed, use_eso=use_eso, use_epo=use_epo,
-            batch_size=batch_size)
+            batch_size=batch_size, metric=metric)
     raise ValueError(pg)

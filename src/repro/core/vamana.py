@@ -15,6 +15,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import commit, graph, prune, search
+from repro.core import metric as metric_lib
 from repro.core.counters import BuildCounters
 from repro.core.graph import INVALID, MultiGraph
 
@@ -35,6 +36,7 @@ class BuildResult:
     entry: int
     counters: BuildCounters
     params: list
+    metric: str = "l2"          # metric the graph was built (and ranks) under
 
 
 def build_multi_vamana(
@@ -47,7 +49,11 @@ def build_multi_vamana(
     use_epo: bool = True,
     k_in: int = 16,
     max_hops: int | None = None,
+    metric: str = "l2",
 ) -> BuildResult:
+    met = metric_lib.resolve(metric)
+    data = met.prepare(data)      # normalize ONCE for cosine (no-op otherwise)
+    kform = met.kernel            # hot loops see only the kernel form
     n, _ = data.shape
     params = [p.clamped(n) for p in params]
     m = len(params)
@@ -66,7 +72,7 @@ def build_multi_vamana(
 
     # ---- Initialization: deterministic shared random KNNG (Alg. 6 l.1-2) ---
     init_ids = graph.random_knng_ids(seed, n, M_max)          # shared prefix
-    init_dist = graph.with_distances(data, init_ids)
+    init_dist = graph.with_distances(data, init_ids, kform)
     gids, gdist = [], []
     for p in ps:
         dm = jnp.arange(M_max)[None, :] < p.M
@@ -76,7 +82,7 @@ def build_multi_vamana(
     ctr.init_base += sum(n * p.M for p in ps)
     ctr.init += n * M_max if use_eso else ctr.init_base
 
-    ep = int(graph.medoid(data))                              # Alg. 6 l.3
+    ep = int(graph.medoid(data, kform))                       # Alg. 6 l.3
     hops = max_hops or search.default_max_hops(L_max)
 
     # ---- main pass (Alg. 6 l.4-12), batched ---------------------------------
@@ -90,7 +96,8 @@ def build_multi_vamana(
 
         res = search.beam_search(
             g.ids, data, queries, jnp.where(row_mask, u, INVALID), row_mask,
-            L, entry, ef_max=L_max, max_hops=hops, share_cache=use_eso)
+            L, entry, ef_max=L_max, max_hops=hops, share_cache=use_eso,
+            metric=kform)
         ctr.search_base += int(res.n_fresh)
         ctr.search += int(res.n_computed)
 
@@ -99,27 +106,18 @@ def build_multi_vamana(
         valid = cand_ids != INVALID
         pruned, nb, nc = prune.multi_prune(
             data, cand_ids, cand_dist, valid, M, alpha,
-            m_max=M_max, use_epo=use_epo)
+            m_max=M_max, use_epo=use_epo, metric=kform)
         ctr.prune_base += int(nb)
         ctr.prune += int(nc)
 
-        new_ids = g.ids
-        new_dist = g.dist
-        for i in range(m):
-            ai, ad = commit.scatter_rows(
-                new_ids[i], new_dist[i], u, pruned[i].ids, pruned[i].dist,
-                row_mask)
-            rev = commit.add_reverse_edges(
-                data, ai, ad, u, pruned[i].ids, pruned[i].dist, row_mask,
-                M[i], alpha[i], k_in=k_in, m_max=M_max)
-            ctr.prune_base += int(rev.n_checks)
-            ctr.prune += int(rev.n_checks)
-            new_ids = new_ids.at[i].set(rev.adj_ids)
-            new_dist = new_dist.at[i].set(rev.adj_dist)
+        new_ids, new_dist = commit.commit_group(
+            data, g.ids, g.dist, u, pruned, row_mask, M, alpha, ctr,
+            k_in=k_in, m_max=M_max, metric=kform)
         g = MultiGraph(ids=new_ids, dist=new_dist)
 
     g = MultiGraph(ids=g.ids[inv_order], dist=g.dist[inv_order])
-    return BuildResult(g=g, entry=ep, counters=ctr, params=params)
+    return BuildResult(g=g, entry=ep, counters=ctr, params=params,
+                       metric=met.name)
 
 
 def build_vamana(data, p: VamanaParams, **kw) -> BuildResult:

@@ -5,7 +5,10 @@ expands frontiers on m graphs; the candidate neighbor vectors are gathered
 into (b, k, d) and distances to u are needed — *except* where the shared
 V_delta cache already holds them.  The kernel computes
 
-  out[b, i] = mask[b, i] ? ||u[b] - c[b, i]||^2 : cached[b, i]
+  out[b, i] = mask[b, i] ? delta(u[b], c[b, i]) : cached[b, i]
+
+with delta the metric's distance (kernel form "l2": squared L2; "ip":
+1 - <u, c>; cosine = "ip" on pre-normalized inputs — see core/metric.py).
 
 The compute saving on real hardware comes from frontier dedup *before* the
 kernel call (fewer rows); the mask keeps bit-exact cache-reuse semantics so
@@ -26,23 +29,28 @@ from jax.experimental import pallas as pl
 DEFAULT_BK = 128
 
 
-def _gather_dist_kernel(u_ref, c_ref, cached_ref, mask_ref, o_ref):
+def _gather_dist_kernel(u_ref, c_ref, cached_ref, mask_ref, o_ref, *,
+                        kernel: str):
     u = u_ref[...].astype(jnp.float32)                 # (1, d)
     c = c_ref[...].astype(jnp.float32)                 # (1, bk, d)
-    diff = c - u[:, None, :]
-    d2 = jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0)   # (1, bk)
+    if kernel == "ip":
+        d2 = 1.0 - jnp.sum(c * u[:, None, :], axis=-1)     # (1, bk)
+    else:
+        diff = c - u[:, None, :]
+        d2 = jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0)
     cached = cached_ref[...].astype(jnp.float32)
     mask = mask_ref[...]
     o_ref[...] = jnp.where(mask, d2, cached)
 
 
-@functools.partial(jax.jit, static_argnames=("bk", "interpret"))
+@functools.partial(jax.jit, static_argnames=("kernel", "bk", "interpret"))
 def gather_distance(
     u: jax.Array,
     c: jax.Array,
     cached: jax.Array,
     mask: jax.Array,
     *,
+    kernel: str = "l2",
     bk: int = DEFAULT_BK,
     interpret: bool = False,
 ) -> jax.Array:
@@ -53,7 +61,7 @@ def gather_distance(
     assert k % bk == 0, (k, bk)
     grid = (b, k // bk)
     return pl.pallas_call(
-        _gather_dist_kernel,
+        functools.partial(_gather_dist_kernel, kernel=kernel),
         grid=grid,
         in_specs=[
             pl.BlockSpec((1, d), lambda i, j: (i, 0)),

@@ -1,9 +1,16 @@
-"""Blocked pairwise squared-L2 distance Pallas kernel — the Search hot spot.
+"""Blocked pairwise distance Pallas kernel — the Search hot spot.
 
 FastPGT's parameter-estimation cost is dominated by distance computations in
-the beam-search (Search) phase of PG construction.  On TPU we reformulate
-``||q - x||^2 = ||q||^2 + ||x||^2 - 2 q.x`` so the dominant cross term is an
-MXU matmul.  The kernel tiles (nq, nx, d) into VMEM-resident blocks:
+the beam-search (Search) phase of PG construction.  On TPU both kernel forms
+reduce to one MXU matmul per tile:
+
+  l2:  ||q - x||^2 = ||q||^2 + ||x||^2 - 2 q.x   (cross term on the MXU)
+  ip:  1 - q.x                                    (pure MXU + affine)
+
+Cosine is ip over unit-normalized inputs; normalization happens at the
+``ops.py`` boundary (or once per dataset in the builders) so the kernel
+stays a fused matmul.  The kernel tiles (nq, nx, d) into VMEM-resident
+blocks:
 
   grid = (nq/bq, nx/bx)
   q tile   : (bq, d)   VMEM
@@ -27,30 +34,35 @@ DEFAULT_BQ = 128
 DEFAULT_BX = 128
 
 
-def _l2_kernel(q_ref, x_ref, o_ref):
+def _dist_kernel(q_ref, x_ref, o_ref, *, kernel: str):
     q = q_ref[...].astype(jnp.float32)                    # (bq, d)
     x = x_ref[...].astype(jnp.float32)                    # (bx, d)
-    qn = jnp.sum(q * q, axis=-1, keepdims=True)           # (bq, 1)
-    xn = jnp.sum(x * x, axis=-1, keepdims=True)           # (bx, 1)
     # MXU: (bq, d) @ (d, bx)
     cross = jax.lax.dot_general(
         q, x,
         dimension_numbers=(((1,), (1,)), ((), ())),
         preferred_element_type=jnp.float32,
     )
-    o_ref[...] = jnp.maximum(qn + xn.T - 2.0 * cross, 0.0)
+    if kernel == "ip":
+        o_ref[...] = 1.0 - cross
+    else:
+        qn = jnp.sum(q * q, axis=-1, keepdims=True)       # (bq, 1)
+        xn = jnp.sum(x * x, axis=-1, keepdims=True)       # (bx, 1)
+        o_ref[...] = jnp.maximum(qn + xn.T - 2.0 * cross, 0.0)
 
 
-@functools.partial(jax.jit, static_argnames=("bq", "bx", "interpret"))
-def l2_distance(
+@functools.partial(jax.jit,
+                   static_argnames=("kernel", "bq", "bx", "interpret"))
+def pairwise_distance(
     q: jax.Array,
     x: jax.Array,
     *,
+    kernel: str = "l2",
     bq: int = DEFAULT_BQ,
     bx: int = DEFAULT_BX,
     interpret: bool = False,
 ) -> jax.Array:
-    """Pairwise squared L2 distances via pallas_call.
+    """Pairwise distances via pallas_call; ``kernel`` in {"l2", "ip"}.
 
     Shapes must be pre-padded: nq % bq == 0, nx % bx == 0.
     Returns (nq, nx) float32.
@@ -61,7 +73,7 @@ def l2_distance(
     assert nq % bq == 0 and nx % bx == 0, (nq, nx, bq, bx)
     grid = (nq // bq, nx // bx)
     return pl.pallas_call(
-        _l2_kernel,
+        functools.partial(_dist_kernel, kernel=kernel),
         grid=grid,
         in_specs=[
             pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
@@ -71,3 +83,8 @@ def l2_distance(
         out_shape=jax.ShapeDtypeStruct((nq, nx), jnp.float32),
         interpret=interpret,
     )(q, x)
+
+
+def l2_distance(q: jax.Array, x: jax.Array, **kw) -> jax.Array:
+    """Back-compat wrapper: squared-L2 form of ``pairwise_distance``."""
+    return pairwise_distance(q, x, kernel="l2", **kw)

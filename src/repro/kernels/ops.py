@@ -16,6 +16,7 @@ import os
 import jax
 import jax.numpy as jnp
 
+from repro.core import metric as metric_lib
 from repro.kernels import flash_attention as _fa
 from repro.kernels import gather_distance as _gd
 from repro.kernels import l2_distance as _l2
@@ -40,35 +41,57 @@ def _pad_to(x: jax.Array, axis: int, mult: int, value=0.0) -> jax.Array:
     return jnp.pad(x, pad, constant_values=value)
 
 
-def l2_distance(q: jax.Array, x: jax.Array) -> jax.Array:
-    """Pairwise squared L2: (nq, d), (nx, d) -> (nq, nx) f32."""
+def pairwise_distance(q: jax.Array, x: jax.Array,
+                      metric: "str | metric_lib.Metric" = "l2") -> jax.Array:
+    """Pairwise metric distances: (nq, d), (nx, d) -> (nq, nx) f32.
+
+    ``metric`` may be any registered metric; cosine unit-normalizes both
+    sides here so the kernel stays a fused matmul (callers that own the
+    dataset normalize once via ``Metric.prepare`` and pass the "ip" kernel
+    form instead — re-normalizing unit vectors is a numeric no-op).
+    """
+    met = metric_lib.resolve(metric)
+    if met.normalize:
+        q = metric_lib.normalize(q)
+        x = metric_lib.normalize(x)
     if not (_use_pallas() or _use_interpret()):
-        return ref.l2_distance_ref(q, x)
+        return ref.pairwise_distance_ref(q, x, met.kernel)
     nq, nx = q.shape[0], x.shape[0]
     bq = min(_l2.DEFAULT_BQ, max(8, nq))
     bx = min(_l2.DEFAULT_BX, max(8, nx))
     qp = _pad_to(_pad_to(q, 0, bq), 1, 128)
     xp = _pad_to(_pad_to(x, 0, bx), 1, 128)
-    out = _l2.l2_distance(qp, xp, bq=bq, bx=bx, interpret=_use_interpret())
+    out = _l2.pairwise_distance(qp, xp, kernel=met.kernel, bq=bq, bx=bx,
+                                interpret=_use_interpret())
     return out[:nq, :nx]
 
 
-def gather_distance(u, c, cached=None, mask=None) -> jax.Array:
+def l2_distance(q: jax.Array, x: jax.Array) -> jax.Array:
+    """Pairwise squared L2: (nq, d), (nx, d) -> (nq, nx) f32."""
+    return pairwise_distance(q, x, "l2")
+
+
+def gather_distance(u, c, cached=None, mask=None,
+                    metric: "str | metric_lib.Metric" = "l2") -> jax.Array:
     """V_delta-aware gathered distances: see kernels/gather_distance.py."""
+    met = metric_lib.resolve(metric)
+    if met.normalize:
+        u = metric_lib.normalize(u)
+        c = metric_lib.normalize(c)
     b, k = c.shape[0], c.shape[1]
     if cached is None:
         cached = jnp.zeros((b, k), jnp.float32)
         mask = jnp.ones((b, k), dtype=bool)
     if not (_use_pallas() or _use_interpret()):
-        return ref.gather_distance_ref(u, c, cached, mask)
+        return ref.gather_distance_ref(u, c, cached, mask, met.kernel)
     bk = min(_gd.DEFAULT_BK, max(8, k))
     cp = _pad_to(c, 1, bk)
     cachedp = _pad_to(cached, 1, bk)
     maskp = _pad_to(mask, 1, bk, value=True)
     up = _pad_to(u, 1, 128)
     cp = _pad_to(cp, 2, 128)
-    out = _gd.gather_distance(up, cp, cachedp, maskp, bk=bk,
-                              interpret=_use_interpret())
+    out = _gd.gather_distance(up, cp, cachedp, maskp, kernel=met.kernel,
+                              bk=bk, interpret=_use_interpret())
     return out[:, :k]
 
 

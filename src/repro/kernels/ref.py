@@ -8,23 +8,35 @@ from __future__ import annotations
 import jax
 import jax.numpy as jnp
 
+from repro.core import metric as metric_lib
 
-def l2_distance_ref(q: jax.Array, x: jax.Array) -> jax.Array:
-    """Pairwise squared-L2 distances.
+
+def pairwise_distance_ref(q: jax.Array, x: jax.Array,
+                          kernel: str = "l2") -> jax.Array:
+    """Pairwise distances under a kernel form (core/metric.py convention).
 
     Args:
       q: (nq, d) queries.
       x: (nx, d) base vectors.
+      kernel: "l2" -> squared L2; "ip" -> 1 - <q, x> (cosine = "ip" over
+              unit-normalized inputs, handled at the ops boundary).
     Returns:
-      (nq, nx) float32 squared distances.
+      (nq, nx) float32 distances.
     """
     q = q.astype(jnp.float32)
     x = x.astype(jnp.float32)
+    cross = q @ x.T                                      # (nq, nx)
+    if kernel == "ip":
+        return 1.0 - cross
     qn = jnp.sum(q * q, axis=-1, keepdims=True)          # (nq, 1)
     xn = jnp.sum(x * x, axis=-1, keepdims=True).T        # (1, nx)
-    cross = q @ x.T                                      # (nq, nx)
     d2 = qn + xn - 2.0 * cross
     return jnp.maximum(d2, 0.0)
+
+
+def l2_distance_ref(q: jax.Array, x: jax.Array) -> jax.Array:
+    """Back-compat wrapper: squared-L2 form of ``pairwise_distance_ref``."""
+    return pairwise_distance_ref(q, x, "l2")
 
 
 def gather_distance_ref(
@@ -32,6 +44,7 @@ def gather_distance_ref(
     c: jax.Array,
     cached: jax.Array | None = None,
     mask: jax.Array | None = None,
+    kernel: str = "l2",
 ) -> jax.Array:
     """Distances from each query to its own gathered candidates.
 
@@ -42,13 +55,13 @@ def gather_distance_ref(
       mask: optional (b, k) bool; True = "must compute" (cache miss).
             Where False, ``cached`` is passed through unchanged. This encodes
             the paper's V_delta reuse semantics (FastPGT Alg. 3 line 6-9).
+      kernel: "l2" or "ip" (see ``pairwise_distance_ref``).
     Returns:
-      (b, k) float32 squared distances.
+      (b, k) float32 distances.
     """
     u = u.astype(jnp.float32)
     c = c.astype(jnp.float32)
-    diff = c - u[:, None, :]
-    d2 = jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0)
+    d2 = metric_lib.kernel_distance(c, u[:, None, :], kernel)
     if mask is not None:
         assert cached is not None
         d2 = jnp.where(mask, d2, cached.astype(jnp.float32))

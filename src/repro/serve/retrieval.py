@@ -2,10 +2,18 @@
 
 Long-context decode attends over an enormous KV cache; RetrievalAttention
 (paper ref [8]) replaces the exhaustive pass with k-ANNS over cached keys
-using a proximity graph.  This module builds a Vamana PG over a layer's
-keys and answers decode-time attention by searching top-k keys, attending
-only to those — and the PG's construction parameters are exactly what
-FastPGT tunes (examples/serve_retrieval.py runs the tuner over this index).
+using a proximity graph.  This module builds a PG over a layer's keys and
+answers decode-time attention by searching top-k keys, attending only to
+those — and the PG's construction parameters are exactly what FastPGT tunes
+(examples/serve_retrieval.py runs the tuner over this index).
+
+Attention ranks keys by raw inner product q.k, so the index is built
+natively under the "ip" metric (core/metric.py): argmin (1 - q.k) is exactly
+argmax q.k — no normalization, no MIPS-to-L2 reduction, and ranking is exact
+rather than the angle-only approximation the old normalize-and-L2 hack gave.
+``metric="cosine"`` remains available (keys unit-normalized ONCE at build
+and stored on the index; queries normalized per call — never the full key
+matrix again), as does plain "l2".
 
 Scope: per-(layer, head) indexes over a frozen prefill cache (the common
 RAG/long-doc serving pattern); incremental insertion reuses the same
@@ -18,6 +26,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import metric as metric_lib
 from repro.core import search as search_lib
 from repro.core import vamana as vamana_lib
 
@@ -25,23 +34,35 @@ from repro.core import vamana as vamana_lib
 @dataclasses.dataclass
 class RetrievalIndex:
     graph_ids: jax.Array       # (n_ctx, M_max) over one head's keys
-    keys: jax.Array            # (n_ctx, dh) — note: inner-product queries
+    keys: jax.Array            # (n_ctx, dh) raw keys (attention logits)
     values: jax.Array          # (n_ctx, dh)
+    search_keys: jax.Array     # (n_ctx, dh) metric-prepared ONCE at build
     entry: int
     params: vamana_lib.VamanaParams
+    metric: str                # public metric name ("ip" | "cosine" | "l2")
+
+    @property
+    def kernel(self) -> str:
+        """Kernel form searches run under (search_keys are pre-prepared)."""
+        return metric_lib.resolve(self.metric).kernel
 
 
 def build_index(keys: jax.Array, values: jax.Array,
-                params: vamana_lib.VamanaParams, *, seed: int = 0,
-                batch_size: int = 256) -> RetrievalIndex:
-    """Index one head's keys.  L2 PG over unit-normalized keys approximates
-    max-inner-product ranking for decode queries (standard MIPS reduction)."""
-    norm = jnp.linalg.norm(keys, axis=-1, keepdims=True)
-    kn = keys / jnp.maximum(norm, 1e-6)
-    res = vamana_lib.build_vamana(kn, params, seed=seed,
-                                  batch_size=batch_size)
+                params: vamana_lib.VamanaParams, *, metric: str = "ip",
+                seed: int = 0, batch_size: int = 256) -> RetrievalIndex:
+    """Index one head's keys under ``metric`` (default: native ip/MIPS).
+
+    Any metric preparation (unit-normalization for cosine) happens exactly
+    once here; ``search_keys`` stores the prepared matrix so query-time
+    never touches the full cache again.
+    """
+    met = metric_lib.resolve(metric)
+    search_keys = met.prepare(keys)
+    res = vamana_lib.build_vamana(search_keys, params, seed=seed,
+                                  batch_size=batch_size, metric=met.kernel)
     return RetrievalIndex(graph_ids=res.g.ids[0], keys=keys, values=values,
-                          entry=res.entry, params=params)
+                          search_keys=search_keys, entry=res.entry,
+                          params=params, metric=met.name)
 
 
 def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
@@ -54,10 +75,10 @@ def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
     """
     dh = q.shape[-1]
     scale = scale or 1.0 / (dh ** 0.5)
-    qn = q / jnp.maximum(jnp.linalg.norm(q, axis=-1, keepdims=True), 1e-6)
-    res = search_lib.knn_search(idx.graph_ids, idx.keys / jnp.maximum(
-        jnp.linalg.norm(idx.keys, axis=-1, keepdims=True), 1e-6),
-        qn, top_k, ef, idx.entry)
+    met = metric_lib.resolve(idx.metric)
+    qs = met.prepare(q)            # per-call cost is (B, dh) — keys untouched
+    res = search_lib.knn_search(idx.graph_ids, idx.search_keys, qs,
+                                top_k, ef, idx.entry, metric=met.kernel)
     ids = jnp.maximum(res.pool_ids, 0)                    # (B, k)
     valid = res.pool_ids >= 0
     k_sel = idx.keys[ids]                                 # (B, k, dh)

@@ -17,6 +17,23 @@ def ds():
     return data, queries, gt
 
 
+def test_multi_equals_single_fast():
+    """Small-n sharing-invariance guard that stays in the CI fast lane
+    (the thorough variants below are slow-marked)."""
+    r = np.random.default_rng(21)
+    data = jnp.asarray(r.normal(size=(250, 8)), jnp.float32)
+    ps = [vamana.VamanaParams(L=16, M=8, alpha=1.1),
+          vamana.VamanaParams(L=20, M=8, alpha=1.2)]
+    multi = vamana.build_multi_vamana(data, ps, seed=3, batch_size=128)
+    for i, p in enumerate(ps):
+        single = vamana.build_multi_vamana(data, [p], seed=3, batch_size=128,
+                                           use_eso=False, use_epo=False)
+        np.testing.assert_array_equal(
+            np.asarray(multi.g.ids[i])[:, :p.M],
+            np.asarray(single.g.ids[0])[:, :p.M])
+
+
+@pytest.mark.slow
 def test_multi_vamana_equals_singles(ds):
     """Graph i of a shared multi-build must be IDENTICAL to building
     parameter i alone — sharing must never change results."""
@@ -65,6 +82,7 @@ def test_builder_recall(ds, builder, params, searcher):
     assert rec > 0.80, f"{builder} recall {rec}"
 
 
+@pytest.mark.slow
 def test_hnsw_shared_levels_and_multi(ds):
     data, queries, gt = ds
     ps = [hnsw.HNSWParams(efc=32, M=12), hnsw.HNSWParams(efc=48, M=16)]
@@ -84,3 +102,49 @@ def test_nsg_connectivity_repair(ds):
     fn = evallib.flat_graph_search_fn(res.g, 0, data, res.entry, 10)
     rec = evallib.recall_at_k(fn(queries, 80).pool_ids[:, :10], gt)
     assert rec > 0.7
+
+
+@pytest.mark.slow
+def test_multi_vamana_equals_singles_cosine(ds):
+    """Sharing invariance must hold under every metric, not just L2."""
+    data, _, _ = ds
+    ps = [vamana.VamanaParams(L=24, M=10, alpha=1.1),
+          vamana.VamanaParams(L=32, M=12, alpha=1.3)]
+    multi = vamana.build_multi_vamana(data, ps, seed=5, batch_size=128,
+                                      metric="cosine")
+    for i, p in enumerate(ps):
+        single = vamana.build_multi_vamana(data, [p], seed=5, batch_size=128,
+                                           use_eso=False, use_epo=False,
+                                           metric="cosine")
+        np.testing.assert_array_equal(
+            np.asarray(multi.g.ids[i])[:, :p.M],
+            np.asarray(single.g.ids[0])[:, :p.M])
+
+
+@pytest.mark.parametrize("metric", ["cosine", "ip"])
+def test_builder_recall_other_metrics(ds, metric):
+    data, queries, _ = ds
+    gt = evallib.ground_truth(data, queries, 10, metric=metric)
+    res = vamana.build_multi_vamana(
+        data, [vamana.VamanaParams(L=48, M=16, alpha=1.2)],
+        batch_size=128, metric=metric)
+    fn = evallib.flat_graph_search_fn(res.g, 0, data, res.entry, 10, metric)
+    rec = evallib.recall_at_k(fn(queries, 60).pool_ids[:, :10], gt)
+    floor = 0.9 if metric == "cosine" else 0.6   # raw MIPS graphs are hubby
+    assert rec > floor, f"vamana/{metric} recall {rec}"
+
+
+@pytest.mark.slow
+def test_hnsw_cosine_reaches_recall_target(ds):
+    """Acceptance: an HNSW built on a cosine-metric dataset reaches
+    recall@10 >= 0.9 at some ef in the default eval grid [10, 20, 40, 80]."""
+    data, queries, _ = ds
+    gt = evallib.ground_truth(data, queries, 10, metric="cosine")
+    res = hnsw.build_multi_hnsw(data, [hnsw.HNSWParams(efc=48, M=16)],
+                                batch_size=128, metric="cosine")
+    recs = []
+    for ef in [10, 20, 40, 80]:
+        got = hnsw.hnsw_search(res.g, 0, data, queries, 10, ef,
+                               metric="cosine").pool_ids
+        recs.append(evallib.recall_at_k(got, gt))
+    assert max(recs) >= 0.9, f"cosine hnsw recall sweep {recs}"

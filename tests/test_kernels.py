@@ -7,6 +7,7 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+from repro.core import metric as metric_lib
 from repro.kernels import ops, ref
 
 
@@ -25,6 +26,7 @@ def _interpret_mode():
 SHAPES_L2 = [(8, 8, 4), (37, 91, 50), (128, 128, 128), (200, 65, 33),
              (1, 300, 960)]
 DTYPES = [jnp.float32, jnp.bfloat16]
+METRICS = ["l2", "ip", "cosine"]
 
 
 @pytest.mark.parametrize("nq,nx,d", SHAPES_L2)
@@ -101,3 +103,72 @@ def test_chunked_attention_matches_ref(sq, sk):
                                       chunk=256)
     exp = ref.flash_attention_ref(q, k, v, causal=True, q_offset=off)
     np.testing.assert_allclose(out, exp, rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("nq,nx,d", [(8, 8, 4), (37, 91, 50), (200, 65, 33)])
+@pytest.mark.parametrize("metric", METRICS)
+def test_pairwise_distance_matches_ref(nq, nx, d, metric):
+    """Interpret-mode Pallas kernel == jnp oracle for every metric."""
+    r = np.random.default_rng(nq * 1000 + nx)
+    q = jnp.asarray(r.normal(size=(nq, d)), jnp.float32)
+    x = jnp.asarray(r.normal(size=(nx, d)), jnp.float32)
+    out = ops.pairwise_distance(q, x, metric)
+    met = metric_lib.resolve(metric)
+    exp = ref.pairwise_distance_ref(met.prepare(q), met.prepare(x),
+                                    met.kernel)
+    np.testing.assert_allclose(out, exp, rtol=1e-4, atol=1e-4)
+    assert out.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("b,k,d", [(1, 1, 8), (9, 21, 33), (5, 130, 17)])
+@pytest.mark.parametrize("metric", METRICS)
+def test_gather_distance_metrics(b, k, d, metric):
+    r = np.random.default_rng(b * 100 + k)
+    u = jnp.asarray(r.normal(size=(b, d)), jnp.float32)
+    c = jnp.asarray(r.normal(size=(b, k, d)), jnp.float32)
+    cached = jnp.asarray(r.normal(size=(b, k)), jnp.float32)
+    mask = jnp.asarray(r.random((b, k)) > 0.5)
+    out = ops.gather_distance(u, c, cached, mask, metric=metric)
+    met = metric_lib.resolve(metric)
+    exp = ref.gather_distance_ref(met.prepare(u), met.prepare(c), cached,
+                                  mask, met.kernel)
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-5)
+    # V_delta pass-through must stay bit-exact regardless of metric
+    np.testing.assert_array_equal(np.asarray(out)[~np.asarray(mask)],
+                                  np.asarray(cached)[~np.asarray(mask)])
+
+
+def test_l2_metric_is_the_pre_refactor_default():
+    """metric="l2" must be BIT-IDENTICAL to the metric-less entry points
+    (regression guard for the metric refactor)."""
+    r = np.random.default_rng(42)
+    q = jnp.asarray(r.normal(size=(33, 24)), jnp.float32)
+    x = jnp.asarray(r.normal(size=(57, 24)), jnp.float32)
+    np.testing.assert_array_equal(
+        np.asarray(ops.pairwise_distance(q, x, "l2")),
+        np.asarray(ops.l2_distance(q, x)))
+    np.testing.assert_array_equal(
+        np.asarray(ref.pairwise_distance_ref(q, x, "l2")),
+        np.asarray(ref.l2_distance_ref(q, x)))
+    u = q[:5]
+    c = x[:15].reshape(5, 3, 24)
+    np.testing.assert_array_equal(
+        np.asarray(ops.gather_distance(u, c, metric="l2")),
+        np.asarray(ops.gather_distance(u, c)))
+
+
+def test_ip_distance_is_affine_in_similarity():
+    """d = 1 - <q, x> exactly (the monotone similarity->distance map)."""
+    r = np.random.default_rng(3)
+    q = jnp.asarray(r.normal(size=(16, 12)), jnp.float32)
+    x = jnp.asarray(r.normal(size=(20, 12)), jnp.float32)
+    out = ops.pairwise_distance(q, x, "ip")
+    np.testing.assert_allclose(out, 1.0 - q @ x.T, rtol=1e-5, atol=1e-5)
+
+
+def test_cosine_distance_bounds_and_self():
+    r = np.random.default_rng(4)
+    x = jnp.asarray(r.normal(size=(30, 9)), jnp.float32)
+    d = ops.pairwise_distance(x, x, "cosine")
+    assert bool(jnp.all(d >= -1e-5)) and bool(jnp.all(d <= 2.0 + 1e-5))
+    np.testing.assert_allclose(jnp.diagonal(d), 0.0, atol=1e-5)

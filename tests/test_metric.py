@@ -1,0 +1,141 @@
+"""Metric abstraction: registry, similarity->distance convention, monotone
+equivalences, and end-to-end metric threading through builders + serving."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import eval as evallib
+from repro.core import graph, knng, metric, prune, vamana
+from repro.serve import retrieval
+
+
+def test_registry_and_resolve():
+    assert metric.resolve("l2") is metric.L2
+    assert metric.resolve("ip") is metric.IP
+    assert metric.resolve("cosine") is metric.COSINE
+    assert metric.resolve(metric.COSINE) is metric.COSINE
+    assert set(metric.names()) >= {"l2", "ip", "cosine"}
+    with pytest.raises(ValueError, match="unknown metric"):
+        metric.resolve("manhattan")
+    with pytest.raises(ValueError, match="kernel form"):
+        metric.Metric("bad", "hamming")
+
+
+def test_register_custom_metric():
+    m = metric.register(metric.Metric("unit-ip", "ip", normalize=True))
+    try:
+        assert metric.resolve("unit-ip") is m
+    finally:
+        metric._REGISTRY.pop("unit-ip")
+
+
+def test_prepare_is_idempotent():
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(size=(40, 8)), jnp.float32)
+    once = metric.COSINE.prepare(x)
+    twice = metric.COSINE.prepare(once)
+    np.testing.assert_allclose(once, twice, rtol=1e-6, atol=1e-6)
+    np.testing.assert_array_equal(np.asarray(metric.L2.prepare(x)),
+                                  np.asarray(x))
+
+
+def test_cosine_equals_l2_ordering_on_unit_sphere():
+    """On unit vectors, 1 - cos and squared L2 are monotone transforms of
+    each other (||a-b||^2 = 2(1 - <a,b>)) — top-k sets must coincide."""
+    r = np.random.default_rng(1)
+    data = metric.normalize(jnp.asarray(r.normal(size=(300, 10)), jnp.float32))
+    q = metric.normalize(jnp.asarray(r.normal(size=(20, 10)), jnp.float32))
+    ids_cos, d_cos = knng.exact_knn(data, q, 5, metric="cosine")
+    ids_l2, d_l2 = knng.exact_knn(data, q, 5, metric="l2")
+    np.testing.assert_array_equal(np.asarray(ids_cos), np.asarray(ids_l2))
+    np.testing.assert_allclose(2.0 * np.asarray(d_cos), np.asarray(d_l2),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ip_ground_truth_is_argmax_dot():
+    r = np.random.default_rng(2)
+    data = jnp.asarray(r.normal(size=(150, 6)), jnp.float32)
+    q = jnp.asarray(r.normal(size=(9, 6)), jnp.float32)
+    gt = evallib.ground_truth(data, q, 4, metric="ip")
+    exp = np.argsort(-np.asarray(q) @ np.asarray(data).T, axis=1)[:, :4]
+    np.testing.assert_array_equal(np.asarray(gt), exp)
+
+
+def test_medoid_per_metric():
+    r = np.random.default_rng(3)
+    data = jnp.asarray(r.normal(size=(80, 5)) + 2.0, jnp.float32)
+    c = np.mean(np.asarray(data), axis=0)
+    m_l2 = int(graph.medoid(data, "l2"))
+    assert m_l2 == int(np.argmin(np.sum((np.asarray(data) - c) ** 2, -1)))
+    m_ip = int(graph.medoid(data, "ip"))
+    assert m_ip == int(np.argmax(np.asarray(data) @ c))
+
+
+def test_with_distances_metric():
+    r = np.random.default_rng(4)
+    data = jnp.asarray(r.normal(size=(20, 4)), jnp.float32)
+    ids = jnp.asarray([[1, 2, graph.INVALID], [0, 3, 4]], jnp.int32)
+    d_ip = graph.with_distances(data, ids, "ip")
+    x = np.asarray(data)
+    assert d_ip[0, 0] == pytest.approx(1.0 - x[0] @ x[1], abs=1e-5)
+    assert np.isinf(np.asarray(d_ip)[0, 2])
+
+
+def test_pairwise_candidate_dist_uses_metric():
+    """The alpha-rule's occlusion distances must be in metric units, clamped
+    at 0 for raw ip: negative pair distances would invert the alpha rule
+    (larger alpha dominating more) and void EPO's pair-skip soundness."""
+    r = np.random.default_rng(5)
+    data = jnp.asarray(r.normal(size=(30, 7)), jnp.float32)
+    cand = jnp.asarray([[0, 3, 9, 12]], jnp.int32)
+    pd_ip = prune.pairwise_candidate_dist(data, cand, "ip")
+    x = np.asarray(data)[np.asarray(cand)[0]]
+    np.testing.assert_allclose(np.asarray(pd_ip)[0],
+                               np.maximum(1.0 - x @ x.T, 0.0),
+                               rtol=1e-5, atol=1e-5)
+    assert bool(jnp.all(pd_ip >= 0.0))
+
+
+def test_build_results_record_metric(small_dataset):
+    data, _ = small_dataset
+    res = vamana.build_vamana(data[:300], vamana.VamanaParams(16, 8, 1.1),
+                              batch_size=128, metric="cosine")
+    assert res.metric == "cosine"
+
+
+def test_retrieval_index_no_per_query_renormalization():
+    """Cosine index: search_keys are normalized ONCE at build; the stored
+    matrix is reused verbatim by retrieval_attention (the old per-query
+    full-matrix renormalization hack is gone)."""
+    r = np.random.default_rng(6)
+    keys = jnp.asarray(r.normal(size=(200, 8)), jnp.float32)
+    vals = jnp.asarray(r.normal(size=(200, 8)), jnp.float32)
+    idx = retrieval.build_index(keys, vals,
+                                vamana.VamanaParams(L=16, M=8, alpha=1.1),
+                                metric="cosine")
+    norms = jnp.linalg.norm(idx.search_keys, axis=-1)
+    np.testing.assert_allclose(np.asarray(norms), 1.0, atol=1e-5)
+    assert idx.metric == "cosine" and idx.kernel == "ip"
+    out, res = retrieval.retrieval_attention(idx, keys[:4] * 2, top_k=8,
+                                             ef=16)
+    assert out.shape == (4, 8)
+    assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_retrieval_native_ip_ranking_is_exact_mips():
+    """Native-ip index ranks by raw inner product — pool order must equal
+    exhaustive MIPS order for the retrieved prefix."""
+    r = np.random.default_rng(7)
+    keys = jnp.asarray(r.normal(size=(300, 8)), jnp.float32)
+    vals = jnp.asarray(r.normal(size=(300, 8)), jnp.float32)
+    idx = retrieval.build_index(keys, vals,
+                                vamana.VamanaParams(L=32, M=12, alpha=1.2),
+                                metric="ip")
+    q = keys[r.integers(0, 300, 6)] * 3.0
+    _, res = retrieval.retrieval_attention(idx, q, top_k=5, ef=64)
+    sims = np.asarray(q) @ np.asarray(keys).T
+    got = np.asarray(res.pool_ids)
+    for b in range(6):
+        ids = got[b][got[b] >= 0]
+        order = np.argsort(-sims[b][ids], kind="stable")
+        assert list(ids) == list(ids[order])     # retrieved in MIPS order

@@ -34,7 +34,15 @@ def _batch_for(cfg, b=2, s=16, seed=1):
     return batch
 
 
-@pytest.mark.parametrize("arch", registry.ARCH_IDS)
+SLOW_ARCHS = {"jamba_v01_52b", "xlstm_350m"}    # 15-35s each on CPU
+
+
+def _arch_params(ids):
+    return [pytest.param(a, marks=pytest.mark.slow) if a in SLOW_ARCHS else a
+            for a in ids]
+
+
+@pytest.mark.parametrize("arch", _arch_params(registry.ARCH_IDS))
 def test_arch_smoke_forward_and_step(arch):
     cfg = registry.get_config(arch).smoke()
     params = M.init_params(KEY, cfg)
@@ -64,8 +72,9 @@ def test_arch_cell_assignment_rules(arch):
             assert ok == cfg.sub_quadratic or not ok
 
 
-@pytest.mark.parametrize("arch", ["granite_3_8b", "gemma2_9b", "xlstm_350m",
-                                  "jamba_v01_52b", "grok_1_314b"])
+@pytest.mark.parametrize("arch", _arch_params(
+    ["granite_3_8b", "gemma2_9b", "xlstm_350m",
+     "jamba_v01_52b", "grok_1_314b"]))
 def test_decode_matches_forward(arch):
     """Teacher-forced decode must reproduce the training forward logits.
 

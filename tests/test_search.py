@@ -1,17 +1,29 @@
-"""Beam search: reference equality, ESO cache invariance, counter laws."""
-import heapq
-
+"""Beam search: reference equality (per metric), ESO cache invariance,
+counter laws, and the metric="l2" bit-identity regression guard."""
 import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import knng, search
+from repro.core import knng, metric as metric_lib, search
 from repro.core.graph import INVALID
 
+METRICS = ["l2", "ip", "cosine"]
 
-def kanns_python(adj, data, q, ef, ep):
+
+def _dist_np(q, x, metric):
+    """The core/metric.py distance convention, in numpy."""
+    met = metric_lib.resolve(metric)
+    if met.normalize:
+        q = q / max(np.linalg.norm(q), 1e-12)
+        x = x / max(np.linalg.norm(x), 1e-12)
+    if met.kernel == "ip":
+        return float(1.0 - np.dot(q, x))
+    return float(np.sum((q - x) ** 2))
+
+
+def kanns_python(adj, data, q, ef, ep, metric="l2"):
     """Literal Algorithm 1 (returns sorted [(dist, id)] of pool)."""
-    d0 = float(np.sum((data[ep] - q) ** 2))
+    d0 = _dist_np(q, data[ep], metric)
     pool = [(d0, ep)]
     expanded = set()
     visited = {ep}
@@ -28,24 +40,64 @@ def kanns_python(adj, data, q, ef, ep):
                 continue
             visited.add(v)
             n_dist += 1
-            pool.append((float(np.sum((data[v] - q) ** 2)), v))
+            pool.append((_dist_np(q, data[v], metric), v))
     pool.sort()
     return pool[:ef], n_dist
 
 
 @pytest.mark.parametrize("ef", [4, 10, 25])
-def test_beam_search_matches_python(small_dataset, ef):
+@pytest.mark.parametrize("metric", METRICS)
+def test_beam_search_matches_python(small_dataset, ef, metric):
     data, queries = small_dataset
-    adj, _ = knng.build_knng(data, 12)
+    adj, _ = knng.build_knng(data, 12, metric=metric)
     adj_np = np.asarray(adj)
     data_np = np.asarray(data)
-    res = search.knn_search(adj, data, queries[:10], min(ef, 5), ef, 0)
+    res = search.knn_search(adj, data, queries[:10], min(ef, 5), ef, 0,
+                            metric=metric)
     for qi in range(10):
         exp, _ = kanns_python(adj_np, data_np, np.asarray(queries[qi]),
-                              ef, 0)
+                              ef, 0, metric)
         got_ids = [int(i) for i in np.asarray(res.pool_ids[qi]) if i >= 0]
         exp_ids = [i for _, i in exp][:len(got_ids)]
         assert got_ids == exp_ids[:min(ef, 5)][:len(got_ids)]
+
+
+def test_knn_search_l2_bit_identical_to_default(small_dataset):
+    """metric="l2" must return bit-identical pools AND counters to calling
+    knn_search without a metric (the pre-refactor default) — the refactor's
+    no-regression contract on the synthetic dataset."""
+    data, queries = small_dataset
+    adj, _ = knng.build_knng(data, 12)
+    a = search.knn_search(adj, data, queries, 10, 30, 0)
+    b = search.knn_search(adj, data, queries, 10, 30, 0, metric="l2")
+    np.testing.assert_array_equal(np.asarray(a.pool_ids),
+                                  np.asarray(b.pool_ids))
+    np.testing.assert_array_equal(np.asarray(a.pool_dist),
+                                  np.asarray(b.pool_dist))
+    assert int(a.n_fresh) == int(b.n_fresh)
+    assert int(a.n_computed) == int(b.n_computed)
+    assert int(a.hops) == int(b.hops)
+
+
+@pytest.mark.parametrize("metric", ["ip", "cosine"])
+def test_eso_cache_invariance_other_metrics(small_dataset, metric):
+    """The ESO cache stays a pure optimization under every metric."""
+    data, queries = small_dataset
+    adj, _ = knng.build_knng(data, 10, metric=metric)
+    g2 = jnp.stack([adj, adj])
+    b = 8
+    qids = jnp.full((b,), INVALID, jnp.int32)
+    row = jnp.ones((b,), bool)
+    ef = jnp.array([12, 12], jnp.int32)
+    ep = jnp.zeros((b, 2), jnp.int32)
+    kw = dict(ef_max=12, max_hops=60, metric=metric)
+    r1 = search.beam_search(g2, data, queries[:b], qids, row, ef, ep,
+                            share_cache=True, **kw)
+    r2 = search.beam_search(g2, data, queries[:b], qids, row, ef, ep,
+                            share_cache=False, **kw)
+    np.testing.assert_array_equal(np.asarray(r1.pool_ids),
+                                  np.asarray(r2.pool_ids))
+    assert int(r1.n_computed) * 2 == int(r1.n_fresh)   # identical graphs
 
 
 def test_eso_cache_does_not_change_results(small_dataset):

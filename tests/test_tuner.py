@@ -105,6 +105,7 @@ def test_theorem1_r_removed_from_spaces():
         assert "R" not in names
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("mode", ["random", "random_plus", "grid"])
 def test_tune_modes_smoke(mode):
     data, queries = estimator.make_dataset(400, 8, 20, seed=1)
@@ -118,6 +119,7 @@ def test_tune_modes_smoke(mode):
         assert res.counters.total < res.counters.total_base
 
 
+@pytest.mark.slow
 def test_tune_fastpgt_vs_vdtuner_dist_savings():
     data, queries = estimator.make_dataset(500, 8, 20, seed=2)
     kw = dict(budget=6, batch=3, seed=3, scale=0.1, build_batch_size=256,
@@ -128,6 +130,31 @@ def test_tune_fastpgt_vs_vdtuner_dist_savings():
     assert fast.best_qps_at(0.0) > 0
 
 
+@pytest.mark.slow
+def test_tuned_hnsw_cosine_hits_recall_target():
+    """Acceptance: a tuned HNSW on a cosine-metric synthetic dataset reaches
+    recall@10 >= 0.9 at some ef in the default grid."""
+    data, queries = estimator.make_dataset(500, 12, 25, seed=9)
+    from repro.core import eval as evallib
+    gt = evallib.ground_truth(data, queries, 10, metric="cosine")
+    cfgs = [{"efc": 32, "M": 12}, {"efc": 48, "M": 16}]
+    rec = estimator.estimate("hnsw", data, queries, gt, cfgs, group_size=2,
+                             metric="cosine")
+    best = max(p.recall for e in rec.estimates for p in e.points)
+    assert best >= 0.9, f"best cosine recall {best}"
+
+
+def test_tune_metric_threads_to_result():
+    data, queries = estimator.make_dataset(300, 8, 15, seed=4)
+    res = fastpgt.tune("vamana", data, queries, mode="random", budget=2,
+                       batch=2, seed=0, scale=0.1, build_batch_size=256,
+                       ef_grid=[10], metric="cosine")
+    assert res.metric == "cosine"
+    assert res.summary()["metric"] == "cosine"
+    assert all(r >= 0 for _, r in res.objectives)
+
+
+@pytest.mark.slow
 def test_estimator_groups_match_singles():
     """Grouped estimation returns the same (recall) objectives as
     independent estimation — sharing never changes measured quality."""
