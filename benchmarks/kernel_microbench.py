@@ -1,6 +1,13 @@
-"""Kernel-layer microbenchmarks: the Search hot-spot distance kernel and
-the flash-attention substrate, timed on this host (CPU path; the Pallas
-TPU kernels are exercised in interpret mode by tests, not timed here)."""
+"""Kernel-layer microbenchmarks: the Search hot-spot distance kernel, the
+flash-attention substrate, and the search-scaling bench (dense vs hash
+visited state, DESIGN.md §9), timed on this host (CPU path; the Pallas
+TPU kernels are exercised in interpret mode by tests, not timed here).
+
+The search-scaling bench sweeps n ∈ {10k, 100k, 1M synthetic} × visited
+impls and audits the traced jaxpr: in hash mode no intermediate array may
+carry a corpus-sized dimension — i.e. no (b, n) / (b, m, n) state is ever
+materialized — which is the property that makes million-key serving fit
+in memory."""
 from __future__ import annotations
 
 import time
@@ -10,6 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from benchmarks import common
+from repro.core import graph, hashset, search
 from repro.kernels import ops
 
 
@@ -20,6 +28,74 @@ def _time(fn, *args, reps=5):
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
     return (time.perf_counter() - t0) / reps
+
+
+def _corpus_sized_shapes(fn, n: int, *args, **kw) -> list[tuple]:
+    """Shapes of every traced intermediate carrying a dimension == n.
+
+    Walks the jaxpr (recursing into pjit/while/scan/cond sub-jaxprs) and
+    collects equation *output* avals — function inputs (the corpus and the
+    graph are legitimately O(n)) are invars and never flagged."""
+    closed = jax.make_jaxpr(lambda *a: fn(*a, **kw))(*args)
+    bad: list[tuple] = []
+
+    def visit_params(val):
+        if hasattr(val, "jaxpr") and hasattr(val.jaxpr, "eqns"):
+            walk(val.jaxpr)                       # ClosedJaxpr
+        elif hasattr(val, "eqns"):
+            walk(val)                             # Jaxpr
+        elif isinstance(val, (tuple, list)):
+            for v in val:
+                visit_params(v)
+
+    def walk(jaxpr):
+        for eqn in jaxpr.eqns:
+            for v in eqn.outvars:
+                shape = getattr(getattr(v, "aval", None), "shape", ())
+                if n in tuple(shape):
+                    bad.append(tuple(shape))
+            for v in eqn.params.values():
+                visit_params(v)
+
+    walk(closed.jaxpr)
+    return bad
+
+
+def search_scaling_rows(sizes=(10_000, 100_000, 1_000_000)) -> list[str]:
+    """Search memory/QPS scaling: dense bitmap vs hash-set visited state.
+
+    Synthetic corpora (random data + random regular graph — graph quality
+    is irrelevant to the memory/time profile being measured).  Reports QPS
+    and the analytic peak search-state bytes per query batch (visited +
+    V_delta — the quantity DESIGN.md §9 tabulates; process RSS is a
+    lifetime high-water mark and would misattribute earlier configs'
+    peaks, so it is deliberately not reported per row)."""
+    rows = []
+    b, d, deg, k, ef, hops = 8, 32, 16, 10, 32, 64
+    r = np.random.default_rng(0)
+    for n in sizes:
+        data = jnp.asarray(r.normal(size=(n, d)), jnp.float32)
+        adj = graph.random_knng_ids(0, n, deg)[None]       # (1, n, deg)
+        queries = data[:b] + 0.1 * jnp.asarray(
+            r.normal(size=(b, d)), jnp.float32)
+        for impl in ("dense", "hash"):
+            def f(adj, data, queries, impl=impl):
+                return search.knn_search(adj, data, queries, k, ef, 0,
+                                         max_hops=hops, visited_impl=impl)
+            linear = _corpus_sized_shapes(f, n, adj, data, queries)
+            if impl == "hash":
+                assert not linear, (
+                    f"hash mode materialized corpus-sized state: {linear}")
+                slots = hashset.auto_slots(hops, deg)
+                state_bytes = b * slots * 4
+            else:
+                assert linear, "audit sanity: dense mode must show (b,m,n)"
+                state_bytes = b * n                   # visited bool[b, 1, n]
+            sec = _time(f, adj, data, queries, reps=3)
+            rows.append(common.row(
+                f"search_scaling/{impl}/n={n}", sec * 1e6,
+                f"qps={b / sec:.1f} state_bytes={state_bytes}"))
+    return rows
 
 
 def run() -> list[str]:
@@ -49,6 +125,7 @@ def run() -> list[str]:
         rows.append(common.row(
             f"kernel/flash_attention/{b}x{h}x{s}x{dh}", sec * 1e6,
             f"gflops={gflops:.1f}"))
+    rows += search_scaling_rows()
     return rows
 
 

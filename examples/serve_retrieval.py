@@ -1,6 +1,15 @@
 """Serve a small model with batched requests + retrieval attention over a
 PG-indexed KV cache — where FastPGT meets the LM stack (paper ref [8]).
 
+Batched serving API: ``retrieval.retrieval_attention_batched(idx, q,
+top_k=..., ef=...)`` blocks a large or ragged decode-query batch into
+static bucketed shapes (padding rows are masked out of the search), so XLA
+compiles one search per block shape and reuses it across requests — and
+each query's visit state is an O(ef) hash set rather than an O(n_ctx)
+bitmap (``visited_impl="hash"``, the serving default; DESIGN.md §9), so
+the same code path serves million-key caches.  The demo below pushes all
+16 decode queries through it in one call.
+
   PYTHONPATH=src python examples/serve_retrieval.py
 """
 import dataclasses
@@ -53,7 +62,8 @@ def main():
     bp = vamana.VamanaParams(L=best[0]["L"], M=best[0]["M"],
                              alpha=best[0]["alpha"])
     idx = retrieval.build_index(keys, values, bp, metric="ip")
-    approx, sr = retrieval.retrieval_attention(idx, q, top_k=48, ef=96)
+    approx, sr = retrieval.retrieval_attention_batched(
+        idx, q, top_k=48, ef=96, block_size=8)
     exact = retrieval.exact_attention(keys, values, q)
     cos = jnp.sum(approx * exact, -1) / (
         jnp.linalg.norm(approx, axis=-1) * jnp.linalg.norm(exact, axis=-1))

@@ -74,11 +74,13 @@ def evaluate_search_fn(
 
 
 def flat_graph_search_fn(g: MultiGraph, graph_idx: int, data, entry: int,
-                         k: int, metric: str = "l2"):
+                         k: int, metric: str = "l2",
+                         visited_impl: str = "dense"):
     """Search closure for single-layer graphs (Vamana/NSG)."""
     def fn(queries, ef):
         return search.knn_search(
-            g.ids[graph_idx], data, queries, k, ef, entry, metric=metric)
+            g.ids[graph_idx], data, queries, k, ef, entry, metric=metric,
+            visited_impl=visited_impl)
     return fn
 
 

@@ -1,0 +1,127 @@
+"""Fixed-size open-addressing hash sets for O(ef)-memory search state.
+
+``beam_search`` historically tracked per-(query, graph) visit state in a
+dense ``bool[b, m, n]`` bitmap and the shared V_delta has-bit in
+``bool[b, n]`` — per-query memory linear in the corpus, which caps serving
+at ~10^5 keys.  GPU-era proximity-graph systems (CAGRA-style traversal)
+replace the bitmap with a small per-query hash table; this module is that
+structure for the jnp/Pallas lockstep search: int32-keyed open addressing,
+power-of-two slot counts, linear probing with a fixed probe budget, every
+operation expressed as gathers/scatters so it stays jit-able inside a
+``lax.while_loop``.
+
+Memory model, sizing, and the collision/counter contract are written down
+in DESIGN.md §9.  The short version:
+
+* Lookups have **no false positives**: a slot matches only when it holds
+  the exact key, so search never wrongly skips a node.
+* A full table (or an exhausted probe budget) degrades to **false
+  negatives**: the insert is dropped, the node may be revisited later, and
+  ``#dist`` counters over-count relative to dense mode.  ``auto_slots``
+  sizes tables to the worst-case insert count (load factor <= 1/2), which
+  makes drops rare — but a search approaching that worst case can still
+  grow a probe cluster past ``PROBES``, so counter equality with dense
+  mode is an expectation, not a guarantee (DESIGN.md §9.3).
+* Keys must be non-negative and **distinct within a row** per call
+  (callers dedup first); duplicate keys would both report ``inserted``.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+EMPTY = -1          # empty-slot sentinel; valid keys are vector ids >= 0
+PROBES = 16         # linear-probe budget per lookup/insert
+SLOTS_CAP = 1 << 17         # per-(query, graph) visited-table cap
+CACHE_SLOTS_CAP = 1 << 18   # per-query V_delta-table cap
+
+
+def next_pow2(x: int) -> int:
+    return 1 << max(0, int(x) - 1).bit_length() if x > 1 else 1
+
+
+def auto_slots(max_hops: int, max_degree: int, *,
+               searches: int = 1, cap: int = SLOTS_CAP) -> int:
+    """Power-of-two table size covering the worst-case insert count.
+
+    A search expands at most one pool entry per (query, graph) per hop, so
+    one search inserts at most ``1 + max_hops * max_degree`` distinct ids
+    per (query, graph) — entry point + per-hop adjacency rows (``ef``
+    drives this only through the hop bound: ``default_max_hops`` is
+    ~3·ef).  Sizing to twice that keeps the load factor <= 1/2, under
+    which linear probing terminates well inside ``PROBES`` steps;
+    ``searches`` scales the bound for tables shared by several searches —
+    m graphs for the V_delta union, times the layer count when a cache is
+    carried across an HNSW descent.  The cap bounds memory for very large
+    ef/hops; past it — or if a worst-case search grows a probe cluster
+    beyond ``PROBES`` — overflow semantics apply (DESIGN.md §9).
+    """
+    worst = 1 + max_hops * max_degree
+    return max(64, min(next_pow2(2 * searches * worst), cap))
+
+
+def make_tables(shape_prefix: tuple[int, ...], slots: int) -> jax.Array:
+    """Empty tables int32[*shape_prefix, slots], all slots EMPTY."""
+    if slots & (slots - 1):
+        raise ValueError(f"slots must be a power of two, got {slots}")
+    return jnp.full(shape_prefix + (slots,), EMPTY, jnp.int32)
+
+
+def _mix32(x: jax.Array) -> jax.Array:
+    """lowbias32 finalizer: avalanche int32 ids into uniform hash bits."""
+    x = x.astype(jnp.uint32)
+    x = (x ^ (x >> 16)) * jnp.uint32(0x7FEB352D)
+    x = (x ^ (x >> 15)) * jnp.uint32(0x846CA68B)
+    return x ^ (x >> 16)
+
+
+def home_slot(keys: jax.Array, slots: int) -> jax.Array:
+    """int32 home slot per key (keys hashed, masked to the table size)."""
+    return (_mix32(keys) & jnp.uint32(slots - 1)).astype(jnp.int32)
+
+
+def lookup_insert(table: jax.Array, keys: jax.Array, active: jax.Array, *,
+                  probes: int = PROBES
+                  ) -> tuple[jax.Array, jax.Array, jax.Array]:
+    """Combined membership test + insert, vectorized over leading dims.
+
+    Args:
+      table:  int32[..., S] open-addressing tables (S a power of two).
+      keys:   int32[..., K] candidate keys, >= 0 wherever ``active``.
+      active: bool[..., K]  lanes to process (others untouched).
+
+    Returns ``(table, found, inserted)``: ``found`` marks keys already
+    present *before* this call, ``inserted`` marks keys newly stored.
+    Active keys that are neither (probe budget exhausted on a full
+    cluster) were dropped — the caller treats them as unvisited, which is
+    the revisit-tolerant degradation documented in DESIGN.md §9.
+
+    Concurrent inserts within a row race for slots; losers are detected by
+    re-reading the slot after the scatter and continue probing, so the
+    linear-probing invariant (a stored key sits within ``probes`` steps of
+    its home slot) holds for every stored key.
+    """
+    S = table.shape[-1]
+    K = keys.shape[-1]
+    tab = table.reshape(-1, S)
+    kk = keys.reshape(-1, K)
+    rows = jnp.arange(tab.shape[0])[:, None]
+    h = home_slot(kk, S)
+    found = jnp.zeros(kk.shape, bool)
+    inserted = jnp.zeros(kk.shape, bool)
+    pending = active.reshape(-1, K)
+    for p in range(probes):
+        slot = (h + p) & (S - 1)
+        cur = jnp.take_along_axis(tab, slot, axis=-1)
+        hit = pending & (cur == kk)
+        found = found | hit
+        pending = pending & ~hit
+        attempt = pending & (cur == EMPTY)
+        tgt = jnp.where(attempt, slot, S)                  # S = dropped
+        tab = tab.at[rows, tgt].set(jnp.where(attempt, kk, EMPTY),
+                                    mode="drop")
+        won = attempt & (jnp.take_along_axis(tab, slot, axis=-1) == kk)
+        inserted = inserted | won
+        pending = pending & ~won
+    return (tab.reshape(table.shape), found.reshape(active.shape),
+            inserted.reshape(active.shape))

@@ -18,7 +18,7 @@ import math
 import jax.numpy as jnp
 import numpy as np
 
-from repro.core import commit, graph, prune, search
+from repro.core import commit, graph, hashset, prune, search
 from repro.core import metric as metric_lib
 from repro.core.counters import BuildCounters
 from repro.core.graph import INVALID
@@ -66,6 +66,7 @@ def build_multi_hnsw(
     max_level: int = 4,
     max_hops: int | None = None,
     metric: str = "l2",
+    visited_impl: str = "dense",
 ) -> HNSWBuildResult:
     met = metric_lib.resolve(metric)
     data = met.prepare(data)      # normalize ONCE for cosine (no-op otherwise)
@@ -111,7 +112,14 @@ def build_multi_hnsw(
         queries = data[jnp.minimum(u, n - 1)]
         qids = jnp.where(jnp.array(row_mask_np), u, INVALID)
         entry = _mk_entry(b, m, ep)
-        cache_d, cache_has = search.fresh_cache(b, n, use_eso)
+        # One V_delta per inserted node across all layers/graphs; the hash
+        # table must therefore cover m graphs x n_layers carried searches,
+        # or inserts drop (and #dist inflates) before the size cap binds
+        # (DESIGN.md §9).
+        cache_d, cache_has = search.fresh_cache(
+            b, n, use_eso, visited_impl,
+            slots=hashset.auto_slots(hops, M_max, searches=m * n_layers,
+                                     cap=hashset.CACHE_SLOTS_CAP))
 
         for layer in range(top, -1, -1):
             desc_np = row_mask_np & (lvl_np < layer)
@@ -122,7 +130,7 @@ def build_multi_hnsw(
                     lids[layer], data, queries, qids, jnp.array(desc_np),
                     ones, entry, cache_d, cache_has,
                     ef_max=1, max_hops=hops, share_cache=use_eso,
-                    metric=kform)
+                    metric=kform, visited_impl=visited_impl)
                 cache_d, cache_has = res.cache_d, res.cache_has
                 ctr.search_base += int(res.n_fresh)
                 ctr.search += int(res.n_computed)
@@ -136,7 +144,7 @@ def build_multi_hnsw(
                     lids[layer], data, queries, qids, ins_mask,
                     efc, entry, cache_d, cache_has,
                     ef_max=efc_max, max_hops=hops, share_cache=use_eso,
-                    metric=kform)
+                    metric=kform, visited_impl=visited_impl)
                 cache_d, cache_has = res.cache_d, res.cache_has
                 ctr.search_base += int(res.n_fresh)
                 ctr.search += int(res.n_computed)
@@ -172,8 +180,13 @@ def build_hnsw(data, p: HNSWParams, **kw) -> HNSWBuildResult:
 
 def hnsw_search(g: HNSWGraphs, graph_idx: int, data, queries, k: int, ef: int,
                 max_hops: int | None = None, *,
-                metric: str = "l2") -> search.SearchResult:
+                metric: str = "l2",
+                visited_impl: str = "dense") -> search.SearchResult:
     """Layered k-ANNS on one of the m built HNSW graphs."""
+    if k > ef:
+        raise ValueError(
+            f"k={k} > ef={ef}: slots beyond ef are INVALID padding; raise "
+            f"ef to at least k")
     met = metric_lib.resolve(metric)
     data = met.prepare(data)          # once, not per layer
     queries = met.prepare(queries)
@@ -188,14 +201,16 @@ def hnsw_search(g: HNSWGraphs, graph_idx: int, data, queries, k: int, ef: int,
         res = search.beam_search(
             g.layer_ids[layer, graph_idx][None], data, queries, qids, row,
             jnp.ones((1,), jnp.int32), entry,
-            ef_max=1, max_hops=hops, share_cache=False, metric=metric)
+            ef_max=1, max_hops=hops, share_cache=False, metric=metric,
+            visited_impl=visited_impl)
         got = res.pool_ids[:, :, 0]
         entry = jnp.where(got != INVALID, got, entry)
         nf += int(res.n_fresh); nc += int(res.n_computed)
     res = search.beam_search(
         g.layer_ids[0, graph_idx][None], data, queries, qids, row,
         jnp.array([ef], jnp.int32), entry,
-        ef_max=ef, max_hops=hops, share_cache=False, metric=metric)
+        ef_max=ef, max_hops=hops, share_cache=False, metric=metric,
+        visited_impl=visited_impl)
     return search.SearchResult(
         res.pool_ids[:, 0, :k], res.pool_dist[:, 0, :k],
         res.n_fresh + nf, res.n_computed + nc, res.hops,

@@ -56,6 +56,7 @@ def build_multi_nsg(
     max_hops: int | None = None,
     repair_iters: int = 2,
     metric: str = "l2",
+    visited_impl: str = "dense",
 ) -> NSGBuildResult:
     del seed
     met = metric_lib.resolve(metric)
@@ -99,7 +100,7 @@ def build_multi_nsg(
         res = search.beam_search(
             init_stack, data, queries, jnp.where(row_mask, u, INVALID),
             row_mask, L, entry, ef_max=L_max, max_hops=hops,
-            share_cache=use_eso, metric=kform)
+            share_cache=use_eso, metric=kform, visited_impl=visited_impl)
         ctr.search_base += int(res.n_fresh)
         ctr.search += int(res.n_computed)
 

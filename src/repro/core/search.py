@@ -7,11 +7,22 @@ each hop expands the closest unexpanded pool entry per (query, graph), gathers
 its out-neighbors, computes distances through the V_delta-aware kernel and
 merges by a sorted top-k.
 
-ESO (shared V_delta cache): with ``share_cache=True`` a per-query distance
-row ``(b, n)`` is shared by all m graphs — exactly the paper's Alg. 3 cache.
-The *total* number of computed distances equals the size of the union of
+ESO (shared V_delta cache): with ``share_cache=True`` a per-query membership
+structure is shared by all m graphs — exactly the paper's Alg. 3 cache.  The
+*total* number of computed distances equals the size of the union of
 (query, neighbor) pairs any graph visits, independent of visit order, so the
 lockstep schedule reports the same #dist as the paper's sequential one.
+
+Visited/V_delta representation (``visited_impl``, DESIGN.md §9):
+  "dense"  bool[b, m, n] visit bitmap + bool[b, n] V_delta has-bit.  Exact
+           membership, exact #dist counters, O(n) memory per query — the
+           builder/estimation default (§2.1 bit-identity).
+  "hash"   fixed-size open-addressing hash sets (core/hashset.py): int32
+           keys, power-of-two slots sized from the hop bound × degree
+           (max_hops defaults to ~3·ef, so ef drives the size), linear
+           probing in-loop.  O(ef·M·hops) memory per query independent of
+           n — the serving default.  No false positives; overflow degrades
+           to revisits, so hash-mode counters upper-bound dense counters.
 
 Counters (paper metrics):
   n_fresh    — distances each graph would compute alone (no sharing): the
@@ -36,9 +47,12 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from repro.core import hashset
 from repro.core import metric as metric_lib
 from repro.core.graph import INVALID
 from repro.kernels import ops
+
+VISITED_IMPLS = ("dense", "hash")
 
 
 class SearchResult(NamedTuple):
@@ -48,17 +62,25 @@ class SearchResult(NamedTuple):
     n_computed: jax.Array  # int32[] actually computed (ESO)
     hops: jax.Array        # int32[]
     cache_d: jax.Array     # float32[b, n] V_delta (or [b, 1] dummy)
-    cache_has: jax.Array   # bool[b, n]
+    cache_has: jax.Array   # bool[b, n] dense | int32[b, S] hash key table
 
 
-def fresh_cache(b: int, n: int, share_cache: bool
+def fresh_cache(b: int, n: int, share_cache: bool,
+                visited_impl: str = "dense", *, slots: int | None = None
                 ) -> tuple[jax.Array, jax.Array]:
     """Empty V_delta — 'initialize V_delta as -1 for each vector' (Alg. 5 l.7).
 
-    Only the has-bit is materialized (see _expand_all_graphs); cache_d is a
-    dummy kept for API stability."""
+    Only membership is materialized (see _expand_all_graphs); cache_d is a
+    dummy kept for API stability.  In hash mode (DESIGN.md §9) membership
+    is an int32[b, slots] open-addressing key table instead of bool[b, n];
+    callers carrying the cache across calls size ``slots`` once via
+    ``hashset.auto_slots``."""
+    dummy = jnp.zeros((b, 1), jnp.float32)
+    if share_cache and visited_impl == "hash":
+        return (dummy, hashset.make_tables(
+            (b,), slots or hashset.CACHE_SLOTS_CAP >> 4))
     w = n if share_cache else 1
-    return (jnp.zeros((b, 1), jnp.float32), jnp.zeros((b, w), bool))
+    return (dummy, jnp.zeros((b, w), bool))
 
 
 def _first_occurrence(ids: jax.Array, sentinel: int) -> jax.Array:
@@ -87,11 +109,16 @@ def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
     Cross-graph duplicate candidates within the hop are deduplicated
     (first occurrence in graph order), so the computed-distance counter
     equals the sequential schedule's |union| exactly.
+
+    ``visited`` is either the dense bool[b, m, n] bitmap or an int32
+    [b, m, S] hash-key table (dispatch on dtype; DESIGN.md §9), and
+    ``cache_has`` likewise bool[b, n] or int32[b, S'].
     """
     b, m, ef_max = pool_ids.shape
     n = data.shape[0]
     mx = graph_ids.shape[2]
     brange = jnp.arange(b)
+    hash_visited = visited.dtype != jnp.bool_
 
     unexp = (pool_ids != INVALID) & (~expanded) & slot_mask[None]
     act = jnp.any(unexp, axis=-1) & row_mask[:, None]            # (b, m)
@@ -104,16 +131,25 @@ def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
 
     nbrs = graph_ids[jnp.arange(m)[None, :], u_safe]             # (b, m, Mx)
     nbrs_safe = jnp.maximum(nbrs, 0)
-    vis = visited[brange[:, None, None], jnp.arange(m)[None, :, None],
-                  nbrs_safe]
-    valid = ((nbrs != INVALID) & (~vis) & act[..., None]
-             & (nbrs != query_ids[:, None, None]))
     # same-id duplicates within one adjacency row count/insert once
     # (small Mx: a triangular compare beats a sort here)
     eq = nbrs_safe[..., :, None] == nbrs_safe[..., None, :]
     tri = jnp.tril(jnp.ones((mx, mx), bool), k=-1)
     dup = jnp.any(eq & tri[None, None], axis=-1)
-    valid = valid & ~dup
+    prelim = ((nbrs != INVALID) & act[..., None]
+              & (nbrs != query_ids[:, None, None]) & ~dup)
+    if hash_visited:
+        visited, vis, _ = hashset.lookup_insert(visited, nbrs_safe, prelim)
+        # Overflow guard: a dropped insert can re-propose a node that is
+        # already pooled; dense mode can't (pool membership implies a set
+        # visit bit), so only hash mode pays this compare (DESIGN.md §9).
+        in_pool = jnp.any(
+            nbrs_safe[..., :, None] == pool_ids[..., None, :], axis=-1)
+        valid = prelim & ~vis & ~in_pool
+    else:
+        vis = visited[brange[:, None, None], jnp.arange(m)[None, :, None],
+                      nbrs_safe]
+        valid = prelim & ~vis
 
     flat_ids = nbrs_safe.reshape(b, m * mx)
     flat_valid = valid.reshape(b, m * mx)
@@ -129,23 +165,31 @@ def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
     dists = ops.gather_distance(queries, cvec, metric=metric)
     if share_cache:
         # V_delta's domain is exactly the union of per-graph visit sets, so
-        # only a has-bit is tracked; the values come from the batched kernel
+        # only membership is tracked; the values come from the batched kernel
         # either way (lockstep hardware computes the tile regardless —
-        # DESIGN.md §3, §Perf iteration 5). #dist counters stay exact.
-        has = cache_has[brange[:, None], flat_ids]
-        need = flat_valid & ~has
-        scat = jnp.where(need, flat_ids, n)
-        cache_has = cache_has.at[brange[:, None], scat].set(
-            True, mode="drop")
-        n_comp = jnp.sum(need & first).astype(jnp.int32)
+        # DESIGN.md §3, §Perf iteration 5). #dist counters stay exact in
+        # dense mode; hash mode upper-bounds them under overflow (§9).
+        if cache_has.dtype != jnp.bool_:
+            # first-occurrence lanes only: keys distinct within each row.
+            cache_has, c_found, _ = hashset.lookup_insert(
+                cache_has, flat_ids, first)
+            n_comp = jnp.sum(first & ~c_found).astype(jnp.int32)
+        else:
+            has = cache_has[brange[:, None], flat_ids]
+            need = flat_valid & ~has
+            scat = jnp.where(need, flat_ids, n)
+            cache_has = cache_has.at[brange[:, None], scat].set(
+                True, mode="drop")
+            n_comp = jnp.sum(need & first).astype(jnp.int32)
     else:
         n_comp = jnp.sum(flat_valid).astype(jnp.int32)
     n_fresh = jnp.sum(flat_valid).astype(jnp.int32)
 
-    scat_v = jnp.where(flat_valid, flat_ids, n).reshape(b, m, mx)
-    visited = visited.at[brange[:, None, None],
-                         jnp.arange(m)[None, :, None],
-                         scat_v].set(True, mode="drop")
+    if not hash_visited:
+        scat_v = jnp.where(flat_valid, flat_ids, n).reshape(b, m, mx)
+        visited = visited.at[brange[:, None, None],
+                             jnp.arange(m)[None, :, None],
+                             scat_v].set(True, mode="drop")
 
     dists3 = dists.reshape(b, m, mx)
     cand_ids = jnp.where(valid, nbrs, INVALID)
@@ -163,7 +207,8 @@ def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("ef_max", "max_hops", "share_cache", "metric"))
+    static_argnames=("ef_max", "max_hops", "share_cache", "metric",
+                     "visited_impl", "hash_slots"))
 def beam_search(
     graph_ids: jax.Array,      # int32[m, n, Mx]
     data: jax.Array,           # f32[n, d]
@@ -179,7 +224,12 @@ def beam_search(
     max_hops: int,
     share_cache: bool,
     metric: str = "l2",
+    visited_impl: str = "dense",
+    hash_slots: int | None = None,
 ) -> SearchResult:
+    if visited_impl not in VISITED_IMPLS:
+        raise ValueError(
+            f"visited_impl {visited_impl!r} not in {VISITED_IMPLS}")
     met = metric_lib.resolve(metric)
     if met.normalize:
         # One in-jit normalization per call; builders avoid even this by
@@ -187,7 +237,7 @@ def beam_search(
         data = metric_lib.normalize(data)
         queries = metric_lib.normalize(queries)
     metric = met.kernel
-    m, n, _ = graph_ids.shape
+    m, n, mx = graph_ids.shape
     b = queries.shape[0]
     brange = jnp.arange(b)
     slot_mask = jnp.arange(ef_max)[None, :] < ef[:, None]        # (m, ef_max)
@@ -196,9 +246,21 @@ def beam_search(
     pool_ids = jnp.full((b, m, ef_max), INVALID, jnp.int32)
     pool_dist = jnp.full((b, m, ef_max), jnp.inf, jnp.float32)
     expanded = jnp.zeros((b, m, ef_max), bool)
-    visited = jnp.zeros((b, m, n), bool)
+    if visited_impl == "hash":
+        slots = hash_slots or hashset.auto_slots(max_hops, mx)
+        visited = hashset.make_tables((b, m), slots)
+    else:
+        visited = jnp.zeros((b, m, n), bool)
     if cache_d is None:
-        cache_d, cache_has = fresh_cache(b, n, share_cache)
+        # The V_delta union absorbs all m graphs' inserts, so a caller-
+        # supplied per-(query, graph) hash_slots is scaled by m here.
+        cache_slots = (
+            min(hashset.next_pow2(m * hash_slots), hashset.CACHE_SLOTS_CAP)
+            if hash_slots else
+            hashset.auto_slots(max_hops, mx, searches=m,
+                               cap=hashset.CACHE_SLOTS_CAP))
+        cache_d, cache_has = fresh_cache(b, n, share_cache, visited_impl,
+                                         slots=cache_slots)
     n_fresh = jnp.int32(0)
     n_comp = jnp.int32(0)
 
@@ -209,18 +271,28 @@ def beam_search(
         evec = data[ep_safe][:, None, :]                         # (b, 1, d)
         d0 = ops.gather_distance(queries, evec, metric=metric)[:, 0]
         if share_cache:
-            has = cache_has[brange, ep_safe]
-            need = ok & ~has
-            scat = jnp.where(need, ep_safe, n)
-            cache_has = cache_has.at[brange, scat].set(True, mode="drop")
+            if cache_has.dtype != jnp.bool_:
+                cache_has, c_found, _ = hashset.lookup_insert(
+                    cache_has, ep_safe[:, None], ok[:, None])
+                need = ok & ~c_found[:, 0]
+            else:
+                has = cache_has[brange, ep_safe]
+                need = ok & ~has
+                scat = jnp.where(need, ep_safe, n)
+                cache_has = cache_has.at[brange, scat].set(True, mode="drop")
             n_comp += jnp.sum(need).astype(jnp.int32)
         else:
             n_comp += jnp.sum(ok).astype(jnp.int32)
         n_fresh += jnp.sum(ok).astype(jnp.int32)
         pool_ids = pool_ids.at[:, i, 0].set(jnp.where(ok, ep, INVALID))
         pool_dist = pool_dist.at[:, i, 0].set(jnp.where(ok, d0, jnp.inf))
-        visited = visited.at[brange, i, jnp.where(ok, ep_safe, 0)].set(
-            visited[brange, i, jnp.where(ok, ep_safe, 0)] | ok)
+        if visited_impl == "hash":
+            vtab, _, _ = hashset.lookup_insert(
+                visited[:, i], ep_safe[:, None], ok[:, None])
+            visited = visited.at[:, i].set(vtab)
+        else:
+            visited = visited.at[brange, i, jnp.where(ok, ep_safe, 0)].set(
+                visited[brange, i, jnp.where(ok, ep_safe, 0)] | ok)
 
     state = (pool_ids, pool_dist, expanded, visited, cache_d, cache_has,
              n_fresh, n_comp, jnp.int32(0))
@@ -259,22 +331,36 @@ def default_max_hops(ef_max: int) -> int:
 def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
                k: int, ef: int, entry: int | jax.Array,
                max_hops: int | None = None, *,
-               metric: str = "l2") -> SearchResult:
+               metric: str = "l2",
+               visited_impl: str = "dense",
+               hash_slots: int | None = None,
+               row_mask: jax.Array | None = None) -> SearchResult:
     """Single-graph external k-ANNS (evaluation path, Alg. 1).
 
     ``metric`` must match the metric the graph was built under; pool
     distances come back in that metric's units (core/metric.py convention).
+    ``visited_impl="hash"`` swaps the dense visit bitmap for the O(ef)
+    hash-set state (DESIGN.md §9) — the serving default via
+    serve/retrieval.py.  ``row_mask`` marks padding rows that must do no
+    search work (static-shape batching; their pools come back INVALID).
     """
+    if k > ef:
+        raise ValueError(
+            f"k={k} > ef={ef}: the search pool holds only ef candidates, so "
+            f"slots beyond ef would be INVALID padding, silently returning "
+            f"fewer than k real neighbors; raise ef to at least k")
     if graph_ids.ndim == 2:
         graph_ids = graph_ids[None]
     b = queries.shape[0]
     ep = jnp.broadcast_to(jnp.asarray(entry, jnp.int32), (b,))[:, None]
     res = beam_search(
         graph_ids, data, queries,
-        jnp.full((b,), INVALID, jnp.int32), jnp.ones((b,), bool),
+        jnp.full((b,), INVALID, jnp.int32),
+        jnp.ones((b,), bool) if row_mask is None else row_mask,
         jnp.array([ef], jnp.int32), ep,
         ef_max=ef, max_hops=max_hops or default_max_hops(ef),
-        share_cache=False, metric=metric)
+        share_cache=False, metric=metric, visited_impl=visited_impl,
+        hash_slots=hash_slots)
     return SearchResult(res.pool_ids[:, 0, :k], res.pool_dist[:, 0, :k],
                         res.n_fresh, res.n_computed, res.hops,
                         res.cache_d, res.cache_has)

@@ -45,16 +45,19 @@ class EstimationRecord:
         return self.build_seconds + self.eval_seconds
 
 
-def _eval_one(pg, build_res, gi, data, queries, gt, k, ef_grid, timing_reps):
+def _eval_one(pg, build_res, gi, data, queries, gt, k, ef_grid, timing_reps,
+              visited_impl="dense"):
     metric = build_res.metric     # search under the metric the graph records
     if pg == "hnsw":
         def fn(q, ef):
             return hnswlib.hnsw_search(build_res.g, gi, data, q, k, ef,
-                                       metric=metric)
+                                       metric=metric,
+                                       visited_impl=visited_impl)
     else:
         def fn(q, ef):
             return evallib.flat_graph_search_fn(
-                build_res.g, gi, data, build_res.entry, k, metric)(q, ef)
+                build_res.g, gi, data, build_res.entry, k, metric,
+                visited_impl)(q, ef)
     return evallib.evaluate_search_fn(fn, queries, gt, k, ef_grid,
                                       timing_reps=timing_reps)
 
@@ -75,11 +78,16 @@ def estimate(
     build_batch_size: int = 256,
     timing_reps: int = 1,
     metric: str = "l2",
+    visited_impl: str = "dense",
 ) -> EstimationRecord:
     """Estimate the quality of each configuration in ``cfgs``.
 
     ``gt`` must be metric-correct ground truth (eval.ground_truth(...,
     metric=metric)) so (QPS, Recall) frontiers are comparable across metrics.
+    ``visited_impl`` selects the search visit-state representation for both
+    build and evaluation searches; "dense" (default) keeps the paper-exact
+    #dist counters the tables report, "hash" estimates with the O(ef)
+    serving memory profile (DESIGN.md §9).
     """
     ef_grid = ef_grid or [max(10, k), 2 * k, 4 * k, 8 * k]
     # Prepare the data ONCE and hand the kernel form down: otherwise every
@@ -105,13 +113,14 @@ def estimate(
             pg, data, bps, seed=seed,
             use_eso=use_eso and len(group) > 1,
             use_epo=use_epo and len(group) > 1,
-            batch_size=build_batch_size, metric=metric)
+            batch_size=build_batch_size, metric=metric,
+            visited_impl=visited_impl)
         t_build += time.perf_counter() - t0
         ctr = ctr.add(res.counters)
         t0 = time.perf_counter()
         for gi, cfg in enumerate(group):
             points = _eval_one(pg, res, gi, data, queries, gt, k, ef_grid,
-                               timing_reps)
+                               timing_reps, visited_impl)
             qps, recall = evallib.frontier_objectives(points)
             n_dist_eval += sum(p.n_dist for p in points)
             estimates.append(Estimate(cfg=cfg, qps=qps, recall=recall,

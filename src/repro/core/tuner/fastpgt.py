@@ -84,6 +84,7 @@ def tune(
     mc_samples: int = 48,
     timing_reps: int = 1,
     metric: str = "l2",
+    visited_impl: str = "dense",
 ) -> TuneResult:
     from repro.core import eval as evallib   # local: avoids cycles
 
@@ -116,7 +117,7 @@ def tune(
             pg, data, queries, gt, cfgs, k=k, ef_grid=ef_grid,
             group_size=group_size, use_eso=eso, use_epo=epo, seed=seed,
             build_batch_size=build_batch_size, timing_reps=timing_reps,
-            metric=metric)
+            metric=metric, visited_impl=visited_impl)
         t_est += time.perf_counter() - t0
         ctr = ctr.add(rec.counters)
         n_dist_eval += rec.n_dist_eval

@@ -104,18 +104,18 @@ def to_build_params(pg: str, cfg: dict[str, Any]):
 
 def build_many(pg: str, data, build_params: list, *, seed: int,
                use_eso: bool, use_epo: bool, batch_size: int,
-               metric: str = "l2"):
+               metric: str = "l2", visited_impl: str = "dense"):
     """Dispatch to the multi-builders. Returns the per-PG BuildResult."""
     if pg == "hnsw":
         return hnswlib.build_multi_hnsw(
             data, build_params, seed=seed, use_eso=use_eso, use_epo=use_epo,
-            batch_size=batch_size, metric=metric)
+            batch_size=batch_size, metric=metric, visited_impl=visited_impl)
     if pg == "vamana":
         return vamanalib.build_multi_vamana(
             data, build_params, seed=seed, use_eso=use_eso, use_epo=use_epo,
-            batch_size=batch_size, metric=metric)
+            batch_size=batch_size, metric=metric, visited_impl=visited_impl)
     if pg == "nsg":
         return nsglib.build_multi_nsg(
             data, build_params, seed=seed, use_eso=use_eso, use_epo=use_epo,
-            batch_size=batch_size, metric=metric)
+            batch_size=batch_size, metric=metric, visited_impl=visited_impl)
     raise ValueError(pg)

@@ -6,6 +6,11 @@ graph frozen at batch start (standard GPU/TPU relaxation, DESIGN.md §3),
 shares one V_delta across the m per-node searches (ESO), chains the m prunes
 through mPrune (EPO, group sorted ascending by alpha for soundness), and
 commits forward + reverse edges with overflow re-prune.
+
+``visited_impl`` selects the search's visit-state representation; builds
+default to "dense" so graph outputs and #dist counters stay bit-identical
+to the paper's accounting (DESIGN.md §2.1, §9) — "hash" trades exact
+counters for O(ef)-memory search state.
 """
 from __future__ import annotations
 
@@ -50,6 +55,7 @@ def build_multi_vamana(
     k_in: int = 16,
     max_hops: int | None = None,
     metric: str = "l2",
+    visited_impl: str = "dense",
 ) -> BuildResult:
     met = metric_lib.resolve(metric)
     data = met.prepare(data)      # normalize ONCE for cosine (no-op otherwise)
@@ -97,7 +103,7 @@ def build_multi_vamana(
         res = search.beam_search(
             g.ids, data, queries, jnp.where(row_mask, u, INVALID), row_mask,
             L, entry, ef_max=L_max, max_hops=hops, share_cache=use_eso,
-            metric=kform)
+            metric=kform, visited_impl=visited_impl)
         ctr.search_base += int(res.n_fresh)
         ctr.search += int(res.n_computed)
 

@@ -15,6 +15,17 @@ rather than the angle-only approximation the old normalize-and-L2 hack gave.
 and stored on the index; queries normalized per call — never the full key
 matrix again), as does plain "l2".
 
+Serving memory model (DESIGN.md §9): decode-time searches default to
+``visited_impl="hash"`` — per-query visit state is an O(ef·M·hops)
+open-addressing hash set instead of the dense O(n) bitmap, so search memory
+is independent of context length and the path scales to million-key caches.
+Builders keep the dense default (§2.1 bit-identity of build outputs).
+
+``retrieval_attention`` answers one decode batch; for heavy traffic,
+``retrieval_attention_batched`` blocks large/ragged query batches into
+static bucketed shapes (graph.bucket) so XLA compiles one search per block
+shape and reuses it across requests.
+
 Scope: per-(layer, head) indexes over a frozen prefill cache (the common
 RAG/long-doc serving pattern); incremental insertion reuses the same
 builders batch-wise.
@@ -26,6 +37,7 @@ import dataclasses
 import jax
 import jax.numpy as jnp
 
+from repro.core import graph as graph_lib
 from repro.core import metric as metric_lib
 from repro.core import search as search_lib
 from repro.core import vamana as vamana_lib
@@ -65,28 +77,83 @@ def build_index(keys: jax.Array, values: jax.Array,
                           params=params, metric=met.name)
 
 
-def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
-                        ef: int, scale: float | None = None
-                        ) -> tuple[jax.Array, search_lib.SearchResult]:
-    """Approximate attention for decode queries q: (B, dh).
-
-    Searches the PG for top_k keys per query and softmax-attends over just
-    those.  Returns (out (B, dh), SearchResult for instrumentation).
-    """
+def _attend(idx: RetrievalIndex, q: jax.Array, pool_ids: jax.Array,
+            scale: float | None) -> jax.Array:
+    """Softmax-attend queries (B, dh) over retrieved key ids (B, k)."""
     dh = q.shape[-1]
     scale = scale or 1.0 / (dh ** 0.5)
-    met = metric_lib.resolve(idx.metric)
-    qs = met.prepare(q)            # per-call cost is (B, dh) — keys untouched
-    res = search_lib.knn_search(idx.graph_ids, idx.search_keys, qs,
-                                top_k, ef, idx.entry, metric=met.kernel)
-    ids = jnp.maximum(res.pool_ids, 0)                    # (B, k)
-    valid = res.pool_ids >= 0
+    ids = jnp.maximum(pool_ids, 0)                        # (B, k)
+    valid = pool_ids >= 0
     k_sel = idx.keys[ids]                                 # (B, k, dh)
     v_sel = idx.values[ids]
     logits = jnp.einsum("bd,bkd->bk", q, k_sel) * scale
     logits = jnp.where(valid, logits, -1e30)
     w = jax.nn.softmax(logits, axis=-1)
-    return jnp.einsum("bk,bkd->bd", w, v_sel), res
+    return jnp.einsum("bk,bkd->bd", w, v_sel)
+
+
+def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
+                        ef: int, scale: float | None = None,
+                        visited_impl: str = "hash"
+                        ) -> tuple[jax.Array, search_lib.SearchResult]:
+    """Approximate attention for decode queries q: (B, dh).
+
+    Searches the PG for top_k keys per query and softmax-attends over just
+    those.  Returns (out (B, dh), SearchResult for instrumentation).
+    Search state is O(ef)-memory hash-set based by default (DESIGN.md §9);
+    pass ``visited_impl="dense"`` to get the exact-counter bitmap path.
+    """
+    met = metric_lib.resolve(idx.metric)
+    qs = met.prepare(q)            # per-call cost is (B, dh) — keys untouched
+    res = search_lib.knn_search(idx.graph_ids, idx.search_keys, qs,
+                                top_k, ef, idx.entry, metric=met.kernel,
+                                visited_impl=visited_impl)
+    return _attend(idx, q, res.pool_ids, scale), res
+
+
+def retrieval_attention_batched(
+    idx: RetrievalIndex, q: jax.Array, *, top_k: int, ef: int,
+    scale: float | None = None, block_size: int = 64,
+    visited_impl: str = "hash",
+) -> tuple[jax.Array, search_lib.SearchResult]:
+    """Query-blocked retrieval attention for serving-sized batches.
+
+    Splits q: (B, dh) into blocks of a static bucketed size
+    (``graph.bucket``: ragged tails pad up to a multiple of 16, masked via
+    ``row_mask`` so padding rows do no search work), which keeps the set of
+    compiled search shapes small and reused across requests of any B.
+    Returns the same (out, SearchResult) pair as ``retrieval_attention``
+    with per-block pools concatenated and #dist counters summed (``hops``
+    is the max over blocks; cache fields are the last block's dummies).
+    """
+    B, dh = q.shape
+    if B == 0:
+        raise ValueError("empty query batch")
+    met = metric_lib.resolve(idx.metric)
+    qs_all = met.prepare(q)
+    bs = graph_lib.bucket(min(block_size, B), 16)
+    pool_ids, pool_dist, n_fresh, n_comp, hop_cnt = [], [], [], [], []
+    res = None
+    for off in range(0, B, bs):
+        nrows = min(bs, B - off)
+        qb = jnp.zeros((bs, dh), qs_all.dtype).at[:nrows].set(
+            qs_all[off:off + nrows])
+        res = search_lib.knn_search(
+            idx.graph_ids, idx.search_keys, qb, top_k, ef, idx.entry,
+            metric=met.kernel, visited_impl=visited_impl,
+            row_mask=jnp.arange(bs) < nrows)
+        # accumulate device scalars — no host sync inside the dispatch loop
+        pool_ids.append(res.pool_ids[:nrows])
+        pool_dist.append(res.pool_dist[:nrows])
+        n_fresh.append(res.n_fresh)
+        n_comp.append(res.n_computed)
+        hop_cnt.append(res.hops)
+    ids = jnp.concatenate(pool_ids, axis=0)
+    agg = search_lib.SearchResult(
+        ids, jnp.concatenate(pool_dist, axis=0),
+        jnp.sum(jnp.stack(n_fresh)), jnp.sum(jnp.stack(n_comp)),
+        jnp.max(jnp.stack(hop_cnt)), res.cache_d, res.cache_has)
+    return _attend(idx, q, ids, scale), agg
 
 
 def exact_attention(keys: jax.Array, values: jax.Array, q: jax.Array,

@@ -1,0 +1,34 @@
+"""Docs consistency: every DESIGN.md § reference in src/ and tests/ must
+resolve (mirrors the CI step running tools/check_docs.py)."""
+import importlib.util
+import pathlib
+
+_PATH = (pathlib.Path(__file__).resolve().parent.parent
+         / "tools" / "check_docs.py")
+_spec = importlib.util.spec_from_file_location("check_docs", _PATH)
+check_docs = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_docs)
+
+
+def test_no_broken_design_references():
+    assert check_docs.broken_references() == []
+
+
+def test_resolver_sections_and_items():
+    secs = check_docs.design_sections(
+        "## §1 Scope\nintro\n## §2 Invariants\n1. **one.**\n2. **two.**\n"
+        "## §Perf — notes\nbody\n")
+    assert check_docs.resolves("1", secs)
+    assert check_docs.resolves("2.2", secs)
+    assert check_docs.resolves("Perf", secs)
+    assert not check_docs.resolves("9", secs)
+    assert not check_docs.resolves("2.7", secs)
+
+
+def test_reference_extraction_handles_wrapping_and_chains():
+    toks = check_docs.file_references(
+        "# counters per the paper's model (DESIGN.md\n"
+        "# §3): base...\n"
+        "# lockstep hardware (DESIGN.md §3, §Perf iteration 5)\n"
+        "# unrelated: EXPERIMENTS.md §Dry-run is not checked\n")
+    assert toks == ["3", "3", "Perf"]

@@ -1,0 +1,158 @@
+"""Hash-set search state (DESIGN.md §9): collision handling, dense/hash
+parity, counter contract, and the k > ef guard."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import hashset, knng, search
+from repro.core.graph import INVALID, random_knng_ids
+
+METRICS = ["l2", "ip", "cosine"]
+
+
+def _colliding_keys(slots: int, count: int, target: int = 0) -> np.ndarray:
+    """``count`` distinct non-negative ids sharing one home slot."""
+    cand = np.arange(200_000, dtype=np.int32)
+    home = np.asarray(hashset.home_slot(jnp.asarray(cand), slots))
+    keys = cand[home == target][:count]
+    assert len(keys) == count
+    return keys
+
+
+# ---------------------------------------------------------------------------
+# hash-table primitive
+# ---------------------------------------------------------------------------
+
+def test_lookup_insert_adversarial_collisions():
+    """Keys all hashing to one slot probe past each other: insert + find."""
+    slots = 32
+    keys = jnp.asarray(_colliding_keys(slots, 8))[None, :]
+    act = jnp.ones(keys.shape, bool)
+    tab = hashset.make_tables((1,), slots)
+    tab, found, ins = hashset.lookup_insert(tab, keys, act)
+    assert not bool(found.any()) and bool(ins.all())
+    tab, found2, ins2 = hashset.lookup_insert(tab, keys, act)
+    assert bool(found2.all()) and not bool(ins2.any())
+
+
+def test_lookup_insert_overflow_no_false_positives():
+    """A full table drops inserts (false negatives) but never reports a
+    key it does not hold — the contract search correctness rests on."""
+    slots = 8
+    keys = jnp.arange(0, 2 * slots, dtype=jnp.int32)[None, :]
+    act = jnp.ones(keys.shape, bool)
+    tab = hashset.make_tables((1,), slots)
+    tab, found, ins = hashset.lookup_insert(tab, keys, act)
+    assert not bool(found.any())
+    assert int(ins.sum()) == slots                 # table exactly full
+    # fresh keys never inserted: membership must come back False
+    probe = jnp.arange(100, 100 + 2 * slots, dtype=jnp.int32)[None, :]
+    _, found_new, ins_new = hashset.lookup_insert(tab, probe, act)
+    assert not bool(found_new.any()) and not bool(ins_new.any())
+    # re-lookup of the original keys: found iff previously inserted
+    _, found3, _ = hashset.lookup_insert(tab, keys, act)
+    np.testing.assert_array_equal(np.asarray(found3), np.asarray(ins))
+
+
+def test_lookup_insert_inactive_lanes_untouched():
+    tab = hashset.make_tables((2,), 16)
+    keys = jnp.array([[3, 5], [7, 9]], jnp.int32)
+    act = jnp.array([[True, False], [False, True]])
+    tab, found, ins = hashset.lookup_insert(tab, keys, act)
+    np.testing.assert_array_equal(np.asarray(ins), np.asarray(act))
+    stored = set(np.asarray(tab).ravel().tolist()) - {hashset.EMPTY}
+    assert stored == {3, 9}
+
+
+# ---------------------------------------------------------------------------
+# search parity dense vs hash
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_hash_parity_10k(metric):
+    """Acceptance: hash top-k matches dense on >= 99% of queries at n=10k.
+
+    Graph quality is irrelevant to parity, so a deterministic random
+    regular graph stands in for a built index (10k-node builds would
+    dominate suite runtime)."""
+    n, d, b, k, ef = 10_000, 16, 64, 10, 32
+    r = np.random.default_rng(3)
+    data = jnp.asarray(r.normal(size=(n, d)), jnp.float32)
+    queries = data[:b] + 0.1 * jnp.asarray(r.normal(size=(b, d)), jnp.float32)
+    adj = random_knng_ids(1, n, 16)
+    dense = search.knn_search(adj, data, queries, k, ef, 0, metric=metric)
+    hashed = search.knn_search(adj, data, queries, k, ef, 0, metric=metric,
+                               visited_impl="hash")
+    same = np.asarray(
+        (dense.pool_ids == hashed.pool_ids).all(axis=-1))
+    assert same.mean() >= 0.99
+    # auto sizing keeps the table load <= 1/2; on this workload no insert
+    # is dropped, so the counters agree exactly — pinning DESIGN.md §9.3's
+    # equality-in-expectation as a regression check for this data
+    assert int(hashed.n_computed) == int(dense.n_computed)
+    assert int(hashed.n_fresh) == int(dense.n_fresh)
+
+
+def test_hash_eso_cache_pure_optimization(small_dataset):
+    """Hash-mode V_delta stays a pure optimization: identical pools with
+    and without sharing, and identical-graph sharing halves #computed."""
+    data, queries = small_dataset
+    adj, _ = knng.build_knng(data, 10)
+    g2 = jnp.stack([adj, adj])
+    b = 8
+    qids = jnp.full((b,), INVALID, jnp.int32)
+    row = jnp.ones((b,), bool)
+    ef = jnp.array([15, 15], jnp.int32)
+    ep = jnp.zeros((b, 2), jnp.int32)
+    kw = dict(ef_max=15, max_hops=60, visited_impl="hash")
+    r1 = search.beam_search(g2, data, queries[:b], qids, row, ef, ep,
+                            share_cache=True, **kw)
+    r2 = search.beam_search(g2, data, queries[:b], qids, row, ef, ep,
+                            share_cache=False, **kw)
+    np.testing.assert_array_equal(np.asarray(r1.pool_ids),
+                                  np.asarray(r2.pool_ids))
+    assert int(r1.n_computed) * 2 == int(r1.n_fresh)
+    assert int(r2.n_computed) == int(r2.n_fresh)
+
+
+def test_tiny_table_overflow_degrades_gracefully(small_dataset):
+    """A deliberately undersized table forces overflow: results stay
+    duplicate-free and match dense; only the #dist counters grow."""
+    data, queries = small_dataset
+    adj, _ = knng.build_knng(data, 12)
+    dense = search.knn_search(adj, data, queries, 10, 30, 0)
+    tiny = search.knn_search(adj, data, queries, 10, 30, 0,
+                             visited_impl="hash", hash_slots=16)
+    for row in np.asarray(tiny.pool_ids):
+        real = [x for x in row.tolist() if x >= 0]
+        assert len(real) == len(set(real)), "duplicate ids in pool"
+    overlap = (tiny.pool_ids[:, :, None] == dense.pool_ids[:, None, :]
+               ).any(-1).mean()
+    assert float(overlap) >= 0.99
+    assert int(tiny.n_computed) >= int(dense.n_computed)
+
+
+# ---------------------------------------------------------------------------
+# dense-mode counters unchanged (the paper-exact #dist contract)
+# ---------------------------------------------------------------------------
+
+def test_dense_counters_match_sequential_reference(small_dataset):
+    """Dense-mode #dist equals the literal Algorithm 1 count per query —
+    the refactor must not perturb the paper's cost accounting."""
+    from test_search import kanns_python
+    data, queries = small_dataset
+    adj, _ = knng.build_knng(data, 12)
+    adj_np, data_np = np.asarray(adj), np.asarray(data)
+    for qi in range(6):
+        res = search.knn_search(adj, data, queries[qi:qi + 1], 5, 20, 0)
+        _, n_ref = kanns_python(adj_np, data_np, np.asarray(queries[qi]),
+                                20, 0)
+        assert int(res.n_computed) == n_ref
+        assert int(res.n_fresh) == n_ref
+
+
+def test_knn_search_rejects_k_greater_than_ef(small_dataset):
+    data, queries = small_dataset
+    adj, _ = knng.build_knng(data, 10)
+    with pytest.raises(ValueError, match="k=12 > ef=8"):
+        search.knn_search(adj, data, queries, 12, 8, 0)

@@ -1,0 +1,97 @@
+#!/usr/bin/env python
+"""Docs-consistency check: DESIGN.md section references must resolve.
+
+Module docstrings cite the design record by section number ("DESIGN.md §9",
+"DESIGN.md §3, §Perf iteration 5", "§2.1 bit-identity"). Sections get
+renumbered; stale references rot silently.  This script scans every .py
+file under src/ and tests/ for § tokens that follow a ``DESIGN.md`` mention
+(same sentence — references may wrap across comment lines) and verifies
+each resolves in DESIGN.md:
+
+  §N / §Name   -> a ``## §N ...`` header exists
+  §N.M         -> the §N section body contains a numbered item ``M.``
+
+Exits 1 listing every broken reference.  Run by CI (.github/workflows/
+ci.yml) and tests/test_docs.py.
+"""
+from __future__ import annotations
+
+import pathlib
+import re
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+SCAN_DIRS = ("src", "tests")
+TOKEN = re.compile(r"§([0-9]+(?:\.[0-9]+)?|[A-Za-z][A-Za-z0-9_-]*)")
+# a chained reference ("§3, §Perf") allows a short gap before each token
+CHAIN = re.compile(r".{0,16}?§([0-9]+(?:\.[0-9]+)?|[A-Za-z][A-Za-z0-9_-]*)",
+                   re.S)
+
+
+def design_sections(text: str) -> dict[str, str]:
+    """Map section token -> body text for every ``## §...`` header."""
+    secs: dict[str, list[str]] = {}
+    cur = None
+    for line in text.splitlines():
+        m = re.match(r"^##\s+§(\S+)", line)
+        if m:
+            cur = m.group(1)
+            secs[cur] = []
+        elif cur is not None:
+            secs[cur].append(line)
+    return {k: "\n".join(v) for k, v in secs.items()}
+
+
+def resolves(tok: str, secs: dict[str, str]) -> bool:
+    if tok in secs:
+        return True
+    if "." in tok:
+        sec, item = tok.split(".", 1)
+        body = secs.get(sec)
+        return (body is not None and
+                re.search(rf"^\s*{re.escape(item)}\.\s", body, re.M)
+                is not None)
+    return False
+
+
+def file_references(text: str) -> list[str]:
+    """All § tokens chained after a DESIGN.md mention (unwrapping comment
+    and docstring line breaks)."""
+    flat = re.sub(r"\s*\n\s*#?\s*", " ", text)
+    toks: list[str] = []
+    for m in re.finditer(r"DESIGN\.md", flat):
+        pos = m.end()
+        while True:
+            mm = CHAIN.match(flat, pos)
+            if not mm:
+                break
+            toks.append(mm.group(1))
+            pos = mm.end()
+    return toks
+
+
+def broken_references(root: pathlib.Path = ROOT) -> list[str]:
+    secs = design_sections((root / "DESIGN.md").read_text())
+    bad = []
+    for top in SCAN_DIRS:
+        for path in sorted((root / top).rglob("*.py")):
+            for tok in file_references(path.read_text()):
+                if not resolves(tok, secs):
+                    bad.append(f"{path.relative_to(root)}: DESIGN.md "
+                               f"§{tok} does not resolve to a section")
+    return bad
+
+
+def main() -> int:
+    bad = broken_references()
+    for line in bad:
+        print(line, file=sys.stderr)
+    if bad:
+        print(f"{len(bad)} broken DESIGN.md reference(s)", file=sys.stderr)
+        return 1
+    print("DESIGN.md references OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
