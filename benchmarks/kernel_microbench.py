@@ -1,15 +1,30 @@
 """Kernel-layer microbenchmarks: the Search hot-spot distance kernel, the
 flash-attention substrate, and the search-scaling bench (dense vs hash
-visited state, DESIGN.md §9), timed on this host (CPU path; the Pallas
-TPU kernels are exercised in interpret mode by tests, not timed here).
+visited state × expand_width, DESIGN.md §9/§10), timed on this host (CPU
+path; the Pallas TPU kernels are exercised in interpret mode by tests and
+by the CI smoke lane, not timed here).
 
 The search-scaling bench sweeps n ∈ {10k, 100k, 1M synthetic} × visited
-impls and audits the traced jaxpr: in hash mode no intermediate array may
-carry a corpus-sized dimension — i.e. no (b, n) / (b, m, n) state is ever
-materialized — which is the property that makes million-key serving fit
-in memory."""
+impls × W ∈ {1, 4} and audits the traced jaxpr: in hash mode no
+intermediate array may carry a corpus-sized dimension — i.e. no (b, n) /
+(b, m, n) state is ever materialized — which is the property that makes
+million-key serving fit in memory.
+
+Every run also writes ``BENCH_search.json`` at the repo root (QPS, hops,
+#dist, peak search-state bytes per config) so the serving-perf trajectory
+is tracked in-tree across PRs instead of living in commit messages.
+
+  PYTHONPATH=src python -m benchmarks.kernel_microbench [--quick]
+
+``--quick`` runs the n=10k slice with one timing rep — the CI smoke lane
+runs it under REPRO_PALLAS_INTERPRET=1 so interpret-mode kernel
+regressions fail fast.
+"""
 from __future__ import annotations
 
+import argparse
+import json
+import os
 import time
 
 import jax
@@ -20,14 +35,26 @@ from benchmarks import common
 from repro.core import graph, hashset, search
 from repro.kernels import ops
 
+BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
+                          "BENCH_search.json")
+# quick/CI runs write a separate (gitignored) file so a 10k interpret-mode
+# slice can never clobber the committed full trajectory
+BENCH_JSON_QUICK = os.path.join(os.path.dirname(__file__), "..",
+                                "BENCH_search.quick.json")
+
 
 def _time(fn, *args, reps=5):
+    """(seconds_per_call, warmup_result) — mean over reps, matching the
+    methodology of every prior PR's numbers (BENCH_search.json is a
+    cross-PR trajectory — switching to e.g. min-of-reps would bias new
+    numbers low vs the recorded baselines).  The warmup result is returned
+    so callers needing outputs don't re-run the function."""
     out = fn(*args)
     jax.block_until_ready(out)
     t0 = time.perf_counter()
     for _ in range(reps):
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps
+    return (time.perf_counter() - t0) / reps, out
 
 
 def _corpus_sized_shapes(fn, n: int, *args, **kw) -> list[tuple]:
@@ -61,17 +88,23 @@ def _corpus_sized_shapes(fn, n: int, *args, **kw) -> list[tuple]:
     return bad
 
 
-def search_scaling_rows(sizes=(10_000, 100_000, 1_000_000)) -> list[str]:
-    """Search memory/QPS scaling: dense bitmap vs hash-set visited state.
+def search_scaling_rows(sizes=(10_000, 100_000, 1_000_000), *,
+                        widths=(1, 4), reps=5
+                        ) -> tuple[list[str], list[dict]]:
+    """Search memory/QPS scaling: (dense | hash visited state) × width W.
 
     Synthetic corpora (random data + random regular graph — graph quality
-    is irrelevant to the memory/time profile being measured).  Reports QPS
-    and the analytic peak search-state bytes per query batch (visited +
-    V_delta — the quantity DESIGN.md §9 tabulates; process RSS is a
-    lifetime high-water mark and would misattribute earlier configs'
-    peaks, so it is deliberately not reported per row)."""
-    rows = []
-    b, d, deg, k, ef, hops = 8, 32, 16, 10, 32, 64
+    is irrelevant to the memory/time profile being measured).  Reports QPS,
+    hop count, #dist, and the analytic peak search-state bytes per query
+    batch (visited + V_delta — the quantity DESIGN.md §9 tabulates;
+    process RSS is a lifetime high-water mark and would misattribute
+    earlier configs' peaks, so it is deliberately not reported per row).
+    Returns (csv rows, json records); the hash/ef=32 configs are the
+    serving profile the PR-over-PR trajectory in BENCH_search.json tracks.
+    """
+    rows: list[str] = []
+    records: list[dict] = []
+    b, d, deg, k, ef = 8, 32, 16, 10, 32
     r = np.random.default_rng(0)
     for n in sizes:
         data = jnp.asarray(r.normal(size=(n, d)), jnp.float32)
@@ -79,55 +112,116 @@ def search_scaling_rows(sizes=(10_000, 100_000, 1_000_000)) -> list[str]:
         queries = data[:b] + 0.1 * jnp.asarray(
             r.normal(size=(b, d)), jnp.float32)
         for impl in ("dense", "hash"):
-            def f(adj, data, queries, impl=impl):
-                return search.knn_search(adj, data, queries, k, ef, 0,
-                                         max_hops=hops, visited_impl=impl)
-            linear = _corpus_sized_shapes(f, n, adj, data, queries)
-            if impl == "hash":
-                assert not linear, (
-                    f"hash mode materialized corpus-sized state: {linear}")
-                slots = hashset.auto_slots(hops, deg)
-                state_bytes = b * slots * 4
-            else:
-                assert linear, "audit sanity: dense mode must show (b,m,n)"
-                state_bytes = b * n                   # visited bool[b, 1, n]
-            sec = _time(f, adj, data, queries, reps=3)
-            rows.append(common.row(
-                f"search_scaling/{impl}/n={n}", sec * 1e6,
-                f"qps={b / sec:.1f} state_bytes={state_bytes}"))
-    return rows
+            for w in widths:
+                def f(adj, data, queries, impl=impl, w=w):
+                    return search.knn_search(adj, data, queries, k, ef, 0,
+                                             visited_impl=impl,
+                                             expand_width=w)
+                linear = _corpus_sized_shapes(f, n, adj, data, queries)
+                if impl == "hash":
+                    assert not linear, (
+                        f"hash mode materialized corpus-sized state: "
+                        f"{linear}")
+                    hops_bound = search.default_max_hops(ef, w)
+                    slots = hashset.auto_slots(hops_bound, w * deg)
+                    state_bytes = b * slots * 4
+                else:
+                    assert linear, (
+                        "audit sanity: dense mode must show (b,m,n)")
+                    state_bytes = b * n               # visited bool[b, 1, n]
+                sec, res = _time(f, adj, data, queries, reps=reps)
+                rec = dict(n=n, impl=impl, expand_width=w, ef=ef, k=k,
+                           batch=b, degree=deg, qps=round(b / sec, 1),
+                           us_per_batch=round(sec * 1e6, 1),
+                           hops=int(res.hops),
+                           n_dist=int(res.n_computed),
+                           state_bytes=state_bytes)
+                records.append(rec)
+                rows.append(common.row(
+                    f"search_scaling/{impl}/W={w}/n={n}", sec * 1e6,
+                    f"qps={rec['qps']} hops={rec['hops']} "
+                    f"ndist={rec['n_dist']} state_bytes={state_bytes}"))
+    return rows, records
 
 
-def run() -> list[str]:
+def write_bench_json(records: list[dict], *, quick: bool = False) -> None:
+    """Persist the search-scaling records so the perf trajectory is
+    diffable across PRs.  Full runs write the committed repo-root
+    ``BENCH_search.json``; quick/CI runs write the gitignored
+    ``BENCH_search.quick.json`` (tagged, so a 10k interpret-mode slice is
+    never mistaken for — or committed over — the full trajectory)."""
+    payload = {
+        "bench": "search_scaling",
+        "contract": "serving config = hash/ef=32; compare qps across PRs "
+                    "(mean-of-reps timing)",
+        "backend": jax.default_backend(),
+        "mode": "quick" if quick else "full",
+        "rows": records,
+    }
+    with open(BENCH_JSON_QUICK if quick else BENCH_JSON, "w") as f:
+        json.dump(payload, f, indent=1)
+        f.write("\n")
+
+
+def run(quick: bool = False) -> list[str]:
     rows = []
     r = np.random.default_rng(0)
-    for nq, nx, d in [(256, 2048, 32), (1024, 8192, 128)]:
+    shapes = [(256, 2048, 32)] if quick else [(256, 2048, 32),
+                                              (1024, 8192, 128)]
+    for nq, nx, d in shapes:
         q = jnp.asarray(r.normal(size=(nq, d)), jnp.float32)
         x = jnp.asarray(r.normal(size=(nx, d)), jnp.float32)
         f = jax.jit(ops.l2_distance)
-        sec = _time(f, q, x)
+        sec, _ = _time(f, q, x)
         gflops = 2 * nq * nx * d / sec / 1e9
         rows.append(common.row(
             f"kernel/l2_distance/{nq}x{nx}x{d}", sec * 1e6,
             f"gflops={gflops:.1f}"))
         for metric in ("ip", "cosine"):
             f = jax.jit(lambda q, x, m=metric: ops.pairwise_distance(q, x, m))
-            sec = _time(f, q, x)
+            sec, _ = _time(f, q, x)
             gflops = 2 * nq * nx * d / sec / 1e9
             rows.append(common.row(
                 f"kernel/{metric}_distance/{nq}x{nx}x{d}", sec * 1e6,
                 f"gflops={gflops:.1f}"))
-    for b, h, s, dh in [(2, 4, 1024, 64), (1, 8, 4096, 128)]:
+    # gather-distance: the in-loop search kernel (b queries × W·Mx slab)
+    for b, kx, d in [(8, 64, 32)] if quick else [(8, 64, 32), (64, 256, 128)]:
+        u = jnp.asarray(r.normal(size=(b, d)), jnp.float32)
+        c = jnp.asarray(r.normal(size=(b, kx, d)), jnp.float32)
+        for metric in ("l2", "ip"):
+            f = jax.jit(lambda u, c, m=metric: ops.gather_distance(u, c,
+                                                                   metric=m))
+            sec, _ = _time(f, u, c)
+            rows.append(common.row(
+                f"kernel/gather_{metric}/{b}x{kx}x{d}", sec * 1e6,
+                f"gflops={2 * b * kx * d / sec / 1e9:.2f}"))
+    fa_shapes = [(2, 4, 1024, 64)] if quick else [(2, 4, 1024, 64),
+                                                  (1, 8, 4096, 128)]
+    for b, h, s, dh in fa_shapes:
         q = jnp.asarray(r.normal(size=(b, h, s, dh)), jnp.float32)
         f = jax.jit(lambda q: ops.flash_attention(q, q, q, causal=True))
-        sec = _time(f, q, reps=3)
+        sec, _ = _time(f, q, reps=3)
         gflops = 4 * b * h * s * s * dh / 2 / sec / 1e9   # causal half
         rows.append(common.row(
             f"kernel/flash_attention/{b}x{h}x{s}x{dh}", sec * 1e6,
             f"gflops={gflops:.1f}"))
-    rows += search_scaling_rows()
+    if quick:
+        srows, records = search_scaling_rows(sizes=(10_000,), reps=1)
+    else:
+        srows, records = search_scaling_rows()
+    rows += srows
+    write_bench_json(records, quick=quick)
     return rows
 
 
+def main() -> None:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--quick", action="store_true",
+                    help="n=10k slice, 1 rep (CI smoke lane)")
+    args = ap.parse_args()
+    print("name,us_per_call,derived")
+    run(quick=args.quick)
+
+
 if __name__ == "__main__":
-    run()
+    main()

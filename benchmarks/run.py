@@ -1,8 +1,12 @@
 """Benchmark harness — one module per paper table/figure.
 
 Prints ``name,us_per_call,derived`` CSV rows (harness contract) and saves
-full JSON artifacts under results/bench/.  ``--quick`` runs the cheap
-benches only; ``--only <prefix>`` filters.
+full JSON artifacts under results/bench/.  The kernel bench additionally
+writes the machine-readable serving-search trajectory (QPS, hops, #dist,
+peak search-state bytes per config) to ``BENCH_search.json`` at the repo
+root — that file is committed, so serving-perf regressions show up as
+review diffs instead of living in commit messages.  ``--quick`` runs the
+cheap benches only; ``--only <prefix>`` filters.
 
   PYTHONPATH=src python -m benchmarks.run [--quick] [--only table4]
 """
@@ -45,6 +49,11 @@ def main() -> None:
             continue
         try:
             mod = importlib.import_module(module)
+            if name == "kernel" and args.quick:
+                # quick mode must reach the kernel bench: it selects the
+                # small sweep AND routes its JSON to the gitignored quick
+                # file instead of clobbering the committed trajectory
+                kw = {**kw, "quick": True}
             mod.run(**kw)
         except Exception:
             failures += 1

@@ -24,7 +24,7 @@ from repro.core import vamana
 from repro.core.tuner import estimator, fastpgt
 from repro.models import model as M
 from repro.serve import retrieval
-from repro.serve.engine import Request, ServeEngine
+from repro.serve.engine import Request, RetrievalKnobs, ServeEngine
 
 
 def main():
@@ -62,8 +62,11 @@ def main():
     bp = vamana.VamanaParams(L=best[0]["L"], M=best[0]["M"],
                              alpha=best[0]["alpha"])
     idx = retrieval.build_index(keys, values, bp, metric="ip")
+    # serving knobs live in one place (hash visit state + width-W
+    # multi-expansion are the defaults; see README's knob table)
+    knobs = RetrievalKnobs(top_k=48, ef=96, block_size=8)
     approx, sr = retrieval.retrieval_attention_batched(
-        idx, q, top_k=48, ef=96, block_size=8)
+        idx, q, **knobs.batched_kwargs())
     exact = retrieval.exact_attention(keys, values, q)
     cos = jnp.sum(approx * exact, -1) / (
         jnp.linalg.norm(approx, axis=-1) * jnp.linalg.norm(exact, axis=-1))

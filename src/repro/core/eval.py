@@ -75,12 +75,13 @@ def evaluate_search_fn(
 
 def flat_graph_search_fn(g: MultiGraph, graph_idx: int, data, entry: int,
                          k: int, metric: str = "l2",
-                         visited_impl: str = "dense"):
+                         visited_impl: str = "dense",
+                         expand_width: int = 1):
     """Search closure for single-layer graphs (Vamana/NSG)."""
     def fn(queries, ef):
         return search.knn_search(
             g.ids[graph_idx], data, queries, k, ef, entry, metric=metric,
-            visited_impl=visited_impl)
+            visited_impl=visited_impl, expand_width=expand_width)
     return fn
 
 

@@ -6,8 +6,10 @@ dense ``bool[b, m, n]`` bitmap and the shared V_delta has-bit in
 at ~10^5 keys.  GPU-era proximity-graph systems (CAGRA-style traversal)
 replace the bitmap with a small per-query hash table; this module is that
 structure for the jnp/Pallas lockstep search: int32-keyed open addressing,
-power-of-two slot counts, linear probing with a fixed probe budget, every
-operation expressed as gathers/scatters so it stays jit-able inside a
+power-of-two slot counts, linear probing with a fixed probe budget — the
+whole probe window examined in one gather, inserts made race-free in
+proposal space and landed in one scatter (DESIGN.md §9) — every operation
+expressed as gathers/scatters so it stays jit-able inside a
 ``lax.while_loop``.
 
 Memory model, sizing, and the collision/counter contract are written down
@@ -32,6 +34,7 @@ import jax.numpy as jnp
 
 EMPTY = -1          # empty-slot sentinel; valid keys are vector ids >= 0
 PROBES = 16         # linear-probe budget per lookup/insert
+CONFLICT_ROUNDS = 2  # proposal-space conflict-resolution iterations
 SLOTS_CAP = 1 << 17         # per-(query, graph) visited-table cap
 CACHE_SLOTS_CAP = 1 << 18   # per-query V_delta-table cap
 
@@ -44,12 +47,14 @@ def auto_slots(max_hops: int, max_degree: int, *,
                searches: int = 1, cap: int = SLOTS_CAP) -> int:
     """Power-of-two table size covering the worst-case insert count.
 
-    A search expands at most one pool entry per (query, graph) per hop, so
-    one search inserts at most ``1 + max_hops * max_degree`` distinct ids
-    per (query, graph) — entry point + per-hop adjacency rows (``ef``
+    A search expands ``expand_width`` pool entries per (query, graph) per
+    hop, so one search inserts at most ``1 + max_hops * max_degree``
+    distinct ids per (query, graph) with ``max_degree`` the per-hop
+    candidate width W·Mx — entry point + per-hop adjacency rows (``ef``
     drives this only through the hop bound: ``default_max_hops`` is
-    ~3·ef).  Sizing to twice that keeps the load factor <= 1/2, under
-    which linear probing terminates well inside ``PROBES`` steps;
+    ~3·ef/W, so tables grow sublinearly in W).  Sizing to twice that
+    keeps the load factor <= 1/2, under which linear probing terminates
+    well inside ``PROBES`` steps;
     ``searches`` scales the bound for tables shared by several searches —
     m graphs for the V_delta union, times the layer count when a cache is
     carried across an HNSW descent.  The cap bounds memory for very large
@@ -80,6 +85,36 @@ def home_slot(keys: jax.Array, slots: int) -> jax.Array:
     return (_mix32(keys) & jnp.uint32(slots - 1)).astype(jnp.int32)
 
 
+RUN_RANK_TRI_MAX = 128   # K at/below which the O(K²) compare path wins
+
+
+def _run_rank(vals: jax.Array) -> jax.Array:
+    """int32[..., K]: #earlier (flat order) positions holding an equal value.
+
+    Equal values rank by flat position — the deterministic priority both
+    proposal steps below rely on.  Two materializations of the same
+    semantics: a triangular pairwise compare (O(K²) elementwise, no sort —
+    per-row sorts have large fixed costs on CPU and poor minor-axis layouts
+    on TPU) for the hop-sized rows the search hot path sends, and a
+    stable-sort path past ``RUN_RANK_TRI_MAX`` where the quadratic
+    broadcast would dominate memory."""
+    K = vals.shape[-1]
+    if K <= RUN_RANK_TRI_MAX:
+        tri = jnp.tril(jnp.ones((K, K), bool), k=-1)
+        same = (vals[..., :, None] == vals[..., None, :]) & tri
+        return jnp.sum(same, axis=-1).astype(jnp.int32)
+    idx = jnp.arange(K)
+    order = jnp.argsort(vals, axis=-1)
+    sv = jnp.take_along_axis(vals, order, axis=-1)
+    run_start = jnp.concatenate(
+        [jnp.ones_like(sv[..., :1], bool), sv[..., 1:] != sv[..., :-1]],
+        axis=-1)
+    start_idx = jax.lax.cummax(jnp.where(run_start, idx, 0), axis=vals.ndim - 1)
+    rank_sorted = (idx - start_idx).astype(jnp.int32)
+    inv = jnp.argsort(order, axis=-1)
+    return jnp.take_along_axis(rank_sorted, inv, axis=-1)
+
+
 def lookup_insert(table: jax.Array, keys: jax.Array, active: jax.Array, *,
                   probes: int = PROBES
                   ) -> tuple[jax.Array, jax.Array, jax.Array]:
@@ -87,8 +122,14 @@ def lookup_insert(table: jax.Array, keys: jax.Array, active: jax.Array, *,
 
     Args:
       table:  int32[..., S] open-addressing tables (S a power of two).
-      keys:   int32[..., K] candidate keys, >= 0 wherever ``active``.
+      keys:   int32[..., K] candidate keys, >= 0 and **distinct within a
+              row** wherever ``active`` (callers dedup first — the module
+              contract above).  Equal active keys would each claim a slot
+              here (the same-home ranking treats them as contenders, not
+              duplicates) and all report ``inserted``, multiplying table
+              load beyond what ``auto_slots`` sizes for.
       active: bool[..., K]  lanes to process (others untouched).
+      probes: linear-probe budget per key (slots examined).
 
     Returns ``(table, found, inserted)``: ``found`` marks keys already
     present *before* this call, ``inserted`` marks keys newly stored.
@@ -96,32 +137,59 @@ def lookup_insert(table: jax.Array, keys: jax.Array, active: jax.Array, *,
     cluster) were dropped — the caller treats them as unvisited, which is
     the revisit-tolerant degradation documented in DESIGN.md §9.
 
-    Concurrent inserts within a row race for slots; losers are detected by
-    re-reading the slot after the scatter and continue probing, so the
-    linear-probing invariant (a stored key sits within ``probes`` steps of
-    its home slot) holds for every stored key.
+    The whole probe window is processed at once — ONE (K, probes) gather
+    for membership plus ONE scatter for the inserts — instead of the
+    ``probes`` sequential gather+scatter rounds of a per-slot loop.  On
+    every backend the scatter is the expensive step (it serializes on CPU
+    and copies the table when not aliased), and this runs inside every
+    ``lax.while_loop`` hop of the serving hot path, so the round count is
+    the hash-mode QPS driver (DESIGN.md §9).  A stored key still sits
+    within ``probes`` slots of its home, and lookups scan the full budget,
+    so membership semantics are unchanged.
+
+    Insert targets are made race-free *before* the scatter, in proposal
+    space: pending keys sharing a home slot are ranked in flat order and
+    key r proposes its window's r-th empty slot, so same-home contenders —
+    the adversarial collision case — get distinct targets within a round;
+    keys from different homes whose windows overlap can still propose the
+    same slot, which ``CONFLICT_ROUNDS`` bump-and-repropose iterations
+    resolve (a cross-home bump can in turn re-collide a key with a
+    same-home sibling in a later round).  Whatever is still conflicted
+    after the last round is dropped even if its window holds empty slots —
+    an insert-drop the overflow contract already tolerates, slightly more
+    likely under adversarial mixed-home collisions than the sequential
+    re-probe it replaced.  The surviving proposals are distinct per table,
+    so the final scatter needs no read-back verification.
     """
     S = table.shape[-1]
     K = keys.shape[-1]
+    P = min(probes, S)
     tab = table.reshape(-1, S)
     kk = keys.reshape(-1, K)
     rows = jnp.arange(tab.shape[0])[:, None]
     h = home_slot(kk, S)
-    found = jnp.zeros(kk.shape, bool)
-    inserted = jnp.zeros(kk.shape, bool)
-    pending = active.reshape(-1, K)
-    for p in range(probes):
-        slot = (h + p) & (S - 1)
-        cur = jnp.take_along_axis(tab, slot, axis=-1)
-        hit = pending & (cur == kk)
-        found = found | hit
-        pending = pending & ~hit
-        attempt = pending & (cur == EMPTY)
-        tgt = jnp.where(attempt, slot, S)                  # S = dropped
-        tab = tab.at[rows, tgt].set(jnp.where(attempt, kk, EMPTY),
-                                    mode="drop")
-        won = attempt & (jnp.take_along_axis(tab, slot, axis=-1) == kk)
-        inserted = inserted | won
-        pending = pending & ~won
+    slots = (h[..., None] + jnp.arange(P)) & (S - 1)             # (R, K, P)
+    cur = tab[rows[..., None], slots]
+    found = active.reshape(-1, K) & jnp.any(cur == kk[..., None], axis=-1)
+    pending = active.reshape(-1, K) & ~found
+
+    # rank among pending keys with the same home slot: key r proposes the
+    # r-th empty slot of its window
+    rank = _run_rank(jnp.where(pending, h, S + jnp.arange(K)))   # (R, K)
+    empty = cur == EMPTY
+    nth = jnp.cumsum(empty, axis=-1) - 1                         # empty index
+    for _ in range(max(1, CONFLICT_ROUNDS)):    # >=1: the loop defines the
+        # attempt/slot/bump the insert decision below reads
+        target = empty & (nth == rank[..., None])
+        attempt = pending & jnp.any(target, axis=-1)
+        pos = jnp.argmax(target, axis=-1)
+        slot = jnp.take_along_axis(slots, pos[..., None], axis=-1)[..., 0]
+        p_slot = jnp.where(attempt, slot, -1 - jnp.arange(K))    # distinct pads
+        bump = _run_rank(p_slot)                                 # (R, K)
+        rank = rank + bump
+    conflicted = bump > 0        # last round's losers: drop, don't race
+    inserted = attempt & ~conflicted
+    tgt = jnp.where(inserted, slot, S)                           # S = dropped
+    tab = tab.at[rows, tgt].set(jnp.where(inserted, kk, EMPTY), mode="drop")
     return (tab.reshape(table.shape), found.reshape(active.shape),
             inserted.reshape(active.shape))

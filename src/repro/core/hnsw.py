@@ -67,6 +67,7 @@ def build_multi_hnsw(
     max_hops: int | None = None,
     metric: str = "l2",
     visited_impl: str = "dense",
+    expand_width: int = 1,
 ) -> HNSWBuildResult:
     met = metric_lib.resolve(metric)
     data = met.prepare(data)      # normalize ONCE for cosine (no-op otherwise)
@@ -118,7 +119,8 @@ def build_multi_hnsw(
         # (DESIGN.md §9).
         cache_d, cache_has = search.fresh_cache(
             b, n, use_eso, visited_impl,
-            slots=hashset.auto_slots(hops, M_max, searches=m * n_layers,
+            slots=hashset.auto_slots(hops, expand_width * M_max,
+                                     searches=m * n_layers,
                                      cap=hashset.CACHE_SLOTS_CAP))
 
         for layer in range(top, -1, -1):
@@ -144,7 +146,8 @@ def build_multi_hnsw(
                     lids[layer], data, queries, qids, ins_mask,
                     efc, entry, cache_d, cache_has,
                     ef_max=efc_max, max_hops=hops, share_cache=use_eso,
-                    metric=kform, visited_impl=visited_impl)
+                    metric=kform, visited_impl=visited_impl,
+                    expand_width=expand_width)
                 cache_d, cache_has = res.cache_d, res.cache_has
                 ctr.search_base += int(res.n_fresh)
                 ctr.search += int(res.n_computed)
@@ -181,8 +184,13 @@ def build_hnsw(data, p: HNSWParams, **kw) -> HNSWBuildResult:
 def hnsw_search(g: HNSWGraphs, graph_idx: int, data, queries, k: int, ef: int,
                 max_hops: int | None = None, *,
                 metric: str = "l2",
-                visited_impl: str = "dense") -> search.SearchResult:
-    """Layered k-ANNS on one of the m built HNSW graphs."""
+                visited_impl: str = "dense",
+                expand_width: int = 1) -> search.SearchResult:
+    """Layered k-ANNS on one of the m built HNSW graphs.
+
+    ``expand_width`` applies to the base-layer beam search (DESIGN.md §10);
+    the upper-layer greedy descent is ef=1 and always single-expansion.
+    """
     if k > ef:
         raise ValueError(
             f"k={k} > ef={ef}: slots beyond ef are INVALID padding; raise "
@@ -195,7 +203,7 @@ def hnsw_search(g: HNSWGraphs, graph_idx: int, data, queries, k: int, ef: int,
     qids = jnp.full((b,), INVALID, jnp.int32)
     row = jnp.ones((b,), bool)
     entry = _mk_entry(b, 1, g.entry)
-    hops = max_hops or search.default_max_hops(ef)
+    hops = max_hops or search.default_max_hops(ef, expand_width)
     nf = nc = 0
     for layer in range(g.top, 0, -1):
         res = search.beam_search(
@@ -210,7 +218,7 @@ def hnsw_search(g: HNSWGraphs, graph_idx: int, data, queries, k: int, ef: int,
         g.layer_ids[0, graph_idx][None], data, queries, qids, row,
         jnp.array([ef], jnp.int32), entry,
         ef_max=ef, max_hops=hops, share_cache=False, metric=metric,
-        visited_impl=visited_impl)
+        visited_impl=visited_impl, expand_width=expand_width)
     return search.SearchResult(
         res.pool_ids[:, 0, :k], res.pool_dist[:, 0, :k],
         res.n_fresh + nf, res.n_computed + nc, res.hops,

@@ -57,6 +57,7 @@ def build_multi_nsg(
     repair_iters: int = 2,
     metric: str = "l2",
     visited_impl: str = "dense",
+    expand_width: int = 1,
 ) -> NSGBuildResult:
     del seed
     met = metric_lib.resolve(metric)
@@ -100,7 +101,8 @@ def build_multi_nsg(
         res = search.beam_search(
             init_stack, data, queries, jnp.where(row_mask, u, INVALID),
             row_mask, L, entry, ef_max=L_max, max_hops=hops,
-            share_cache=use_eso, metric=kform, visited_impl=visited_impl)
+            share_cache=use_eso, metric=kform, visited_impl=visited_impl,
+            expand_width=expand_width)
         ctr.search_base += int(res.n_fresh)
         ctr.search += int(res.n_computed)
 

@@ -3,9 +3,17 @@
 TPU adaptation of the paper's per-query priority-queue search: a whole batch
 of ``b`` queries searches ``m`` graphs simultaneously inside one
 ``lax.while_loop``.  Pools are fixed-size sorted arrays (``ef_max`` slots);
-each hop expands the closest unexpanded pool entry per (query, graph), gathers
-its out-neighbors, computes distances through the V_delta-aware kernel and
-merges by a sorted top-k.
+each hop expands the ``W`` closest unexpanded pool entries per
+(query, graph) (``expand_width``, DESIGN.md §10), gathers their
+out-neighbors, computes distances through the V_delta-aware kernel and
+merges by a sorted-pool ⊕ top-k candidate merge.
+
+Multi-expansion (``expand_width``, DESIGN.md §10): W = 1 is the paper's
+sequential best-first schedule — builders and the estimation path pin it so
+§2.1 bit-identity and the paper-exact #dist counters hold.  W > 1 expands a
+W-wide frontier per hop, cutting the ``while_loop`` trip count ~W× and
+amortizing every fixed per-hop cost (pool merge, hash probing, kernel
+dispatch) — the serving default (serve/retrieval.py uses W = 4).
 
 ESO (shared V_delta cache): with ``share_cache=True`` a per-query membership
 structure is shared by all m graphs — exactly the paper's Alg. 3 cache.  The
@@ -18,17 +26,19 @@ Visited/V_delta representation (``visited_impl``, DESIGN.md §9):
            membership, exact #dist counters, O(n) memory per query — the
            builder/estimation default (§2.1 bit-identity).
   "hash"   fixed-size open-addressing hash sets (core/hashset.py): int32
-           keys, power-of-two slots sized from the hop bound × degree
-           (max_hops defaults to ~3·ef, so ef drives the size), linear
-           probing in-loop.  O(ef·M·hops) memory per query independent of
-           n — the serving default.  No false positives; overflow degrades
-           to revisits, so hash-mode counters upper-bound dense counters.
+           keys, power-of-two slots sized from the hop bound × per-hop
+           candidate width (W·Mx), windowed linear probing in-loop.
+           O(ef·W·M·hops) memory per query independent of n — the serving
+           default.  No false positives; overflow degrades to revisits, so
+           hash-mode counters upper-bound dense counters.
 
 Counters (paper metrics):
   n_fresh    — distances each graph would compute alone (no sharing): the
                per-graph Algorithm-1 cost, summed over graphs.
   n_computed — distances actually computed (cache misses). Equal to n_fresh
                when share_cache=False.
+  With W > 1 both counters count the W-wide schedule's work, which can
+  exceed the sequential schedule's (DESIGN.md §10).
 
 Per-graph pool sizes ``ef_i <= ef_max`` are enforced by slot masks; because
 pools are kept globally sorted and entries only move backwards, masking slots
@@ -101,14 +111,68 @@ def _first_occurrence(ids: jax.Array, sentinel: int) -> jax.Array:
     return jnp.take_along_axis(first_sorted, inv, axis=-1)
 
 
+def _merge_topk(pool_ids, pool_dist, expanded, cand_ids, cand_dist):
+    """Sorted-pool ⊕ top-k candidate merge (§Perf iteration 6).
+
+    The pool is already sorted ascending, so only the candidates need a
+    partial sort: ``lax.top_k`` keeps the ``min(kx, ef_max)`` closest
+    (ties prefer lower index — the flat candidate order), then a rank-based
+    two-way merge places every survivor, materialized with gathers only
+    (scatters serialize on CPU and copy on accelerators).  Byte-equivalent
+    to the stable full-argsort merge over the (ef_max + kx)-wide
+    concatenation it replaces (pool entries win distance ties; verified
+    adversarially in tests/test_multi_expand.py), at O(ef·kc) compare work
+    instead of O((ef + kx)·log(ef + kx)) sort work per (query, graph).
+
+    Args:
+      pool_ids/pool_dist/expanded: (..., ef_max) sorted pools.
+      cand_ids/cand_dist: (..., kx) candidates (INVALID/inf where masked).
+    Returns the merged (pool_ids, pool_dist, expanded).
+    """
+    ef_max = pool_ids.shape[-1]
+    kx = cand_ids.shape[-1]
+    kc = min(kx, ef_max)
+    negd, order = jax.lax.top_k(-cand_dist, kc)
+    c_dist = -negd
+    c_ids = jnp.take_along_axis(cand_ids, order, axis=-1)
+    # Each pool entry's merged rank, with the stable tie rule of the old
+    # concat-argsort (pool slots preceded candidates in the concatenation,
+    # so a pool entry outranks an equal-distance candidate).
+    cand_lt = c_dist[..., None, :] < pool_dist[..., :, None]   # (..., ef, kc)
+    rank_pool = jnp.arange(ef_max) + jnp.sum(cand_lt, axis=-1)
+    # Invert by gathering: output slot r holds pool[i] iff some pool entry
+    # has rank r (i = #pool ranks < r, strictly increasing), else candidate
+    # j = r - i — the j-th candidate is the only unplaced element left.
+    rr = jnp.arange(ef_max)
+    i_r = jnp.sum(rank_pool[..., None, :] < rr[:, None], axis=-1)
+    i_safe = jnp.minimum(i_r, ef_max - 1)
+    is_pool = jnp.take_along_axis(rank_pool, i_safe, axis=-1) == rr
+    j_safe = jnp.clip(rr - i_r, 0, kc - 1)
+    out_ids = jnp.where(is_pool,
+                        jnp.take_along_axis(pool_ids, i_safe, axis=-1),
+                        jnp.take_along_axis(c_ids, j_safe, axis=-1))
+    out_dist = jnp.where(is_pool,
+                         jnp.take_along_axis(pool_dist, i_safe, axis=-1),
+                         jnp.take_along_axis(c_dist, j_safe, axis=-1))
+    # candidates enter unexpanded
+    out_exp = jnp.where(is_pool,
+                        jnp.take_along_axis(expanded, i_safe, axis=-1),
+                        False)
+    return out_ids, out_dist, out_exp
+
+
 def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
                        slot_mask, pool_ids, pool_dist, expanded,
-                       visited, cache_d, cache_has, share_cache, metric):
-    """One hop of ALL m graphs, fully vectorized over (b, m).
+                       visited, cache_d, cache_has, share_cache, metric,
+                       width):
+    """One hop of ALL m graphs, fully vectorized over (b, m, W).
 
-    Cross-graph duplicate candidates within the hop are deduplicated
-    (first occurrence in graph order), so the computed-distance counter
-    equals the sequential schedule's |union| exactly.
+    The ``width`` closest unexpanded pool entries per (query, graph) expand
+    together (W = 1 is the sequential best-first schedule); their W·Mx
+    candidate neighbors are deduplicated in-row, and cross-graph duplicates
+    within the hop are deduplicated by first occurrence in graph order, so
+    with W = 1 the computed-distance counter equals the sequential
+    schedule's |union| exactly (DESIGN.md §10 for W > 1 semantics).
 
     ``visited`` is either the dense bool[b, m, n] bitmap or an int32
     [b, m, S] hash-key table (dispatch on dtype; DESIGN.md §9), and
@@ -117,26 +181,38 @@ def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
     b, m, ef_max = pool_ids.shape
     n = data.shape[0]
     mx = graph_ids.shape[2]
+    kx = width * mx
     brange = jnp.arange(b)
+    mrange = jnp.arange(m)
     hash_visited = visited.dtype != jnp.bool_
 
     unexp = (pool_ids != INVALID) & (~expanded) & slot_mask[None]
-    act = jnp.any(unexp, axis=-1) & row_mask[:, None]            # (b, m)
-    sel = jnp.argmax(unexp, axis=-1)                             # (b, m)
-    u = jnp.take_along_axis(pool_ids, sel[..., None], axis=-1)[..., 0]
+    # W closest unexpanded slots: the pool is sorted ascending, so these are
+    # the first W unexpanded slot positions (top_k of the negated position;
+    # position ef_max = "no slot" sentinel).
+    slot_pos = jnp.where(unexp, jnp.arange(ef_max), ef_max)
+    neg_sel, _ = jax.lax.top_k(-slot_pos, width)
+    sel = -neg_sel                                               # (b, m, W)
+    act = (sel < ef_max) & row_mask[:, None, None]               # (b, m, W)
+    sel_safe = jnp.minimum(sel, ef_max - 1)
+    u = jnp.take_along_axis(pool_ids, sel_safe, axis=-1)         # (b, m, W)
     u_safe = jnp.where(act, jnp.maximum(u, 0), 0)
-    expanded = expanded.at[brange[:, None], jnp.arange(m)[None, :],
-                           sel].set(
-        jnp.take_along_axis(expanded, sel[..., None], -1)[..., 0] | act)
+    expanded = expanded.at[brange[:, None, None], mrange[None, :, None],
+                           jnp.where(act, sel_safe, ef_max)].set(
+        True, mode="drop")
 
-    nbrs = graph_ids[jnp.arange(m)[None, :], u_safe]             # (b, m, Mx)
+    nbrs = graph_ids[mrange[None, :, None], u_safe]           # (b, m, W, Mx)
+    nbrs = nbrs.reshape(b, m, kx)
     nbrs_safe = jnp.maximum(nbrs, 0)
-    # same-id duplicates within one adjacency row count/insert once
-    # (small Mx: a triangular compare beats a sort here)
-    eq = nbrs_safe[..., :, None] == nbrs_safe[..., None, :]
-    tri = jnp.tril(jnp.ones((mx, mx), bool), k=-1)
+    # same-id duplicates within one (query, graph) hop count/insert once
+    # (small W·Mx: a triangular compare beats a sort here).  Compared on
+    # the raw ids: clamped INVALID lanes would alias node 0 and discard a
+    # genuine id-0 candidate arriving after padding.
+    eq = nbrs[..., :, None] == nbrs[..., None, :]
+    tri = jnp.tril(jnp.ones((kx, kx), bool), k=-1)
     dup = jnp.any(eq & tri[None, None], axis=-1)
-    prelim = ((nbrs != INVALID) & act[..., None]
+    act_flat = jnp.repeat(act, mx, axis=-1)                      # (b, m, kx)
+    prelim = ((nbrs != INVALID) & act_flat
               & (nbrs != query_ids[:, None, None]) & ~dup)
     if hash_visited:
         visited, vis, _ = hashset.lookup_insert(visited, nbrs_safe, prelim)
@@ -147,21 +223,21 @@ def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
             nbrs_safe[..., :, None] == pool_ids[..., None, :], axis=-1)
         valid = prelim & ~vis & ~in_pool
     else:
-        vis = visited[brange[:, None, None], jnp.arange(m)[None, :, None],
+        vis = visited[brange[:, None, None], mrange[None, :, None],
                       nbrs_safe]
         valid = prelim & ~vis
 
-    flat_ids = nbrs_safe.reshape(b, m * mx)
-    flat_valid = valid.reshape(b, m * mx)
+    flat_ids = nbrs_safe.reshape(b, m * kx)
+    flat_valid = valid.reshape(b, m * kx)
     if share_cache and m > 1:
         first = _first_occurrence(
-            jnp.where(flat_valid, flat_ids, n + jnp.arange(m * mx)[None, :]),
-            n)                                                    # (b, m*mx)
+            jnp.where(flat_valid, flat_ids, n + jnp.arange(m * kx)[None, :]),
+            n)                                                    # (b, m*kx)
         first = first & flat_valid
     else:
         first = flat_valid
 
-    cvec = data[flat_ids]                                        # (b, m*mx, d)
+    cvec = data[flat_ids]                                        # (b, m*kx, d)
     dists = ops.gather_distance(queries, cvec, metric=metric)
     if share_cache:
         # V_delta's domain is exactly the union of per-graph visit sets, so
@@ -186,21 +262,16 @@ def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
     n_fresh = jnp.sum(flat_valid).astype(jnp.int32)
 
     if not hash_visited:
-        scat_v = jnp.where(flat_valid, flat_ids, n).reshape(b, m, mx)
+        scat_v = jnp.where(flat_valid, flat_ids, n).reshape(b, m, kx)
         visited = visited.at[brange[:, None, None],
-                             jnp.arange(m)[None, :, None],
+                             mrange[None, :, None],
                              scat_v].set(True, mode="drop")
 
-    dists3 = dists.reshape(b, m, mx)
+    dists3 = dists.reshape(b, m, kx)
     cand_ids = jnp.where(valid, nbrs, INVALID)
     cand_dist = jnp.where(valid, dists3, jnp.inf)
-    all_ids = jnp.concatenate([pool_ids, cand_ids], axis=-1)
-    all_dist = jnp.concatenate([pool_dist, cand_dist], axis=-1)
-    all_exp = jnp.concatenate([expanded, jnp.zeros_like(valid)], axis=-1)
-    order = jnp.argsort(all_dist, axis=-1)[..., :ef_max]
-    pool_ids = jnp.take_along_axis(all_ids, order, axis=-1)
-    pool_dist = jnp.take_along_axis(all_dist, order, axis=-1)
-    expanded = jnp.take_along_axis(all_exp, order, axis=-1)
+    pool_ids, pool_dist, expanded = _merge_topk(
+        pool_ids, pool_dist, expanded, cand_ids, cand_dist)
     return (pool_ids, pool_dist, expanded, visited, cache_d, cache_has,
             n_fresh, n_comp)
 
@@ -208,7 +279,7 @@ def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
 @functools.partial(
     jax.jit,
     static_argnames=("ef_max", "max_hops", "share_cache", "metric",
-                     "visited_impl", "hash_slots"))
+                     "visited_impl", "hash_slots", "expand_width"))
 def beam_search(
     graph_ids: jax.Array,      # int32[m, n, Mx]
     data: jax.Array,           # f32[n, d]
@@ -226,10 +297,14 @@ def beam_search(
     metric: str = "l2",
     visited_impl: str = "dense",
     hash_slots: int | None = None,
+    expand_width: int = 1,
 ) -> SearchResult:
     if visited_impl not in VISITED_IMPLS:
         raise ValueError(
             f"visited_impl {visited_impl!r} not in {VISITED_IMPLS}")
+    if expand_width < 1:
+        raise ValueError(f"expand_width must be >= 1, got {expand_width}")
+    width = min(expand_width, ef_max)      # cannot expand more than the pool
     met = metric_lib.resolve(metric)
     if met.normalize:
         # One in-jit normalization per call; builders avoid even this by
@@ -247,7 +322,7 @@ def beam_search(
     pool_dist = jnp.full((b, m, ef_max), jnp.inf, jnp.float32)
     expanded = jnp.zeros((b, m, ef_max), bool)
     if visited_impl == "hash":
-        slots = hash_slots or hashset.auto_slots(max_hops, mx)
+        slots = hash_slots or hashset.auto_slots(max_hops, width * mx)
         visited = hashset.make_tables((b, m), slots)
     else:
         visited = jnp.zeros((b, m, n), bool)
@@ -257,7 +332,7 @@ def beam_search(
         cache_slots = (
             min(hashset.next_pow2(m * hash_slots), hashset.CACHE_SLOTS_CAP)
             if hash_slots else
-            hashset.auto_slots(max_hops, mx, searches=m,
+            hashset.auto_slots(max_hops, width * mx, searches=m,
                                cap=hashset.CACHE_SLOTS_CAP))
         cache_d, cache_has = fresh_cache(b, n, share_cache, visited_impl,
                                          slots=cache_slots)
@@ -309,7 +384,7 @@ def beam_search(
          nf, nc) = _expand_all_graphs(
             graph_ids, data, queries, query_ids, row_mask, slot_mask,
             pool_ids, pool_dist, expanded, visited, cache_d, cache_has,
-            share_cache, metric)
+            share_cache, metric, width)
         return (pool_ids, pool_dist, expanded, visited, cache_d, cache_has,
                 n_fresh + nf, n_comp + nc, hop + 1)
 
@@ -323,9 +398,12 @@ def beam_search(
                         cache_d, cache_has)
 
 
-def default_max_hops(ef_max: int) -> int:
-    """Generous hop bound: best-first search converges in ~ef expansions."""
-    return 3 * ef_max + 16
+def default_max_hops(ef_max: int, expand_width: int = 1) -> int:
+    """Generous hop bound: best-first search converges in ~ef expansions,
+    and a width-W hop performs W of them — the bound (and with it the
+    auto-sized hash tables, which scale as hops × W·Mx) shrinks ~W×.
+    Invalid widths are left to ``beam_search``'s validation."""
+    return 3 * -(-ef_max // max(1, expand_width)) + 16
 
 
 def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
@@ -334,6 +412,7 @@ def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
                metric: str = "l2",
                visited_impl: str = "dense",
                hash_slots: int | None = None,
+               expand_width: int = 1,
                row_mask: jax.Array | None = None) -> SearchResult:
     """Single-graph external k-ANNS (evaluation path, Alg. 1).
 
@@ -341,7 +420,9 @@ def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
     distances come back in that metric's units (core/metric.py convention).
     ``visited_impl="hash"`` swaps the dense visit bitmap for the O(ef)
     hash-set state (DESIGN.md §9) — the serving default via
-    serve/retrieval.py.  ``row_mask`` marks padding rows that must do no
+    serve/retrieval.py.  ``expand_width`` expands that many frontier nodes
+    per hop (DESIGN.md §10); 1 reproduces the paper's sequential schedule,
+    serving uses 4.  ``row_mask`` marks padding rows that must do no
     search work (static-shape batching; their pools come back INVALID).
     """
     if k > ef:
@@ -358,9 +439,9 @@ def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
         jnp.full((b,), INVALID, jnp.int32),
         jnp.ones((b,), bool) if row_mask is None else row_mask,
         jnp.array([ef], jnp.int32), ep,
-        ef_max=ef, max_hops=max_hops or default_max_hops(ef),
+        ef_max=ef, max_hops=max_hops or default_max_hops(ef, expand_width),
         share_cache=False, metric=metric, visited_impl=visited_impl,
-        hash_slots=hash_slots)
+        hash_slots=hash_slots, expand_width=expand_width)
     return SearchResult(res.pool_ids[:, 0, :k], res.pool_dist[:, 0, :k],
                         res.n_fresh, res.n_computed, res.hops,
                         res.cache_d, res.cache_has)

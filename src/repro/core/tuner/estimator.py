@@ -46,18 +46,19 @@ class EstimationRecord:
 
 
 def _eval_one(pg, build_res, gi, data, queries, gt, k, ef_grid, timing_reps,
-              visited_impl="dense"):
+              visited_impl="dense", expand_width=1):
     metric = build_res.metric     # search under the metric the graph records
     if pg == "hnsw":
         def fn(q, ef):
             return hnswlib.hnsw_search(build_res.g, gi, data, q, k, ef,
                                        metric=metric,
-                                       visited_impl=visited_impl)
+                                       visited_impl=visited_impl,
+                                       expand_width=expand_width)
     else:
         def fn(q, ef):
             return evallib.flat_graph_search_fn(
                 build_res.g, gi, data, build_res.entry, k, metric,
-                visited_impl)(q, ef)
+                visited_impl, expand_width)(q, ef)
     return evallib.evaluate_search_fn(fn, queries, gt, k, ef_grid,
                                       timing_reps=timing_reps)
 
@@ -79,6 +80,7 @@ def estimate(
     timing_reps: int = 1,
     metric: str = "l2",
     visited_impl: str = "dense",
+    expand_width: int = 1,
 ) -> EstimationRecord:
     """Estimate the quality of each configuration in ``cfgs``.
 
@@ -87,7 +89,10 @@ def estimate(
     ``visited_impl`` selects the search visit-state representation for both
     build and evaluation searches; "dense" (default) keeps the paper-exact
     #dist counters the tables report, "hash" estimates with the O(ef)
-    serving memory profile (DESIGN.md §9).
+    serving memory profile (DESIGN.md §9).  ``expand_width`` likewise
+    applies to both (DESIGN.md §10); the default 1 keeps estimation
+    paper-exact, while W > 1 estimates with the multi-expansion schedule
+    serving will actually run (and speeds the measured QPS sweeps up).
     """
     ef_grid = ef_grid or [max(10, k), 2 * k, 4 * k, 8 * k]
     # Prepare the data ONCE and hand the kernel form down: otherwise every
@@ -114,13 +119,13 @@ def estimate(
             use_eso=use_eso and len(group) > 1,
             use_epo=use_epo and len(group) > 1,
             batch_size=build_batch_size, metric=metric,
-            visited_impl=visited_impl)
+            visited_impl=visited_impl, expand_width=expand_width)
         t_build += time.perf_counter() - t0
         ctr = ctr.add(res.counters)
         t0 = time.perf_counter()
         for gi, cfg in enumerate(group):
             points = _eval_one(pg, res, gi, data, queries, gt, k, ef_grid,
-                               timing_reps, visited_impl)
+                               timing_reps, visited_impl, expand_width)
             qps, recall = evallib.frontier_objectives(points)
             n_dist_eval += sum(p.n_dist for p in points)
             estimates.append(Estimate(cfg=cfg, qps=qps, recall=recall,

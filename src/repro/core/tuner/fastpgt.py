@@ -85,6 +85,7 @@ def tune(
     timing_reps: int = 1,
     metric: str = "l2",
     visited_impl: str = "dense",
+    expand_width: int = 1,
 ) -> TuneResult:
     from repro.core import eval as evallib   # local: avoids cycles
 
@@ -117,7 +118,8 @@ def tune(
             pg, data, queries, gt, cfgs, k=k, ef_grid=ef_grid,
             group_size=group_size, use_eso=eso, use_epo=epo, seed=seed,
             build_batch_size=build_batch_size, timing_reps=timing_reps,
-            metric=metric, visited_impl=visited_impl)
+            metric=metric, visited_impl=visited_impl,
+            expand_width=expand_width)
         t_est += time.perf_counter() - t0
         ctr = ctr.add(rec.counters)
         n_dist_eval += rec.n_dist_eval

@@ -104,18 +104,21 @@ def to_build_params(pg: str, cfg: dict[str, Any]):
 
 def build_many(pg: str, data, build_params: list, *, seed: int,
                use_eso: bool, use_epo: bool, batch_size: int,
-               metric: str = "l2", visited_impl: str = "dense"):
-    """Dispatch to the multi-builders. Returns the per-PG BuildResult."""
+               metric: str = "l2", visited_impl: str = "dense",
+               expand_width: int = 1):
+    """Dispatch to the multi-builders. Returns the per-PG BuildResult.
+
+    ``expand_width`` defaults to 1: construction follows the paper's
+    sequential best-first schedule so §2.1 bit-identity and the paper-exact
+    #dist counters hold (DESIGN.md §10).
+    """
+    kw = dict(seed=seed, use_eso=use_eso, use_epo=use_epo,
+              batch_size=batch_size, metric=metric,
+              visited_impl=visited_impl, expand_width=expand_width)
     if pg == "hnsw":
-        return hnswlib.build_multi_hnsw(
-            data, build_params, seed=seed, use_eso=use_eso, use_epo=use_epo,
-            batch_size=batch_size, metric=metric, visited_impl=visited_impl)
+        return hnswlib.build_multi_hnsw(data, build_params, **kw)
     if pg == "vamana":
-        return vamanalib.build_multi_vamana(
-            data, build_params, seed=seed, use_eso=use_eso, use_epo=use_epo,
-            batch_size=batch_size, metric=metric, visited_impl=visited_impl)
+        return vamanalib.build_multi_vamana(data, build_params, **kw)
     if pg == "nsg":
-        return nsglib.build_multi_nsg(
-            data, build_params, seed=seed, use_eso=use_eso, use_epo=use_epo,
-            batch_size=batch_size, metric=metric, visited_impl=visited_impl)
+        return nsglib.build_multi_nsg(data, build_params, **kw)
     raise ValueError(pg)

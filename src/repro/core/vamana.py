@@ -5,7 +5,9 @@ over the dataset (R = L per Theorem 1).  Each insertion batch searches the
 graph frozen at batch start (standard GPU/TPU relaxation, DESIGN.md §3),
 shares one V_delta across the m per-node searches (ESO), chains the m prunes
 through mPrune (EPO, group sorted ascending by alpha for soundness), and
-commits forward + reverse edges with overflow re-prune.
+commits forward + reverse edges with overflow re-prune.  ``expand_width``
+stays 1 by default so construction follows the paper's sequential
+best-first schedule exactly (DESIGN.md §10).
 
 ``visited_impl`` selects the search's visit-state representation; builds
 default to "dense" so graph outputs and #dist counters stay bit-identical
@@ -56,6 +58,7 @@ def build_multi_vamana(
     max_hops: int | None = None,
     metric: str = "l2",
     visited_impl: str = "dense",
+    expand_width: int = 1,
 ) -> BuildResult:
     met = metric_lib.resolve(metric)
     data = met.prepare(data)      # normalize ONCE for cosine (no-op otherwise)
@@ -103,7 +106,8 @@ def build_multi_vamana(
         res = search.beam_search(
             g.ids, data, queries, jnp.where(row_mask, u, INVALID), row_mask,
             L, entry, ef_max=L_max, max_hops=hops, share_cache=use_eso,
-            metric=kform, visited_impl=visited_impl)
+            metric=kform, visited_impl=visited_impl,
+            expand_width=expand_width)
         ctr.search_base += int(res.n_fresh)
         ctr.search += int(res.n_computed)
 

@@ -1,21 +1,32 @@
 """Gathered-candidate distance Pallas kernel with V_delta cache semantics.
 
 During multi-PG construction (FastPGT Alg. 3, mKANNS) each inserted node u
-expands frontiers on m graphs; the candidate neighbor vectors are gathered
-into (b, k, d) and distances to u are needed — *except* where the shared
-V_delta cache already holds them.  The kernel computes
+expands frontiers on m graphs; with width-W multi-expansion (DESIGN.md §10)
+the candidate neighbor vectors are gathered into (b, W·Mx, d) slabs and
+distances to u are needed — *except* where the shared V_delta cache already
+holds them.  The kernel computes
 
   out[b, i] = mask[b, i] ? delta(u[b], c[b, i]) : cached[b, i]
 
 with delta the metric's distance (kernel form "l2": squared L2; "ip":
 1 - <u, c>; cosine = "ip" on pre-normalized inputs — see core/metric.py).
 
+MXU formulation: the cross term is one (bk, d) · (d, 1) dot per tile —
+  ip:  1 - <u, c>                          (pure MXU + affine)
+  l2:  ‖c‖² - 2·<u, c> + ‖u‖²             (row norms on the VPU)
+so the kernel rides the systolic array instead of reducing elementwise on
+the VPU like its predecessor; kernels/ref.py remains the semantic oracle
+(the l2 norm-expansion matches it to float tolerance, not bit-exactly —
+the CPU ops.py dispatch uses the oracle, so host-side results are
+unchanged).
+
 The compute saving on real hardware comes from frontier dedup *before* the
 kernel call (fewer rows); the mask keeps bit-exact cache-reuse semantics so
 the paper's #dist accounting holds.
 
-Tiling: grid over (b, k/bk); each step holds one query row (1, d) and a
-(1, bk, d) candidate slab in VMEM.  Pure VPU work (elementwise + row reduce).
+Tiling: grid over (b, k/bk) slabs; each step holds one query row (1, d) and
+a (1, bk, d) candidate slab in VMEM (bk defaults to the 128-lane MXU width;
+d is padded to 128 lanes at the ops.py boundary).
 """
 from __future__ import annotations
 
@@ -32,12 +43,20 @@ DEFAULT_BK = 128
 def _gather_dist_kernel(u_ref, c_ref, cached_ref, mask_ref, o_ref, *,
                         kernel: str):
     u = u_ref[...].astype(jnp.float32)                 # (1, d)
-    c = c_ref[...].astype(jnp.float32)                 # (1, bk, d)
+    c = c_ref[...][0].astype(jnp.float32)              # (bk, d)
+    # MXU: (bk, d) @ (d, 1) — the cross term for both kernel forms
+    cross = jax.lax.dot_general(
+        c, u,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # (bk, 1)
     if kernel == "ip":
-        d2 = 1.0 - jnp.sum(c * u[:, None, :], axis=-1)     # (1, bk)
+        d2 = 1.0 - cross[:, 0][None, :]                # (1, bk)
     else:
-        diff = c - u[:, None, :]
-        d2 = jnp.maximum(jnp.sum(diff * diff, axis=-1), 0.0)
+        cn = jnp.sum(c * c, axis=-1)                   # (bk,)  VPU row norm
+        un = jnp.sum(u * u, axis=-1)                   # (1,)
+        d2 = jnp.maximum(cn[None, :] - 2.0 * cross[:, 0][None, :] + un,
+                         0.0)
     cached = cached_ref[...].astype(jnp.float32)
     mask = mask_ref[...]
     o_ref[...] = jnp.where(mask, d2, cached)

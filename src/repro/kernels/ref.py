@@ -48,6 +48,11 @@ def gather_distance_ref(
 ) -> jax.Array:
     """Distances from each query to its own gathered candidates.
 
+    This oracle is also the CPU dispatch path (ops.py), so its numerics
+    define host-side search results bit-for-bit; the MXU kernel's l2
+    norm-expansion (kernels/gather_distance.py) matches it to float
+    tolerance only.
+
     Args:
       u: (b, d) queries.
       c: (b, k, d) per-query candidate vectors (already gathered).

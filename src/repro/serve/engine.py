@@ -5,6 +5,13 @@ prefill fills their KV pages, and one fused decode step advances every
 active slot per tick.  Finished sequences (EOS or max-len) free their slot
 for the next queued request — the core of continuous batching without the
 scheduler bells.  All steps are jit'd once per (B, max_seq).
+
+``RetrievalKnobs`` is the one place the decode-time retrieval-attention
+search knobs live (the README "which knob do I turn" table): long-context
+deployments construct it once per model and pass ``search_kwargs()``
+through to ``serve.retrieval`` so every per-(layer, head) index is searched
+with the same serving defaults — hash-set visit state (DESIGN.md §9) and
+width-W multi-expansion (DESIGN.md §10).
 """
 from __future__ import annotations
 
@@ -18,6 +25,42 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.models import model as M
+from repro.serve import retrieval as retrieval_lib
+
+
+@dataclasses.dataclass(frozen=True)
+class RetrievalKnobs:
+    """Decode-time retrieval-attention serving knobs (one home for the
+    defaults the README table documents).
+
+    top_k:        keys attended per decode query.
+    ef:           search pool size (recall/#dist trade; must be >= top_k).
+    expand_width: frontier nodes expanded per search hop (DESIGN.md §10).
+    visited_impl: "hash" = O(ef) search state for any context length;
+                  "dense" = exact-#dist instrumentation (DESIGN.md §9).
+    block_size:   queries per compiled search shape on the batched path.
+    """
+    top_k: int = 48
+    ef: int = 96
+    expand_width: int = retrieval_lib.DEFAULT_EXPAND_WIDTH
+    visited_impl: str = "hash"
+    block_size: int = 64
+
+    def __post_init__(self):
+        if self.top_k > self.ef:
+            raise ValueError(
+                f"top_k={self.top_k} > ef={self.ef}: the search pool holds "
+                f"only ef candidates (see search.knn_search)")
+
+    def search_kwargs(self) -> dict:
+        """kwargs for ``retrieval.retrieval_attention`` (single batch)."""
+        return dict(top_k=self.top_k, ef=self.ef,
+                    expand_width=self.expand_width,
+                    visited_impl=self.visited_impl)
+
+    def batched_kwargs(self) -> dict:
+        """kwargs for ``retrieval.retrieval_attention_batched``."""
+        return dict(self.search_kwargs(), block_size=self.block_size)
 
 
 @dataclasses.dataclass

@@ -19,7 +19,12 @@ Serving memory model (DESIGN.md §9): decode-time searches default to
 ``visited_impl="hash"`` — per-query visit state is an O(ef·M·hops)
 open-addressing hash set instead of the dense O(n) bitmap, so search memory
 is independent of context length and the path scales to million-key caches.
-Builders keep the dense default (§2.1 bit-identity of build outputs).
+Serving also defaults to width-``DEFAULT_EXPAND_WIDTH`` multi-expansion
+(DESIGN.md §10): each search hop expands the W closest unexpanded frontier
+nodes at once, cutting the sequential hop count ~W× and amortizing the
+fixed per-hop costs (pool merge, hash probing, kernel dispatch) that
+dominate decode-time latency.  Builders keep the dense, W = 1 defaults
+(§2.1 bit-identity of build outputs).
 
 ``retrieval_attention`` answers one decode batch; for heavy traffic,
 ``retrieval_attention_batched`` blocks large/ragged query batches into
@@ -41,6 +46,11 @@ from repro.core import graph as graph_lib
 from repro.core import metric as metric_lib
 from repro.core import search as search_lib
 from repro.core import vamana as vamana_lib
+
+# Serving-side multi-expansion width (DESIGN.md §10): searches answer with
+# the same pools a W = 1 search would find at equal recall targets, in ~W×
+# fewer sequential hops; builders deliberately do NOT share this default.
+DEFAULT_EXPAND_WIDTH = 4
 
 
 @dataclasses.dataclass
@@ -94,7 +104,8 @@ def _attend(idx: RetrievalIndex, q: jax.Array, pool_ids: jax.Array,
 
 def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
                         ef: int, scale: float | None = None,
-                        visited_impl: str = "hash"
+                        visited_impl: str = "hash",
+                        expand_width: int = DEFAULT_EXPAND_WIDTH
                         ) -> tuple[jax.Array, search_lib.SearchResult]:
     """Approximate attention for decode queries q: (B, dh).
 
@@ -102,12 +113,15 @@ def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
     those.  Returns (out (B, dh), SearchResult for instrumentation).
     Search state is O(ef)-memory hash-set based by default (DESIGN.md §9);
     pass ``visited_impl="dense"`` to get the exact-counter bitmap path.
+    ``expand_width`` is the per-hop frontier width (DESIGN.md §10) —
+    1 reproduces the paper's sequential schedule exactly.
     """
     met = metric_lib.resolve(idx.metric)
     qs = met.prepare(q)            # per-call cost is (B, dh) — keys untouched
     res = search_lib.knn_search(idx.graph_ids, idx.search_keys, qs,
                                 top_k, ef, idx.entry, metric=met.kernel,
-                                visited_impl=visited_impl)
+                                visited_impl=visited_impl,
+                                expand_width=expand_width)
     return _attend(idx, q, res.pool_ids, scale), res
 
 
@@ -115,6 +129,7 @@ def retrieval_attention_batched(
     idx: RetrievalIndex, q: jax.Array, *, top_k: int, ef: int,
     scale: float | None = None, block_size: int = 64,
     visited_impl: str = "hash",
+    expand_width: int = DEFAULT_EXPAND_WIDTH,
 ) -> tuple[jax.Array, search_lib.SearchResult]:
     """Query-blocked retrieval attention for serving-sized batches.
 
@@ -141,6 +156,7 @@ def retrieval_attention_batched(
         res = search_lib.knn_search(
             idx.graph_ids, idx.search_keys, qb, top_k, ef, idx.entry,
             metric=met.kernel, visited_impl=visited_impl,
+            expand_width=expand_width,
             row_mask=jnp.arange(bs) < nrows)
         # accumulate device scalars — no host sync inside the dispatch loop
         pool_ids.append(res.pool_ids[:nrows])

@@ -54,6 +54,39 @@ def test_lookup_insert_overflow_no_false_positives():
     np.testing.assert_array_equal(np.asarray(found3), np.asarray(ins))
 
 
+def test_lookup_insert_wide_rows_use_sort_rank_path():
+    """K > RUN_RANK_TRI_MAX exercises _run_rank's stable-sort path — the
+    one serving configs with W·Mx > 128 rely on for race-free inserts."""
+    K = hashset.RUN_RANK_TRI_MAX + 72
+    slots = 2048
+    r = np.random.default_rng(9)
+    keys = jnp.asarray(r.choice(100_000, size=K, replace=False),
+                       jnp.int32)[None, :]
+    act = jnp.ones(keys.shape, bool)
+    tab = hashset.make_tables((1,), slots)
+    tab, found, ins = hashset.lookup_insert(tab, keys, act)
+    assert not bool(found.any())
+    # load factor < 1/8: every distinct key must land
+    assert bool(ins.all())
+    stored = np.asarray(tab)
+    assert len(set(stored[stored != hashset.EMPTY])) == K, "lost inserts"
+    _, found2, ins2 = hashset.lookup_insert(tab, keys, act)
+    assert bool(found2.all()) and not bool(ins2.any())
+
+
+def test_run_rank_sort_path_matches_bruteforce():
+    """Both _run_rank materializations equal the flat-order oracle."""
+    r = np.random.default_rng(4)
+    for K in (17, hashset.RUN_RANK_TRI_MAX + 33):
+        vals = r.integers(0, 9, size=(3, K))
+        got = np.asarray(hashset._run_rank(jnp.asarray(vals, jnp.int32)))
+        exp = np.zeros_like(vals)
+        for b in range(vals.shape[0]):
+            for i in range(K):
+                exp[b, i] = int(np.sum(vals[b, :i] == vals[b, i]))
+        np.testing.assert_array_equal(got, exp)
+
+
 def test_lookup_insert_inactive_lanes_untouched():
     tab = hashset.make_tables((2,), 16)
     keys = jnp.array([[3, 5], [7, 9]], jnp.int32)
