@@ -5,10 +5,13 @@ path; the Pallas TPU kernels are exercised in interpret mode by tests and
 by the CI smoke lane, not timed here).
 
 The search-scaling bench sweeps n ∈ {10k, 100k, 1M synthetic} × visited
-impls × W ∈ {1, 4} and audits the traced jaxpr: in hash mode no
-intermediate array may carry a corpus-sized dimension — i.e. no (b, n) /
-(b, m, n) state is ever materialized — which is the property that makes
-million-key serving fit in memory.
+impls × W ∈ {1, 4}, plus the mesh-partitioned serving profile at
+shards ∈ {1, 4} (DESIGN.md §11), and audits the traced jaxpr: in hash mode
+(and in the sharded path at S > 1) no intermediate array may carry a
+corpus-sized dimension — i.e. no (b, n) / (b, m, n) state is ever
+materialized — which is the property that makes million-key serving fit
+in memory.  Timing is interleaved min-of-reps (host wall time here is
+±80% noisy; see _time_interleaved).
 
 Every run also writes ``BENCH_search.json`` at the repo root (QPS, hops,
 #dist, peak search-state bytes per config) so the serving-perf trajectory
@@ -44,17 +47,43 @@ BENCH_JSON_QUICK = os.path.join(os.path.dirname(__file__), "..",
 
 
 def _time(fn, *args, reps=5):
-    """(seconds_per_call, warmup_result) — mean over reps, matching the
-    methodology of every prior PR's numbers (BENCH_search.json is a
-    cross-PR trajectory — switching to e.g. min-of-reps would bias new
-    numbers low vs the recorded baselines).  The warmup result is returned
-    so callers needing outputs don't re-run the function."""
+    """(seconds_per_call, warmup_result) — min over reps.
+
+    Host wall time on this container is ±80% noisy (background load lands
+    on whole reps); the min of several reps estimates the uncontended cost,
+    where the mean smears contention into the signal.  The warmup result is
+    returned so callers needing outputs don't re-run the function."""
     out = fn(*args)
     jax.block_until_ready(out)
-    t0 = time.perf_counter()
+    best = float("inf")
     for _ in range(reps):
+        t0 = time.perf_counter()
         jax.block_until_ready(fn(*args))
-    return (time.perf_counter() - t0) / reps, out
+        best = min(best, time.perf_counter() - t0)
+    return best, out
+
+
+def _time_interleaved(thunks, reps=5):
+    """Per-thunk (seconds, warmup_result), timed in interleaved rounds.
+
+    Configurations being *compared* must sample host noise together:
+    round r times every config back to back, so a load spike inflates one
+    rep of each instead of every rep of whichever config it straddled
+    (mean-of-reps sequential timing made PR 3's W=1 vs W=4 CPU comparison
+    unstable).  Per-config min over rounds is the reported number — the
+    policy BENCH_search.json records as ``interleaved-min-of-reps``."""
+    outs = []
+    for fn in thunks:                       # warmup/compile, untimed
+        out = fn()
+        jax.block_until_ready(out)
+        outs.append(out)
+    best = [float("inf")] * len(thunks)
+    for _ in range(reps):
+        for i, fn in enumerate(thunks):
+            t0 = time.perf_counter()
+            jax.block_until_ready(fn())
+            best[i] = min(best[i], time.perf_counter() - t0)
+    return list(zip(best, outs))
 
 
 def _corpus_sized_shapes(fn, n: int, *args, **kw) -> list[tuple]:
@@ -89,9 +118,13 @@ def _corpus_sized_shapes(fn, n: int, *args, **kw) -> list[tuple]:
 
 
 def search_scaling_rows(sizes=(10_000, 100_000, 1_000_000), *,
-                        widths=(1, 4), reps=5
+                        widths=(1, 4), shard_counts=(1, 4), reps=5
                         ) -> tuple[list[str], list[dict]]:
-    """Search memory/QPS scaling: (dense | hash visited state) × width W.
+    """Search memory/QPS scaling: (dense | hash visited state) × width W,
+    plus the mesh-partitioned serving profile at shards ∈ {1, 4}
+    (DESIGN.md §11 — the S=1 row isolates shard_map overhead vs the plain
+    path; on a 1-device host the mesh is 1-way, with 4 forced host devices
+    the same rows measure real scatter-gather).
 
     Synthetic corpora (random data + random regular graph — graph quality
     is irrelevant to the memory/time profile being measured).  Reports QPS,
@@ -99,8 +132,11 @@ def search_scaling_rows(sizes=(10_000, 100_000, 1_000_000), *,
     batch (visited + V_delta — the quantity DESIGN.md §9 tabulates;
     process RSS is a lifetime high-water mark and would misattribute
     earlier configs' peaks, so it is deliberately not reported per row).
-    Returns (csv rows, json records); the hash/ef=32 configs are the
-    serving profile the PR-over-PR trajectory in BENCH_search.json tracks.
+    All configs of one corpus size are timed in interleaved min-of-reps
+    rounds (``_time_interleaved``) so host-load spikes don't bias the
+    cross-config comparison.  Returns (csv rows, json records); the
+    hash/ef=32 configs are the serving profile the PR-over-PR trajectory
+    in BENCH_search.json tracks.
     """
     rows: list[str] = []
     records: list[dict] = []
@@ -111,13 +147,14 @@ def search_scaling_rows(sizes=(10_000, 100_000, 1_000_000), *,
         adj = graph.random_knng_ids(0, n, deg)[None]       # (1, n, deg)
         queries = data[:b] + 0.1 * jnp.asarray(
             r.normal(size=(b, d)), jnp.float32)
+        cfgs: list[dict] = []
         for impl in ("dense", "hash"):
             for w in widths:
-                def f(adj, data, queries, impl=impl, w=w):
+                def f(impl=impl, w=w):
                     return search.knn_search(adj, data, queries, k, ef, 0,
                                              visited_impl=impl,
                                              expand_width=w)
-                linear = _corpus_sized_shapes(f, n, adj, data, queries)
+                linear = _corpus_sized_shapes(f, n)
                 if impl == "hash":
                     assert not linear, (
                         f"hash mode materialized corpus-sized state: "
@@ -129,18 +166,44 @@ def search_scaling_rows(sizes=(10_000, 100_000, 1_000_000), *,
                     assert linear, (
                         "audit sanity: dense mode must show (b,m,n)")
                     state_bytes = b * n               # visited bool[b, 1, n]
-                sec, res = _time(f, adj, data, queries, reps=reps)
-                rec = dict(n=n, impl=impl, expand_width=w, ef=ef, k=k,
-                           batch=b, degree=deg, qps=round(b / sec, 1),
-                           us_per_batch=round(sec * 1e6, 1),
-                           hops=int(res.hops),
-                           n_dist=int(res.n_computed),
-                           state_bytes=state_bytes)
-                records.append(rec)
-                rows.append(common.row(
-                    f"search_scaling/{impl}/W={w}/n={n}", sec * 1e6,
-                    f"qps={rec['qps']} hops={rec['hops']} "
-                    f"ndist={rec['n_dist']} state_bytes={state_bytes}"))
+                cfgs.append(dict(
+                    name=f"search_scaling/{impl}/W={w}/n={n}", fn=f,
+                    rec=dict(path="plain", n=n, impl=impl, expand_width=w,
+                             num_shards=1, ef=ef, k=k, batch=b, degree=deg,
+                             state_bytes=state_bytes)))
+        for s in shard_counts:
+            def shard_graph(local):
+                return graph.random_knng_ids(0, local.shape[0], deg), 0
+            sg = graph.partition(data, s, build_fn=shard_graph)
+
+            def f(sg=sg):
+                return search.sharded_knn_search(
+                    sg, queries, k, ef, visited_impl="hash",
+                    expand_width=4)
+            if s > 1:
+                linear = _corpus_sized_shapes(f, n)
+                assert not linear, (
+                    f"sharded search materialized corpus-sized state: "
+                    f"{linear}")      # per-shard (n/S) arrays are the point
+            slots = hashset.auto_slots(search.default_max_hops(ef, 4),
+                                       4 * deg)
+            # path="sharded" disambiguates the S=1 row from the plain
+            # hash/W=4 row (same config keys, different execution path)
+            cfgs.append(dict(
+                name=f"search_scaling/sharded/S={s}/W=4/n={n}", fn=f,
+                rec=dict(path="sharded", n=n, impl="hash", expand_width=4,
+                         num_shards=s, ef=ef, k=k, batch=b, degree=deg,
+                         state_bytes=b * slots * 4 * s)))
+        timed = _time_interleaved([c["fn"] for c in cfgs], reps=reps)
+        for cfg, (sec, res) in zip(cfgs, timed):
+            rec = dict(cfg["rec"], qps=round(b / sec, 1),
+                       us_per_batch=round(sec * 1e6, 1),
+                       hops=int(res.hops), n_dist=int(res.n_computed))
+            records.append(rec)
+            rows.append(common.row(
+                cfg["name"], sec * 1e6,
+                f"qps={rec['qps']} hops={rec['hops']} "
+                f"ndist={rec['n_dist']} state_bytes={rec['state_bytes']}"))
     return rows, records
 
 
@@ -152,9 +215,15 @@ def write_bench_json(records: list[dict], *, quick: bool = False) -> None:
     never mistaken for — or committed over — the full trajectory)."""
     payload = {
         "bench": "search_scaling",
-        "contract": "serving config = hash/ef=32; compare qps across PRs "
-                    "(mean-of-reps timing)",
+        "contract": "serving config = hash/ef=32; compare qps across PRs. "
+                    "Rows before PR 5 were mean-of-reps; qps is not "
+                    "comparable across that boundary",
+        "timing": {"policy": "interleaved-min-of-reps",
+                   "noise": "host wall time is +/-80% under load; per-n "
+                            "config sets share timing rounds and report "
+                            "the per-config min"},
         "backend": jax.default_backend(),
+        "num_devices": jax.device_count(),
         "mode": "quick" if quick else "full",
         "rows": records,
     }

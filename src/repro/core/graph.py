@@ -136,6 +136,162 @@ def bucket(x: int, mult: int) -> int:
     return -(-x // mult) * mult
 
 
+# ---------------------------------------------------------------------------
+# Corpus sharding (DESIGN.md §11).
+#
+# Scatter-gather partitioned search splits the corpus into ``num_shards``
+# disjoint node sets; each shard holds its own vectors and a subgraph over
+# them in *shard-local* int32 ids, plus the local -> global id map used to
+# restore global ids when per-shard pools merge.  Shards are padded to a
+# common row count so they stack on a leading axis that a "shard" mesh axis
+# can partition (core/search.py sharded_knn_search) — the first place the
+# corpus-resident arrays stop being replicated across devices.
+# ---------------------------------------------------------------------------
+
+ASSIGNMENTS = ("chunked", "random")
+
+
+@jax.tree_util.register_dataclass
+@dataclasses.dataclass
+class ShardedGraph:
+    """num_shards stacked per-shard subindexes over a partitioned corpus.
+
+    Attributes:
+      ids:        int32[S, n_s, Mx] shard-local out-neighbor ids
+                  (INVALID-padded; they index rows of the same shard).
+      data:       float32[S, n_s, d] shard-local vectors (padding rows are
+                  zero and unreachable: no adjacency row points at them).
+      global_ids: int32[S, n_s] local row -> global id (INVALID on padding).
+      entries:    int32[S] shard-local search entry point per shard.
+      counts:     int32[S] real (non-padding) rows per shard.
+    """
+    ids: jax.Array
+    data: jax.Array
+    global_ids: jax.Array
+    entries: jax.Array
+    counts: jax.Array
+
+    @property
+    def num_shards(self) -> int:
+        return self.ids.shape[0]
+
+    @property
+    def shard_rows(self) -> int:
+        return self.ids.shape[1]
+
+    @property
+    def max_degree(self) -> int:
+        return self.ids.shape[2]
+
+
+def shard_assignment(n: int, num_shards: int, *, assignment: str = "chunked",
+                     seed: int = 0) -> list:
+    """Global-id arrays per shard (ascending within each shard).
+
+    "chunked" splits [0, n) into contiguous runs (np.array_split balance:
+    the first n % S shards get one extra row); "random" deterministically
+    permutes ids first (pure function of ``seed`` — the deterministic
+    random strategy of §IV-C applied to placement), then chunks the
+    permutation.  Every id lands in exactly one shard.
+    """
+    import numpy as np
+    if assignment not in ASSIGNMENTS:
+        raise ValueError(f"assignment {assignment!r} not in {ASSIGNMENTS}")
+    if not 1 <= num_shards <= n:
+        raise ValueError(
+            f"num_shards={num_shards} must be in [1, n={n}]: an empty shard "
+            f"has no entry point")
+    ids = np.arange(n, dtype=np.int32)
+    if assignment == "random":
+        ids = np.random.default_rng(seed).permutation(ids)
+    return [np.sort(part) for part in np.array_split(ids, num_shards)]
+
+
+def partition(data: jax.Array, num_shards: int, *,
+              assignment: str = "chunked", seed: int = 0,
+              graph_ids: jax.Array | None = None,
+              build_fn=None, degree: int = 16,
+              metric: str = "l2", mesh=None) -> ShardedGraph:
+    """Partition a corpus (and its graph) into a ``ShardedGraph``.
+
+    Per-shard subgraphs come from one of three sources:
+      * ``build_fn(local_data) -> (ids, entry)``: build a fresh subindex
+        over each shard's vectors (what serving uses — per-shard Vamana,
+        see serve/retrieval.py).  ``ids`` are shard-local.
+      * ``graph_ids`` int32[n, Mx]: induce from an existing global graph —
+        local rows keep only in-shard edges, remapped to local ids.
+        Cross-shard edges are dropped (documented recall cost, DESIGN.md
+        §11), so this path is for structure-preserving experiments, not
+        quality-sensitive serving.
+      * neither: exact KNNG of ``degree`` per shard (knng.build_knng) —
+        the quality default at container scale.
+    Entry points come from ``build_fn`` when given, else the shard-local
+    medoid under ``metric``.
+
+    The result is placed onto ``mesh`` (default: the ``"shard"`` mesh
+    ``distributed.sharding.search_mesh(num_shards)``) with every array
+    split along the shard axis — done ONCE here so repeated
+    ``sharded_knn_search`` calls never re-scatter the corpus.  Note the
+    capacity guarantee is for *steady-state search*: construction stages
+    the full corpus (and the stacked per-shard arrays) on the default
+    device before that one placement, so building truly
+    beyond-device-memory indexes needs shard-at-a-time staging — the
+    multi-host follow-up DESIGN.md §11 names.
+    """
+    import numpy as np
+
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.core import knng as knng_lib   # local: keeps graph.py light
+    from repro.distributed import sharding as sharding_lib
+
+    data = jnp.asarray(data)
+    n = data.shape[0]
+    parts = shard_assignment(n, num_shards, assignment=assignment, seed=seed)
+    n_s = max(len(p) for p in parts)
+    all_ids, all_data, all_gids, entries, counts = [], [], [], [], []
+    mx = 0
+    for part in parts:
+        c = len(part)
+        local = data[jnp.asarray(part)]
+        if build_fn is not None:
+            lids, entry = build_fn(local)
+            lids = jnp.asarray(lids, jnp.int32)
+        elif graph_ids is not None:
+            g = jnp.asarray(graph_ids)
+            if g.ndim == 3:       # (1, n, Mx) MultiGraph slice
+                g = g[0]
+            rows = np.asarray(g)[part]                     # (c, Mx) global
+            inv = np.full(n, INVALID, np.int32)
+            inv[part] = np.arange(c, dtype=np.int32)
+            lids = jnp.asarray(
+                np.where(rows >= 0, inv[np.maximum(rows, 0)], INVALID))
+            entry = int(medoid(local, metric))
+        else:
+            lids, _ = knng_lib.build_knng(local, min(degree, c - 1),
+                                          metric=metric)
+            entry = int(medoid(local, metric))
+        mx = max(mx, lids.shape[-1])
+        all_ids.append(lids)
+        all_data.append(local)
+        all_gids.append(jnp.asarray(part, jnp.int32))
+        entries.append(entry)
+        counts.append(c)
+    ids = jnp.stack([
+        jnp.pad(g, ((0, n_s - g.shape[0]), (0, mx - g.shape[1])),
+                constant_values=INVALID) for g in all_ids])
+    dat = jnp.stack([
+        jnp.pad(x, ((0, n_s - x.shape[0]), (0, 0))) for x in all_data])
+    gids = jnp.stack([
+        jnp.pad(g, (0, n_s - g.shape[0]), constant_values=INVALID)
+        for g in all_gids])
+    sg = ShardedGraph(ids=ids, data=dat, global_ids=gids,
+                      entries=jnp.asarray(entries, jnp.int32),
+                      counts=jnp.asarray(counts, jnp.int32))
+    mesh = mesh or sharding_lib.search_mesh(num_shards)
+    return jax.device_put(sg, NamedSharding(mesh, PartitionSpec("shard")))
+
+
 def pytree_bytes(tree: Any) -> int:
     return sum(x.size * x.dtype.itemsize
                for x in jax.tree_util.tree_leaves(tree)

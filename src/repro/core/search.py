@@ -48,6 +48,12 @@ The search is metric-generic (DESIGN.md §4): ``metric`` selects the distance
 the pools rank by; builders pass the kernel form ("l2"/"ip") over prepared
 data so the loop never normalizes, while external callers may pass "cosine"
 and get one in-jit normalization per call.
+
+Corpora beyond one device shard (DESIGN.md §11): ``sharded_knn_search``
+runs this same loop per shard of a ``graph.ShardedGraph`` under a
+``shard_map`` over the ``"shard"`` mesh axis, restores global ids, and
+merges per-shard pools with ``_merge_topk`` — scatter-gather partitioned
+search with the single-shard case bit-identical to ``knn_search``.
 """
 from __future__ import annotations
 
@@ -57,9 +63,13 @@ from typing import NamedTuple
 import jax
 import jax.numpy as jnp
 
+from jax.experimental.shard_map import shard_map
+from jax.sharding import NamedSharding, PartitionSpec as P
+
 from repro.core import hashset
 from repro.core import metric as metric_lib
 from repro.core.graph import INVALID
+from repro.distributed import sharding as sharding_lib
 from repro.kernels import ops
 
 VISITED_IMPLS = ("dense", "hash")
@@ -445,3 +455,145 @@ def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
     return SearchResult(res.pool_ids[:, 0, :k], res.pool_dist[:, 0, :k],
                         res.n_fresh, res.n_computed, res.hops,
                         res.cache_d, res.cache_has)
+
+
+# ---------------------------------------------------------------------------
+# Mesh-partitioned scatter-gather search (DESIGN.md §11).
+# ---------------------------------------------------------------------------
+
+def _shard_search_body(graph_ids, data, global_ids, entries, queries,
+                       row_mask, *, ef, max_hops, metric, visited_impl,
+                       hash_slots, expand_width):
+    """Search every shard of one mesh slot's block; merge its pools locally.
+
+    Runs inside ``shard_map``: arguments carry this slot's ``s_loc``
+    contiguous shards.  Each shard runs the *unchanged* lockstep beam
+    search (W, metric, dense/hash visited state all preserved) on its
+    local-id subgraph with full pool size ``ef`` — scatter-gather explores
+    each partition as deeply as the unsharded search explores the whole
+    corpus, which is where the recall of the merged result comes from.
+    Pool ids are restored to global ids *before* any merge (a local id is
+    meaningless outside its shard), then folded left-to-right in shard
+    order through the rank merge; counters psum over the mesh so every
+    slot returns the global totals.
+    """
+    s_loc = graph_ids.shape[0]
+    b = queries.shape[0]
+    qids = jnp.full((b,), INVALID, jnp.int32)
+    pool_i = pool_d = None
+    n_fresh = n_comp = hops = jnp.int32(0)
+    for s in range(s_loc):
+        ep = jnp.broadcast_to(entries[s].astype(jnp.int32), (b,))[:, None]
+        res = beam_search(
+            graph_ids[s][None], data[s], queries, qids, row_mask,
+            jnp.array([ef], jnp.int32), ep,
+            ef_max=ef, max_hops=max_hops, share_cache=False, metric=metric,
+            visited_impl=visited_impl, hash_slots=hash_slots,
+            expand_width=expand_width)
+        lids = res.pool_ids[:, 0]                              # (b, ef) local
+        gids = jnp.where(lids == INVALID, INVALID,
+                         global_ids[s][jnp.maximum(lids, 0)])
+        dist = res.pool_dist[:, 0]
+        if pool_i is None:
+            pool_i, pool_d = gids, dist
+        else:
+            pool_i, pool_d, _ = _merge_topk(
+                pool_i, pool_d, jnp.zeros_like(pool_i, bool), gids, dist)
+        n_fresh += res.n_fresh
+        n_comp += res.n_computed
+        hops = jnp.maximum(hops, res.hops)
+    n_fresh = jax.lax.psum(n_fresh, "shard")
+    n_comp = jax.lax.psum(n_comp, "shard")
+    hops = jax.lax.pmax(hops, "shard")
+    return pool_i[None], pool_d[None], n_fresh, n_comp, hops
+
+
+@functools.lru_cache(maxsize=None)
+def _sharded_search_fn(mesh, *, k, ef, max_hops, metric, visited_impl,
+                       hash_slots, expand_width):
+    """jit'd mesh-partitioned search, cached per (mesh, static knobs)."""
+    body = functools.partial(
+        _shard_search_body, ef=ef, max_hops=max_hops, metric=metric,
+        visited_impl=visited_impl, hash_slots=hash_slots,
+        expand_width=expand_width)
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("shard"), P("shard"), P("shard"), P("shard"), P(), P()),
+        out_specs=(P("shard"), P("shard"), P(), P(), P()),
+        check_rep=False)
+
+    @jax.jit
+    def run(graph_ids, data, global_ids, entries, queries, row_mask):
+        blocks_i, blocks_d, n_fresh, n_comp, hops = sharded(
+            graph_ids, data, global_ids, entries, queries, row_mask)
+        # Fold the per-slot pools in slot order: slots hold contiguous
+        # shard blocks, and each block was itself folded in shard order, so
+        # the tie precedence is globally (shard, pool rank) — identical to
+        # a serial fold over shards 0..S-1 (tests/test_sharded_search.py).
+        pool_i, pool_d = blocks_i[0], blocks_d[0]
+        for g in range(1, blocks_i.shape[0]):
+            pool_i, pool_d, _ = _merge_topk(
+                pool_i, pool_d, jnp.zeros_like(pool_i, bool),
+                blocks_i[g], blocks_d[g])
+        return pool_i[:, :k], pool_d[:, :k], n_fresh, n_comp, hops
+    return run
+
+
+def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
+                       *, metric: str = "l2", visited_impl: str = "dense",
+                       hash_slots: int | None = None, expand_width: int = 1,
+                       max_hops: int | None = None,
+                       row_mask: jax.Array | None = None,
+                       mesh=None) -> SearchResult:
+    """Scatter-gather k-ANNS over a mesh-partitioned corpus (DESIGN.md §11).
+
+    Each shard of ``sharded_graph`` (graph.partition) searches its own
+    subgraph with the full ``ef`` pool via the unchanged ``beam_search``
+    (so ``metric`` / ``visited_impl`` / ``expand_width`` mean exactly what
+    they mean unsharded); per-shard pools come back in shard-local ids,
+    are restored to global ids, and merge through the same rank merge the
+    in-loop pool update uses (``_merge_topk`` — earlier shards win
+    distance ties, matching a serial fold).  Counter semantics: ``n_fresh``
+    / ``n_computed`` are psum-reduced totals over all shards (the cost of
+    the scatter-gather schedule: every shard pays its own search);
+    ``hops`` is the max over shards (shards run in parallel, so the
+    slowest shard bounds latency).
+
+    With ``num_shards == 1`` the decomposition is trivial and the result
+    is bit-identical to ``knn_search`` from the same entry point (pinned
+    by test); the default mesh places num_shards / n_devices shards per
+    device (distributed.sharding.search_mesh).
+    """
+    if k > ef:
+        raise ValueError(
+            f"k={k} > ef={ef}: the search pool holds only ef candidates, so "
+            f"slots beyond ef would be INVALID padding, silently returning "
+            f"fewer than k real neighbors; raise ef to at least k")
+    if visited_impl not in VISITED_IMPLS:
+        raise ValueError(
+            f"visited_impl {visited_impl!r} not in {VISITED_IMPLS}")
+    if expand_width < 1:
+        raise ValueError(f"expand_width must be >= 1, got {expand_width}")
+    b = queries.shape[0]
+    if mesh is None:
+        # default to the mesh the graph was placed on (graph.partition
+        # commits the arrays along "shard" at build time), so the jit'd
+        # program consumes the resident layout with no per-call reshard;
+        # an explicit mesh must match that placement (jax raises otherwise)
+        sh = getattr(sharded_graph.ids, "sharding", None)
+        if isinstance(sh, NamedSharding) and "shard" in sh.mesh.shape:
+            mesh = sh.mesh
+        else:
+            mesh = sharding_lib.search_mesh(sharded_graph.num_shards)
+    run = _sharded_search_fn(
+        mesh, k=k, ef=ef,
+        max_hops=max_hops or default_max_hops(ef, expand_width),
+        metric=metric, visited_impl=visited_impl, hash_slots=hash_slots,
+        expand_width=expand_width)
+    pool_i, pool_d, n_fresh, n_comp, hops = run(
+        sharded_graph.ids, sharded_graph.data, sharded_graph.global_ids,
+        sharded_graph.entries, queries,
+        jnp.ones((b,), bool) if row_mask is None else row_mask)
+    dummy_d, dummy_has = fresh_cache(b, 1, False)
+    return SearchResult(pool_i, pool_d, n_fresh, n_comp, hops,
+                        dummy_d, dummy_has)

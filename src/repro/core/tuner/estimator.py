@@ -45,6 +45,24 @@ class EstimationRecord:
         return self.build_seconds + self.eval_seconds
 
 
+def resolve_ef_grid(k: int, ef_grid: list[int] | None) -> list[int]:
+    """Default + validate the evaluation ef grid BEFORE any build runs.
+
+    Every ef in the grid must hold at least k candidates (search pools
+    return only ef ids); an undersized ef would otherwise surface as the
+    ``knn_search`` k>ef error in the middle of estimation, with the
+    multi-PG builds for the group already paid for.
+    """
+    ef_grid = ef_grid or [max(10, k), 2 * k, 4 * k, 8 * k]
+    if k > min(ef_grid):
+        raise ValueError(
+            f"k={k} > min(ef_grid)={min(ef_grid)}: every ef in the grid "
+            f"must be >= k (a search pool holds only ef candidates), and "
+            f"this is checked before any PG is built so an undersized grid "
+            f"cannot waste a build; raise the offending ef or lower k")
+    return ef_grid
+
+
 def _eval_one(pg, build_res, gi, data, queries, gt, k, ef_grid, timing_reps,
               visited_impl="dense", expand_width=1):
     metric = build_res.metric     # search under the metric the graph records
@@ -94,7 +112,7 @@ def estimate(
     paper-exact, while W > 1 estimates with the multi-expansion schedule
     serving will actually run (and speeds the measured QPS sweeps up).
     """
-    ef_grid = ef_grid or [max(10, k), 2 * k, 4 * k, 8 * k]
+    ef_grid = resolve_ef_grid(k, ef_grid)
     # Prepare the data ONCE and hand the kernel form down: otherwise every
     # timed cosine search renormalizes the full (n, d) matrix in-jit,
     # deflating cosine QPS relative to l2/ip and skewing the frontiers the

@@ -90,6 +90,7 @@ def tune(
     from repro.core import eval as evallib   # local: avoids cycles
 
     rng = np.random.default_rng(seed)
+    ef_grid = estimator.resolve_ef_grid(k, ef_grid)   # fail fast, not mid-run
     space = pspace.space(pg, scale=scale, metric=metric)
     metric = space.metric          # single source of truth from here on
     gt = evallib.ground_truth(data, queries, k, metric=metric)

@@ -10,6 +10,10 @@ counts not divisible by the TP axis — see EXPERIMENTS.md).
 
 Use ``activate(mesh, rules)`` as a context manager; ``constrain`` is a no-op
 when nothing is active, so all model code runs unmodified on a single CPU.
+
+``search_mesh`` is the serving-search side of this module (DESIGN.md §11):
+a one-axis ``"shard"`` mesh that ``core/search.py`` partitions the corpus
+across — the first consumer of the device mesh outside the training stack.
 """
 from __future__ import annotations
 
@@ -17,7 +21,26 @@ import contextlib
 import threading
 
 import jax
+import numpy as np
 from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+
+def search_mesh(num_shards: int, devices=None) -> Mesh:
+    """One-axis ``("shard",)`` mesh for scatter-gather partitioned search.
+
+    Uses the largest device count that divides ``num_shards`` (each mesh
+    slot then owns num_shards / size whole shards; shard_map blocks must
+    split the stacked shard axis evenly).  On a single device this is a
+    1-way mesh — same program, no cross-device traffic — so the sharded
+    search path runs everywhere and distributes when devices exist
+    (CI forces 4 CPU devices via --xla_force_host_platform_device_count).
+    """
+    if num_shards < 1:
+        raise ValueError(f"num_shards must be >= 1, got {num_shards}")
+    devices = list(devices if devices is not None else jax.devices())
+    size = max(s for s in range(1, min(num_shards, len(devices)) + 1)
+               if num_shards % s == 0)
+    return Mesh(np.asarray(devices[:size]), ("shard",))
 
 # logical name -> mesh axis name (or tuple of axes)
 DEFAULT_RULES: dict[str, object] = {

@@ -39,18 +39,27 @@ class RetrievalKnobs:
     visited_impl: "hash" = O(ef) search state for any context length;
                   "dense" = exact-#dist instrumentation (DESIGN.md §9).
     block_size:   queries per compiled search shape on the batched path.
+    num_shards:   corpus partitions (DESIGN.md §11) — a *build-time* knob
+                  consumed by ``retrieval.build_index``: > 1 splits the
+                  keys over a "shard" mesh axis so no device holds the
+                  whole corpus; searches scatter-gather and merge.  The
+                  default 1 keeps today's single-device path bit-identical.
     """
     top_k: int = 48
     ef: int = 96
     expand_width: int = retrieval_lib.DEFAULT_EXPAND_WIDTH
     visited_impl: str = "hash"
     block_size: int = 64
+    num_shards: int = 1
 
     def __post_init__(self):
         if self.top_k > self.ef:
             raise ValueError(
                 f"top_k={self.top_k} > ef={self.ef}: the search pool holds "
                 f"only ef candidates (see search.knn_search)")
+        if self.num_shards < 1:
+            raise ValueError(
+                f"num_shards must be >= 1, got {self.num_shards}")
 
     def search_kwargs(self) -> dict:
         """kwargs for ``retrieval.retrieval_attention`` (single batch)."""
@@ -61,6 +70,10 @@ class RetrievalKnobs:
     def batched_kwargs(self) -> dict:
         """kwargs for ``retrieval.retrieval_attention_batched``."""
         return dict(self.search_kwargs(), block_size=self.block_size)
+
+    def index_kwargs(self) -> dict:
+        """Build-time kwargs for ``retrieval.build_index``."""
+        return dict(num_shards=self.num_shards)
 
 
 @dataclasses.dataclass

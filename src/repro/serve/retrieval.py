@@ -31,6 +31,17 @@ dominate decode-time latency.  Builders keep the dense, W = 1 defaults
 static bucketed shapes (graph.bucket) so XLA compiles one search per block
 shape and reuses it across requests.
 
+Corpora beyond one device's memory shard (DESIGN.md §11):
+``build_index(..., num_shards=S)`` chunk-partitions the keys and builds an
+independent Vamana subindex per shard; searches then scatter-gather over a
+``"shard"`` mesh axis (``search.sharded_knn_search``) and merge per-shard
+pools with global ids restored.  ``num_shards=1`` (default) is bit-identical
+to the unsharded path.  Scope note: sharding covers the *search-side*
+corpus — prepared keys + graph live once, split across the mesh (no
+replicated ``search_keys`` copy is kept) — while the attention gather
+(``_attend``) still reads replicated ``keys``/``values``; sharding that
+gather is the multi-host follow-up.
+
 Scope: per-(layer, head) indexes over a frozen prefill cache (the common
 RAG/long-doc serving pattern); incremental insertion reuses the same
 builders batch-wise.
@@ -55,36 +66,72 @@ DEFAULT_EXPAND_WIDTH = 4
 
 @dataclasses.dataclass
 class RetrievalIndex:
-    graph_ids: jax.Array       # (n_ctx, M_max) over one head's keys
+    graph_ids: jax.Array | None  # (n_ctx, M_max) over one head's keys
+                                 # (None when the index is sharded)
     keys: jax.Array            # (n_ctx, dh) raw keys (attention logits)
     values: jax.Array          # (n_ctx, dh)
-    search_keys: jax.Array     # (n_ctx, dh) metric-prepared ONCE at build
-    entry: int
+    search_keys: jax.Array | None  # (n_ctx, dh) metric-prepared ONCE at
+                                   # build (None when sharded: the prepared
+                                   # keys live split across shards.data —
+                                   # keeping a replicated copy too would
+                                   # double per-host memory)
+    entry: int                 # global entry id (unsharded search path;
+                               # sharded searches use shards.entries)
     params: vamana_lib.VamanaParams
     metric: str                # public metric name ("ip" | "cosine" | "l2")
+    shards: graph_lib.ShardedGraph | None = None   # mesh-partitioned index
 
     @property
     def kernel(self) -> str:
         """Kernel form searches run under (search_keys are pre-prepared)."""
         return metric_lib.resolve(self.metric).kernel
 
+    @property
+    def num_shards(self) -> int:
+        return 1 if self.shards is None else self.shards.num_shards
+
 
 def build_index(keys: jax.Array, values: jax.Array,
                 params: vamana_lib.VamanaParams, *, metric: str = "ip",
-                seed: int = 0, batch_size: int = 256) -> RetrievalIndex:
+                seed: int = 0, batch_size: int = 256,
+                num_shards: int = 1) -> RetrievalIndex:
     """Index one head's keys under ``metric`` (default: native ip/MIPS).
 
     Any metric preparation (unit-normalization for cosine) happens exactly
     once here; ``search_keys`` stores the prepared matrix so query-time
     never touches the full cache again.
+
+    ``num_shards > 1`` partitions the keys into contiguous chunks and
+    builds an independent Vamana subindex per shard (same ``params``);
+    searches then run scatter-gather over a ``"shard"`` mesh axis
+    (``search.sharded_knn_search``, DESIGN.md §11) so no device ever holds
+    the whole corpus.  The default 1 is bit-identical to the unsharded
+    path — same builder call, same ``knn_search``.
     """
     met = metric_lib.resolve(metric)
     search_keys = met.prepare(keys)
-    res = vamana_lib.build_vamana(search_keys, params, seed=seed,
-                                  batch_size=batch_size, metric=met.kernel)
-    return RetrievalIndex(graph_ids=res.g.ids[0], keys=keys, values=values,
-                          search_keys=search_keys, entry=res.entry,
-                          params=params, metric=met.name)
+    if num_shards == 1:
+        res = vamana_lib.build_vamana(search_keys, params, seed=seed,
+                                      batch_size=batch_size,
+                                      metric=met.kernel)
+        return RetrievalIndex(graph_ids=res.g.ids[0], keys=keys,
+                              values=values, search_keys=search_keys,
+                              entry=res.entry, params=params,
+                              metric=met.name)
+
+    def shard_builder(local):
+        res = vamana_lib.build_vamana(local, params, seed=seed,
+                                      batch_size=batch_size,
+                                      metric=met.kernel)
+        return res.g.ids[0], res.entry
+
+    shards = graph_lib.partition(search_keys, num_shards,
+                                 assignment="chunked", seed=seed,
+                                 build_fn=shard_builder, metric=met.kernel)
+    entry = int(shards.global_ids[0][int(shards.entries[0])])
+    return RetrievalIndex(graph_ids=None, keys=keys, values=values,
+                          search_keys=None, entry=entry,
+                          params=params, metric=met.name, shards=shards)
 
 
 def _attend(idx: RetrievalIndex, q: jax.Array, pool_ids: jax.Array,
@@ -102,6 +149,22 @@ def _attend(idx: RetrievalIndex, q: jax.Array, pool_ids: jax.Array,
     return jnp.einsum("bk,bkd->bd", w, v_sel)
 
 
+def _search_index(idx: RetrievalIndex, qs: jax.Array, top_k: int, ef: int,
+                  visited_impl: str, expand_width: int,
+                  row_mask: jax.Array | None = None
+                  ) -> search_lib.SearchResult:
+    """Route one prepared-query batch to the un- or mesh-sharded search."""
+    if idx.shards is not None:
+        return search_lib.sharded_knn_search(
+            idx.shards, qs, top_k, ef, metric=idx.kernel,
+            visited_impl=visited_impl, expand_width=expand_width,
+            row_mask=row_mask)
+    return search_lib.knn_search(
+        idx.graph_ids, idx.search_keys, qs, top_k, ef, idx.entry,
+        metric=idx.kernel, visited_impl=visited_impl,
+        expand_width=expand_width, row_mask=row_mask)
+
+
 def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
                         ef: int, scale: float | None = None,
                         visited_impl: str = "hash",
@@ -114,14 +177,13 @@ def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
     Search state is O(ef)-memory hash-set based by default (DESIGN.md §9);
     pass ``visited_impl="dense"`` to get the exact-counter bitmap path.
     ``expand_width`` is the per-hop frontier width (DESIGN.md §10) —
-    1 reproduces the paper's sequential schedule exactly.
+    1 reproduces the paper's sequential schedule exactly.  On an index
+    built with ``num_shards > 1`` the search scatter-gathers across the
+    shard mesh (DESIGN.md §11) and returns global key ids either way.
     """
     met = metric_lib.resolve(idx.metric)
     qs = met.prepare(q)            # per-call cost is (B, dh) — keys untouched
-    res = search_lib.knn_search(idx.graph_ids, idx.search_keys, qs,
-                                top_k, ef, idx.entry, metric=met.kernel,
-                                visited_impl=visited_impl,
-                                expand_width=expand_width)
+    res = _search_index(idx, qs, top_k, ef, visited_impl, expand_width)
     return _attend(idx, q, res.pool_ids, scale), res
 
 
@@ -153,11 +215,8 @@ def retrieval_attention_batched(
         nrows = min(bs, B - off)
         qb = jnp.zeros((bs, dh), qs_all.dtype).at[:nrows].set(
             qs_all[off:off + nrows])
-        res = search_lib.knn_search(
-            idx.graph_ids, idx.search_keys, qb, top_k, ef, idx.entry,
-            metric=met.kernel, visited_impl=visited_impl,
-            expand_width=expand_width,
-            row_mask=jnp.arange(bs) < nrows)
+        res = _search_index(idx, qb, top_k, ef, visited_impl, expand_width,
+                            row_mask=jnp.arange(bs) < nrows)
         # accumulate device scalars — no host sync inside the dispatch loop
         pool_ids.append(res.pool_ids[:nrows])
         pool_dist.append(res.pool_dist[:nrows])

@@ -1,3 +1,15 @@
+import os
+
+# Force a multi-device CPU topology BEFORE jax initializes (conftest runs
+# ahead of test-module imports): the sharded-search suite must cross real
+# device boundaries (DESIGN.md §11), and every other test is
+# device-count-agnostic.  Respect an explicit operator setting.
+if "xla_force_host_platform_device_count" not in os.environ.get(
+        "XLA_FLAGS", ""):
+    os.environ["XLA_FLAGS"] = (
+        os.environ.get("XLA_FLAGS", "")
+        + " --xla_force_host_platform_device_count=4").strip()
+
 import numpy as np
 import pytest
 

@@ -1,0 +1,269 @@
+"""Differential search oracle: a pure-NumPy width-W best-first beam search
+that defines the semantics ``search.beam_search`` must reproduce —
+pools (ids AND order, i.e. visit/tie order), #dist counters, and hop
+counts, not just recall.
+
+The oracle mirrors the lockstep schedule exactly for the single-graph
+external-query path (``knn_search``): per hop it expands the W closest
+unexpanded pool entries, dedups candidates by first flat occurrence,
+filters visited/query ids, and merges with the stable pool-first tie rule
+(pool entries outrank equal-distance candidates; tied candidates keep
+flat adjacency order).  Property tests drive it under hypothesis across
+metric × visited_impl × expand_width on small random graphs;
+``hypothesis`` is optional (PR 1 contract): without it each @given test
+degrades to one deterministic example and the suite still collects.
+
+Sensitivity is pinned, not assumed: ``test_oracle_catches_tie_rule_flip``
+seeds the mutation the suite must catch (flipping ``_merge_topk``'s
+pool-wins tie rule) and asserts the parity check fails on it.
+"""
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import search
+from repro.core.graph import INVALID, random_knng_ids
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:                                     # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+    def settings(**kw):
+        return lambda f: f
+
+    class _Just:
+        """Degraded @given: call the test once with each strategy's example."""
+        def __init__(self, example):
+            self.example = example
+
+    class st:   # noqa: N801 - mirrors the hypothesis namespace
+        @staticmethod
+        def integers(lo, hi):
+            return _Just((lo + hi) // 2)
+
+        @staticmethod
+        def sampled_from(options):
+            return _Just(options[len(options) // 2])
+
+    def given(**kwstrats):
+        import functools
+        import inspect
+
+        def deco(f):
+            @functools.wraps(f)
+            def wrapper(*args, **kw):
+                kw.update({k: s.example for k, s in kwstrats.items()})
+                return f(*args, **kw)
+            # hide the strategy-provided params from pytest's fixture
+            # resolution (hypothesis does the same)
+            sig = inspect.signature(f)
+            wrapper.__signature__ = sig.replace(parameters=[
+                p for name, p in sig.parameters.items()
+                if name not in kwstrats])
+            return wrapper
+        return deco
+
+METRICS = ["l2", "ip", "cosine"]
+IMPLS = ["dense", "hash"]
+
+# hypothesis draws static search shapes from these fixed sets so the jit
+# cache is shared across examples (each distinct (ef, W, degree) is one
+# beam_search compile; interpret-mode compiles are the CI-lane cost)
+EF_W = [(8, 1), (16, 3), (8, 5)]
+DEGREES = [4, 8]
+N, B = 64, 8
+
+
+def _np_dist(q, x, kernel):
+    """kernels/ref.py gather_distance_ref numerics, in float32 numpy:
+    l2 = max(sum((x-q)^2), 0); ip = 1 - <q, x>."""
+    q = q.astype(np.float32)
+    x = x.astype(np.float32)
+    if kernel == "ip":
+        return np.float32(1.0) - np.sum(q * x, dtype=np.float32)
+    d = x - q
+    return np.maximum(np.sum(d * d, dtype=np.float32), np.float32(0.0))
+
+
+def oracle_search(adj, data, q, ef, entry, *, metric="l2", expand_width=1,
+                  max_hops=None):
+    """Width-W best-first beam search over one graph, one external query.
+
+    Returns (pool_ids int32[ef], pool_dist f32[ef], n_dist, hops) with the
+    INVALID/inf padding layout of ``knn_search`` pools.
+    """
+    adj = np.asarray(adj)
+    data = np.asarray(data, np.float32)
+    q = np.asarray(q, np.float32)
+    if metric == "cosine":
+        data = data / np.maximum(
+            np.linalg.norm(data, axis=-1, keepdims=True), 1e-12)
+        q = q / np.maximum(np.linalg.norm(q), 1e-12)
+        kernel = "ip"
+    else:
+        kernel = metric
+    ef = int(ef)
+    W = min(int(expand_width), ef)
+    max_hops = max_hops or search.default_max_hops(ef, expand_width)
+
+    # pool: list of [dist, id, expanded], kept sorted (stable), <= ef long
+    pool = [[_np_dist(q, data[entry], kernel), int(entry), False]]
+    visited = {int(entry)}
+    n_dist = 1
+    hops = 0
+    while hops < max_hops:
+        sel = [e for e in pool if not e[2]][:W]
+        if not sel:
+            break
+        cands = []
+        seen_this_hop = set()
+        for e in sel:
+            e[2] = True
+            for v in adj[e[1]]:
+                v = int(v)
+                if v == INVALID or v in seen_this_hop:
+                    continue
+                seen_this_hop.add(v)      # in-hop dup: count/insert once
+                if v in visited:
+                    continue
+                visited.add(v)
+                n_dist += 1
+                cands.append([_np_dist(q, data[v], kernel), v, False])
+        # stable merge, pool entries first (pool wins distance ties; tied
+        # candidates keep flat adjacency order), truncate to ef
+        pool = sorted(pool + cands, key=lambda e: e[0])[:ef]
+        hops += 1
+    ids = np.full(ef, INVALID, np.int32)
+    dist = np.full(ef, np.inf, np.float32)
+    for j, e in enumerate(pool):
+        ids[j] = e[1]
+        dist[j] = e[0]
+    return ids, dist, n_dist, hops
+
+
+def _case(seed, n, degree, quantize=False):
+    r = np.random.default_rng(seed)
+    data = r.normal(size=(n, 8)).astype(np.float32)
+    if quantize:
+        # integer coordinates -> exact float32 distances in BOTH numpy and
+        # XLA regardless of reduction order, plus plenty of genuine ties
+        data = np.round(data * 2.0)
+    adj = np.asarray(random_knng_ids(seed, n, degree))
+    # sprinkle INVALID padding mid-row (the search must skip, not misalign)
+    mask = r.random(adj.shape) < 0.15
+    adj = np.where(mask, INVALID, adj).astype(np.int32)
+    queries = data[r.integers(0, n, B)] + r.normal(
+        size=(B, data.shape[1])).astype(np.float32) * 0.25
+    if quantize:
+        queries = np.round(queries)
+    return data, adj, queries.astype(np.float32)
+
+
+def _assert_search_matches_oracle(data, adj, queries, ef, W, metric, impl,
+                                  k=None):
+    k = k or ef
+    res = search.knn_search(jnp.asarray(adj), jnp.asarray(data),
+                            jnp.asarray(queries), k, ef, 0, metric=metric,
+                            visited_impl=impl, expand_width=W)
+    got_ids = np.asarray(res.pool_ids)
+    got_dist = np.asarray(res.pool_dist)
+    total_dist = 0
+    max_hops = 0
+    for qi in range(queries.shape[0]):
+        ids, dist, nd, hops = oracle_search(
+            adj, data, queries[qi], ef, 0, metric=metric, expand_width=W)
+        np.testing.assert_array_equal(
+            got_ids[qi], ids[:k],
+            err_msg=f"pool ids diverged from oracle (query {qi}, "
+                    f"metric={metric}, impl={impl}, W={W})")
+        np.testing.assert_allclose(got_dist[qi], dist[:k], rtol=1e-5,
+                                   atol=1e-5)
+        total_dist += nd
+        max_hops = max(max_hops, hops)
+    # dense counters are paper-exact; hash upper-bounds only on table
+    # overflow, which auto-sizing precludes at these shapes (DESIGN.md §9)
+    assert int(res.n_computed) == total_dist, (int(res.n_computed),
+                                               total_dist)
+    assert int(res.n_fresh) == total_dist
+    assert int(res.hops) == max_hops, (int(res.hops), max_hops)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("metric", METRICS)
+@settings(max_examples=8, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), ef_w=st.sampled_from(EF_W),
+       degree=st.sampled_from(DEGREES))
+def test_beam_search_matches_oracle(metric, impl, seed, ef_w, degree):
+    ef, W = ef_w
+    data, adj, queries = _case(seed, N, degree)
+    _assert_search_matches_oracle(data, adj, queries, ef, W, metric, impl)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), ef_w=st.sampled_from(EF_W))
+def test_oracle_parity_under_exact_ties(impl, seed, ef_w):
+    """Quantized integer coordinates: every distance is float32-exact in
+    both implementations and heavily tied, so this pins the *order* the
+    tie rules produce (pool-first, then flat candidate order), where
+    continuous data would pin only the values."""
+    ef, W = ef_w
+    data, adj, queries = _case(seed, N, 8, quantize=True)
+    _assert_search_matches_oracle(data, adj, queries, ef, W, "l2", impl)
+
+
+def test_oracle_truncation_matches_k_prefix():
+    """knn_search's k-prefix equals the oracle pool's k-prefix."""
+    data, adj, queries = _case(3, N, 8)
+    _assert_search_matches_oracle(data, adj, queries, 16, 2, "l2", "dense",
+                                  k=5)
+
+
+def flipped_tie_merge(pool_ids, pool_dist, expanded, cand_ids, cand_dist):
+    """The seeded mutation: candidates win distance ties against pool
+    entries (flips _merge_topk's `<` to `<=`)."""
+    ef_max = pool_ids.shape[-1]
+    kx = cand_ids.shape[-1]
+    kc = min(kx, ef_max)
+    order = jnp.argsort(cand_dist, axis=-1)[..., :kc]   # stable, == top_k tie
+    c_dist = jnp.take_along_axis(cand_dist, order, axis=-1)
+    c_ids = jnp.take_along_axis(cand_ids, order, axis=-1)
+    cand_le = c_dist[..., None, :] <= pool_dist[..., :, None]
+    rank_pool = jnp.arange(ef_max) + jnp.sum(cand_le, axis=-1)
+    rr = jnp.arange(ef_max)
+    i_r = jnp.sum(rank_pool[..., None, :] < rr[:, None], axis=-1)
+    i_safe = jnp.minimum(i_r, ef_max - 1)
+    is_pool = jnp.take_along_axis(rank_pool, i_safe, axis=-1) == rr
+    j_safe = jnp.clip(rr - i_r, 0, kc - 1)
+    out_ids = jnp.where(is_pool,
+                        jnp.take_along_axis(pool_ids, i_safe, axis=-1),
+                        jnp.take_along_axis(c_ids, j_safe, axis=-1))
+    out_dist = jnp.where(is_pool,
+                         jnp.take_along_axis(pool_dist, i_safe, axis=-1),
+                         jnp.take_along_axis(c_dist, j_safe, axis=-1))
+    out_exp = jnp.where(is_pool,
+                        jnp.take_along_axis(expanded, i_safe, axis=-1),
+                        False)
+    return out_ids, out_dist, out_exp
+
+
+def test_oracle_catches_tie_rule_flip():
+    """Acceptance gate: the differential suite must FAIL on a seeded
+    mutation of the merge tie rule.  Quantized data guarantees real
+    distance ties, so the flipped rule must reorder some pool."""
+    data, adj, queries = _case(7, N, 8, quantize=True)
+    # sanity: the healthy merge passes on this exact workload
+    _assert_search_matches_oracle(data, adj, queries, 16, 3, "l2", "dense")
+    orig = search._merge_topk
+    search._merge_topk = flipped_tie_merge
+    search.beam_search.clear_cache()
+    try:
+        with pytest.raises(AssertionError, match="diverged from oracle"):
+            _assert_search_matches_oracle(data, adj, queries, 16, 3, "l2",
+                                          "dense")
+    finally:
+        search._merge_topk = orig
+        search.beam_search.clear_cache()

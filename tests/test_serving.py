@@ -102,6 +102,41 @@ def test_retrieval_attention_dense_hash_agree():
                                   np.asarray(rd.pool_ids))
 
 
+def test_sharded_index_serves_and_blocks_consistently():
+    """build_index(num_shards>1): scatter-gather retrieval returns global
+    key ids, approximates exact attention like the unsharded index, and
+    the batched path stays a pure scheduling change (DESIGN.md §11)."""
+    r = np.random.default_rng(6)
+    n, dh, b = 400, 16, 12
+    keys = jnp.asarray(r.normal(size=(n, dh)), jnp.float32)
+    vals = jnp.asarray(r.normal(size=(n, dh)), jnp.float32)
+    q = keys[r.integers(0, n, b)] * 4.0
+    idx = retrieval.build_index(
+        keys, vals, vamana.VamanaParams(L=32, M=12, alpha=1.2),
+        num_shards=4)
+    assert idx.num_shards == 4 and idx.graph_ids is None
+    out, res = retrieval.retrieval_attention(idx, q, top_k=16, ef=32)
+    ids = np.asarray(res.pool_ids)
+    assert ids.min() >= 0 and ids.max() < n          # global, real ids
+    exact = retrieval.exact_attention(keys, vals, q)
+    cos = jnp.sum(out * exact, -1) / (
+        jnp.linalg.norm(out, axis=-1) * jnp.linalg.norm(exact, axis=-1))
+    assert float(jnp.mean(cos)) > 0.97
+    outb, resb = retrieval.retrieval_attention_batched(
+        idx, q, top_k=16, ef=32, block_size=8)
+    np.testing.assert_array_equal(ids, np.asarray(resb.pool_ids))
+    assert int(res.n_computed) == int(resb.n_computed)
+    assert bool(jnp.allclose(out, outb, atol=1e-5))
+
+
+def test_retrieval_knobs_num_shards():
+    from repro.serve.engine import RetrievalKnobs
+    assert RetrievalKnobs().index_kwargs() == {"num_shards": 1}
+    assert RetrievalKnobs(num_shards=4).index_kwargs() == {"num_shards": 4}
+    with pytest.raises(ValueError, match="num_shards"):
+        RetrievalKnobs(num_shards=0)
+
+
 def test_retrieval_index_tunable_by_fastpgt():
     """The serving index is built from the same VamanaParams the tuner
     recommends — integration point of the paper technique."""

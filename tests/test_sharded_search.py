@@ -1,0 +1,263 @@
+"""Mesh-partitioned scatter-gather search (DESIGN.md §11): differential
+parity against the serial decomposition, num_shards=1 bit-identity against
+``knn_search``, counter accounting under psum, uneven remainder shards,
+partitioner invariants, and the n=10k recall bars (slow lane).
+
+CI runs this under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
+(tests/conftest.py forces it for local runs too) so the shard_map path
+actually crosses device boundaries; the same tests pass on one device
+(1-way mesh).  Fast-lane batches stay <= 32 queries so interpret-mode
+kernel dispatch stays cheap.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import eval as evallib
+from repro.core import graph, knng, search
+from repro.core.graph import INVALID, random_knng_ids
+from repro.distributed import sharding as sharding_lib
+
+METRICS = ["l2", "ip", "cosine"]
+
+
+def serial_scatter_gather(sg: graph.ShardedGraph, queries, k, ef, *,
+                          metric="l2", visited_impl="dense",
+                          expand_width=1):
+    """The decomposition ``sharded_knn_search`` distributes, executed as a
+    host-side fold: per-shard ``knn_search`` (full-``ef`` pools), global-id
+    restore, left-to-right ``_merge_topk`` fold in shard order, counters
+    summed / hops maxed.  The mesh path must match this bit-for-bit — that
+    is the differential contract separating "distributed execution" bugs
+    (specs, psum, id restoration, padding) from search-semantics bugs
+    (covered by tests/test_oracle.py)."""
+    pool_i = pool_d = None
+    n_fresh = n_comp = hops = 0
+    for s in range(sg.num_shards):
+        res = search.knn_search(
+            sg.ids[s], sg.data[s], queries, ef, ef, int(sg.entries[s]),
+            metric=metric, visited_impl=visited_impl,
+            expand_width=expand_width)
+        gids = jnp.where(res.pool_ids == INVALID, INVALID,
+                         sg.global_ids[s][jnp.maximum(res.pool_ids, 0)])
+        if pool_i is None:
+            pool_i, pool_d = gids, res.pool_dist
+        else:
+            pool_i, pool_d, _ = search._merge_topk(
+                pool_i, pool_d, jnp.zeros_like(pool_i, bool), gids,
+                res.pool_dist)
+        n_fresh += int(res.n_fresh)
+        n_comp += int(res.n_computed)
+        hops = max(hops, int(res.hops))
+    return pool_i[:, :k], pool_d[:, :k], n_fresh, n_comp, hops
+
+
+def _dataset(n, d=16, b=16, seed=0):
+    r = np.random.default_rng(seed)
+    data = jnp.asarray(r.normal(size=(n, d)), jnp.float32)
+    queries = data[r.integers(0, n, b)] + 0.1 * jnp.asarray(
+        r.normal(size=(b, d)), jnp.float32)
+    return data, queries
+
+
+def _assert_mesh_matches_serial(sg, queries, k, ef, **kw):
+    res = search.sharded_knn_search(sg, queries, k, ef, **kw)
+    ri, rd, nf, nc, hp = serial_scatter_gather(sg, queries, k, ef, **kw)
+    np.testing.assert_array_equal(np.asarray(res.pool_ids), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(res.pool_dist), np.asarray(rd))
+    assert int(res.n_fresh) == nf, "psum'd n_fresh != sum of shard counts"
+    assert int(res.n_computed) == nc
+    assert int(res.hops) == hp
+    return res
+
+
+def test_num_shards_1_bit_identical_to_knn_search(small_dataset):
+    """The acceptance pin: a 1-shard container searched through the mesh
+    path returns byte-identical pools AND counters to the current
+    ``knn_search`` from the same entry point."""
+    data, queries = small_dataset
+    adj, _ = knng.build_knng(data, 12)
+    sg = graph.partition(data, 1, graph_ids=adj)
+    ref = search.knn_search(adj, data, queries, 10, 30,
+                            int(sg.entries[0]))
+    res = search.sharded_knn_search(sg, queries, 10, 30)
+    np.testing.assert_array_equal(np.asarray(res.pool_ids),
+                                  np.asarray(ref.pool_ids))
+    np.testing.assert_array_equal(np.asarray(res.pool_dist),
+                                  np.asarray(ref.pool_dist))
+    assert int(res.n_fresh) == int(ref.n_fresh)
+    assert int(res.n_computed) == int(ref.n_computed)
+    assert int(res.hops) == int(ref.hops)
+
+
+@pytest.mark.parametrize("impl", ["dense", "hash"])
+@pytest.mark.parametrize("num_shards", [2, 4])
+@pytest.mark.parametrize("assignment", ["chunked", "random"])
+def test_mesh_matches_serial_scatter_gather(num_shards, assignment, impl):
+    data, queries = _dataset(600, b=16, seed=num_shards)
+    sg = graph.partition(data, num_shards, assignment=assignment,
+                         degree=10)
+    _assert_mesh_matches_serial(sg, queries, 8, 24, visited_impl=impl)
+
+
+@pytest.mark.parametrize("width", [1, 4])
+def test_mesh_parity_multi_expansion(width):
+    """expand_width semantics survive sharding unchanged."""
+    data, queries = _dataset(600, b=16, seed=3)
+    sg = graph.partition(data, 4, degree=10)
+    _assert_mesh_matches_serial(sg, queries, 8, 24, expand_width=width)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_mesh_parity_metrics(metric):
+    data, queries = _dataset(500, b=16, seed=5)
+    sg = graph.partition(data, 2, degree=10, metric=metric)
+    _assert_mesh_matches_serial(sg, queries, 8, 24, metric=metric)
+
+
+def test_uneven_remainder_shards():
+    """n % num_shards != 0: remainder shards pad; padding rows must never
+    surface (every returned id is a real global id or INVALID tail)."""
+    n = 603
+    data, queries = _dataset(n, b=16, seed=9)
+    sg = graph.partition(data, 4, degree=10)
+    assert sg.shard_rows == 151                      # ceil(603 / 4)
+    assert [int(c) for c in sg.counts] == [151, 151, 151, 150]
+    res = _assert_mesh_matches_serial(sg, queries, 8, 24)
+    ids = np.asarray(res.pool_ids)
+    assert ids.max() < n
+    real = ids[ids != INVALID]
+    assert real.size                                 # found something
+    assert np.all(real >= 0)
+    # k slots fill: with ef=24 per shard there are plenty of candidates
+    assert np.all(ids != INVALID)
+
+
+def test_row_mask_padding_rows_do_no_work():
+    data, queries = _dataset(400, b=8, seed=1)
+    sg = graph.partition(data, 2, degree=10)
+    mask = jnp.zeros(8, bool).at[:3].set(True)
+    res = search.sharded_knn_search(sg, queries, 8, 16, row_mask=mask)
+    assert bool(jnp.all(res.pool_ids[3:] == INVALID))
+    assert bool(jnp.all(res.pool_ids[:3] != INVALID))
+
+
+def test_partition_covers_corpus_exactly_once():
+    data, _ = _dataset(103, b=1, seed=2)
+    for assignment in graph.ASSIGNMENTS:
+        sg = graph.partition(data, 4, assignment=assignment, degree=8)
+        gids = np.asarray(sg.global_ids)
+        real = gids[gids != INVALID]
+        assert sorted(real.tolist()) == list(range(103))
+        # deterministic under seed
+        sg2 = graph.partition(data, 4, assignment=assignment, degree=8)
+        np.testing.assert_array_equal(gids, np.asarray(sg2.global_ids))
+    chunked = graph.shard_assignment(103, 4)
+    assert [p[0] for p in chunked] == [0, 26, 52, 78]   # contiguous runs
+
+
+def test_partition_validates():
+    data, _ = _dataset(10, b=1)
+    with pytest.raises(ValueError, match="num_shards"):
+        graph.partition(data, 0)
+    with pytest.raises(ValueError, match="num_shards"):
+        graph.partition(data, 11)
+    with pytest.raises(ValueError, match="assignment"):
+        graph.partition(data, 2, assignment="hashed")
+    with pytest.raises(ValueError, match="k="):
+        sg = graph.partition(data, 2, degree=4)
+        search.sharded_knn_search(sg, data[:2], 8, 4)
+
+
+def test_induced_partition_drops_only_cross_shard_edges():
+    data, _ = _dataset(80, b=1, seed=4)
+    adj, _ = knng.build_knng(data, 8)
+    sg = graph.partition(data, 2, graph_ids=adj)
+    adj_np = np.asarray(adj)
+    for s in range(2):
+        part = np.asarray(sg.global_ids[s][:int(sg.counts[s])])
+        in_shard = np.isin(adj_np[part], part)
+        local = np.asarray(sg.ids[s][:int(sg.counts[s])])
+        # kept edge count matches the in-shard edge count, and every kept
+        # edge maps back to the original global neighbor
+        assert (local != INVALID).sum() == in_shard.sum()
+        restored = np.where(local == INVALID, INVALID,
+                            part[np.maximum(local, 0)])
+        np.testing.assert_array_equal(
+            restored[in_shard], adj_np[part][in_shard])
+
+
+def test_mesh_with_multiple_shards_per_device_matches_serial():
+    """4 shards on a 2-device mesh: each mesh slot folds its 2 local
+    shards, then slots merge — the tree fold must still equal the serial
+    shard-order fold (pool-wins ties make the reduction order-stable)."""
+    if len(jax.devices()) < 2:
+        pytest.skip("needs >= 2 devices (conftest forces 4)")
+    data, queries = _dataset(600, b=16, seed=8)
+    mesh = sharding_lib.search_mesh(4, devices=jax.devices()[:2])
+    assert mesh.shape["shard"] == 2
+    sg = graph.partition(data, 4, degree=10, mesh=mesh)
+    # search defaults to the placement mesh — no mesh= needed
+    res = search.sharded_knn_search(sg, queries, 8, 24)
+    ri, rd, nf, nc, hp = serial_scatter_gather(sg, queries, 8, 24)
+    np.testing.assert_array_equal(np.asarray(res.pool_ids), np.asarray(ri))
+    np.testing.assert_array_equal(np.asarray(res.pool_dist), np.asarray(rd))
+    assert (int(res.n_fresh), int(res.n_computed), int(res.hops)) == \
+        (nf, nc, hp)
+
+
+def test_search_mesh_adapts_to_device_count():
+    for s in (1, 2, 4):
+        mesh = sharding_lib.search_mesh(s)
+        assert s % mesh.shape["shard"] == 0
+        assert mesh.shape["shard"] <= len(jax.devices())
+    mesh3 = sharding_lib.search_mesh(3, devices=jax.devices()[:2])
+    assert mesh3.shape["shard"] == 1                 # 3 shards, 2 devices
+    with pytest.raises(ValueError, match="num_shards"):
+        sharding_lib.search_mesh(0)
+
+
+# ---------------------------------------------------------------------------
+# n=10k acceptance bars (nightly lane)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.slow
+@pytest.mark.parametrize("metric", METRICS)
+def test_chunked_exact_parity_10k(metric):
+    """Acceptance: shards in {2, 4}, chunked disjoint partition, n=10k —
+    the mesh path's merged pools match the serial decomposition exactly
+    (ids byte-equal, dists byte-equal, counters psum-exact) under forced
+    multi-device CPU, for all three metrics."""
+    n, b, k, ef = 10_000, 32, 10, 32
+    r = np.random.default_rng(17)
+    data = jnp.asarray(r.normal(size=(n, 16)), jnp.float32)
+    queries = data[r.integers(0, n, b)] + 0.1 * jnp.asarray(
+        r.normal(size=(b, 16)), jnp.float32)
+    adj = random_knng_ids(1, n, 16)
+    for num_shards in (2, 4):
+        sg = graph.partition(data, num_shards, assignment="chunked",
+                             graph_ids=adj, metric=metric)
+        _assert_mesh_matches_serial(sg, queries, k, ef, metric=metric)
+
+
+@pytest.mark.slow
+@pytest.mark.parametrize("metric", METRICS)
+def test_random_partition_recall_10k(metric):
+    """Acceptance: random partition at n=10k keeps recall@10 within 0.005
+    of the unsharded search (per-shard exact-KNNG subindexes searched with
+    the full ef each: scatter-gather explores more total candidates)."""
+    n, b, k, ef, deg = 10_000, 32, 10, 64, 16
+    r = np.random.default_rng(23)
+    data = jnp.asarray(r.normal(size=(n, 16)), jnp.float32)
+    queries = data[r.integers(0, n, b)] + 0.1 * jnp.asarray(
+        r.normal(size=(b, 16)), jnp.float32)
+    gt = evallib.ground_truth(data, queries, k, metric=metric)
+    adj, _ = knng.build_knng(data, deg, metric=metric)
+    base = search.knn_search(adj, data, queries, k, ef, 0, metric=metric)
+    rec_base = evallib.recall_at_k(base.pool_ids, gt)
+    sg = graph.partition(data, 4, assignment="random", degree=deg,
+                         metric=metric)
+    res = search.sharded_knn_search(sg, queries, k, ef, metric=metric)
+    rec = evallib.recall_at_k(res.pool_ids, gt)
+    assert rec >= rec_base - 0.005, (rec, rec_base)

@@ -7,6 +7,23 @@ from repro.core.tuner import ehvi, estimator, fastpgt, gp, pareto
 from repro.core.tuner import params as pspace
 
 
+def test_undersized_ef_grid_rejected_before_any_build():
+    """k > min(ef_grid) must fail up front with a clear ValueError, not as
+    a knn_search error mid-estimation with builds already paid for."""
+    r = np.random.default_rng(0)
+    data = r.normal(size=(64, 8)).astype(np.float32)
+    with pytest.raises(ValueError, match=r"min\(ef_grid\)"):
+        estimator.estimate("vamana", data, data[:4], None,
+                           [dict(L=16, M=8, alpha=1.2)], k=10,
+                           ef_grid=[4, 20, 40])
+    with pytest.raises(ValueError, match=r"min\(ef_grid\)"):
+        fastpgt.tune("vamana", data, data[:4], budget=2, batch=1, k=10,
+                     ef_grid=[8])
+    # the defaulted grid always satisfies the bound
+    assert min(estimator.resolve_ef_grid(10, None)) >= 10
+    assert estimator.resolve_ef_grid(3, [16, 32]) == [16, 32]
+
+
 def test_gp_interpolates():
     r = np.random.default_rng(0)
     x = r.random((30, 2))
