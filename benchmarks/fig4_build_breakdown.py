@@ -2,35 +2,52 @@
 
 Paper: Search dominates (HNSW 86.7%, Vamana 86.8%, NSG 49.0% on Gist) —
 the observation motivating ESO.  We report logical #dist shares per phase
-from a single-parameter build of each PG."""
+from a single-parameter build of each PG.  Wall seconds use the PR 5
+interleaved min-of-reps policy (benchmarks/common.py): the three builders
+are being *compared*, so they share timing rounds and report per-builder
+mins — a host-load spike can no longer inflate exactly one builder."""
 from __future__ import annotations
+
+import jax
 
 from benchmarks import common
 from repro.core import hnsw, nsg, vamana
 
 
-def run(dataset_name: str = "sift") -> list[str]:
+def _synced(fn):
+    """Build thunk that blocks on the graph arrays (BuildResult is an
+    opaque leaf to ``jax.block_until_ready``, so the timing helper can't
+    block on it itself)."""
+    def thunk():
+        res = fn()
+        g = res.g
+        jax.block_until_ready(g.ids if hasattr(g, "ids") else g.layer_ids)
+        return res
+    return thunk
+
+
+def run(dataset_name: str = "sift", reps: int = 2) -> list[str]:
     data, _ = common.dataset(dataset_name)
     rows = []
     builds = {
-        "hnsw": lambda: hnsw.build_hnsw(
-            data, hnsw.HNSWParams(efc=48, M=12), batch_size=512),
-        "vamana": lambda: vamana.build_vamana(
+        "hnsw": _synced(lambda: hnsw.build_hnsw(
+            data, hnsw.HNSWParams(efc=48, M=12), batch_size=512)),
+        "vamana": _synced(lambda: vamana.build_vamana(
             data, vamana.VamanaParams(L=48, M=12, alpha=1.2),
-            batch_size=512),
-        "nsg": lambda: nsg.build_nsg(
-            data, nsg.NSGParams(K=16, L=48, M=12), batch_size=512),
+            batch_size=512)),
+        "nsg": _synced(lambda: nsg.build_nsg(
+            data, nsg.NSGParams(K=16, L=48, M=12), batch_size=512)),
     }
     out = {}
-    for pg, fn in builds.items():
-        with common.Timer() as t:
-            res = fn()
+    timed = common.time_interleaved(list(builds.values()), reps=reps)
+    for (pg, _), (seconds, res) in zip(builds.items(), timed):
         c = res.counters
         tot = max(c.total, 1)
-        out[pg] = c.as_dict()
+        out[pg] = dict(c.as_dict(), seconds=seconds,
+                       timing="interleaved-min-of-reps")
         rows.append(common.row(
             f"fig4/{dataset_name}/{pg}",
-            t.seconds * 1e6,
+            seconds * 1e6,
             f"search_pct={100*c.search/tot:.1f}%;"
             f"prune_pct={100*c.prune/tot:.1f}%;"
             f"init_pct={100*c.init/tot:.1f}%"))

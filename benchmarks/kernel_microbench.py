@@ -28,7 +28,6 @@ from __future__ import annotations
 import argparse
 import json
 import os
-import time
 
 import jax
 import jax.numpy as jnp
@@ -46,44 +45,11 @@ BENCH_JSON_QUICK = os.path.join(os.path.dirname(__file__), "..",
                                 "BENCH_search.quick.json")
 
 
-def _time(fn, *args, reps=5):
-    """(seconds_per_call, warmup_result) — min over reps.
-
-    Host wall time on this container is ±80% noisy (background load lands
-    on whole reps); the min of several reps estimates the uncontended cost,
-    where the mean smears contention into the signal.  The warmup result is
-    returned so callers needing outputs don't re-run the function."""
-    out = fn(*args)
-    jax.block_until_ready(out)
-    best = float("inf")
-    for _ in range(reps):
-        t0 = time.perf_counter()
-        jax.block_until_ready(fn(*args))
-        best = min(best, time.perf_counter() - t0)
-    return best, out
-
-
-def _time_interleaved(thunks, reps=5):
-    """Per-thunk (seconds, warmup_result), timed in interleaved rounds.
-
-    Configurations being *compared* must sample host noise together:
-    round r times every config back to back, so a load spike inflates one
-    rep of each instead of every rep of whichever config it straddled
-    (mean-of-reps sequential timing made PR 3's W=1 vs W=4 CPU comparison
-    unstable).  Per-config min over rounds is the reported number — the
-    policy BENCH_search.json records as ``interleaved-min-of-reps``."""
-    outs = []
-    for fn in thunks:                       # warmup/compile, untimed
-        out = fn()
-        jax.block_until_ready(out)
-        outs.append(out)
-    best = [float("inf")] * len(thunks)
-    for _ in range(reps):
-        for i, fn in enumerate(thunks):
-            t0 = time.perf_counter()
-            jax.block_until_ready(fn())
-            best[i] = min(best[i], time.perf_counter() - t0)
-    return list(zip(best, outs))
+# Shared timing policy lives in benchmarks/common.py since the build bench
+# (DESIGN.md §12) adopted it too; these aliases keep this module's call
+# sites and the historical names.
+_time = common.time_min
+_time_interleaved = common.time_interleaved
 
 
 def _corpus_sized_shapes(fn, n: int, *args, **kw) -> list[tuple]:

@@ -140,7 +140,6 @@ def commit_group(
     row_mask,     # bool[b]
     m_limits,     # int32[m] per-graph out-degree limits
     alphas,       # float32[m]
-    counters,     # BuildCounters, mutated in place (prune/prune_base)
     *,
     k_in: int,
     m_max: int,
@@ -148,19 +147,24 @@ def commit_group(
 ):
     """Forward + reverse commit for all m graphs of one insertion batch.
 
-    The scatter_rows -> add_reverse_edges -> counter-update loop every
-    multi-builder runs after multi_prune, factored out so HNSW / Vamana /
-    NSG share one implementation.  Returns the updated (ids, dist) stack.
+    The scatter_rows -> add_reverse_edges loop every multi-builder runs
+    after multi_prune, factored out so HNSW / Vamana / NSG share one
+    implementation.  Pure in its accounting — returns
+    ``(new_ids, new_dist, n_checks)`` where ``n_checks`` is the total
+    reverse-prune dominance-check count as an int32 device scalar (callers
+    log it on a CounterTape; it increments prune AND prune_base since the
+    reverse commit has no EPO sharing) — so the whole step stays traceable
+    inside the fused batch dispatch (DESIGN.md §12).
     """
     new_ids, new_dist = adj_ids, adj_dist
+    n_checks = jnp.int32(0)
     for i, pr in enumerate(pruned):
         ai, ad = scatter_rows(new_ids[i], new_dist[i], src, pr.ids, pr.dist,
                               row_mask)
         rev = add_reverse_edges(
             data, ai, ad, src, pr.ids, pr.dist, row_mask,
             m_limits[i], alphas[i], k_in=k_in, m_max=m_max, metric=metric)
-        counters.prune_base += int(rev.n_checks)
-        counters.prune += int(rev.n_checks)
+        n_checks += rev.n_checks
         new_ids = new_ids.at[i].set(rev.adj_ids)
         new_dist = new_dist.at[i].set(rev.adj_dist)
-    return new_ids, new_dist
+    return new_ids, new_dist, n_checks

@@ -3,12 +3,17 @@
 Counts are *logical* distance computations per the paper's model (DESIGN.md
 §3): ``*_base`` is what independent per-graph builds (no ESO/EPO) would
 compute, the unsuffixed field is what the shared build actually computed.
-Accumulated in Python ints across jitted batch steps (per-step counts are
-int32; totals here are unbounded).
+Totals live in Python ints (unbounded); per-step counts are int32 device
+scalars that builders log on a ``CounterTape`` and sync to the host ONCE at
+the end of the build loop (DESIGN.md §12) — a per-batch ``int(...)`` cast
+would block the host on every dispatched batch.
 """
 from __future__ import annotations
 
 import dataclasses
+
+import jax.numpy as jnp
+import numpy as np
 
 
 @dataclasses.dataclass
@@ -44,3 +49,60 @@ class BuildCounters:
             "connect": self.connect,
             "total_base": self.total_base, "total": self.total,
         }
+
+
+# Per-step counter-row layout shared by the builders and the fused batch
+# step (core/build.py): one int32[4] row per dispatched step.
+TAPE_FIELDS = ("search_base", "search", "prune_base", "prune")
+
+
+def step_row(n_fresh, n_computed, n_prune_base, n_prune) -> jnp.ndarray:
+    """One CounterTape row (int32[4]) from a batch step's device scalars."""
+    return jnp.stack([jnp.asarray(n_fresh, jnp.int32),
+                      jnp.asarray(n_computed, jnp.int32),
+                      jnp.asarray(n_prune_base, jnp.int32),
+                      jnp.asarray(n_prune, jnp.int32)])
+
+
+class CounterTape:
+    """Device-side accumulation of per-step counter increments.
+
+    Build loops used to close every batch with ``int(res.n_fresh)`` casts —
+    four host round-trips per dispatched batch, each blocking the host until
+    the device drained its queue, which serializes dispatch even on the
+    per_batch path.  The tape instead *logs* each step's int32[4] increment
+    row as a device array (async, never blocks) and syncs exactly once:
+    ``drain_into`` stacks the rows, fetches them in one transfer, and sums
+    on the host in int64 (no int32 overflow however long the build ran).
+
+    The fused device-resident pass (core/build.py) writes its rows into a
+    preallocated int32[n_steps, 4] log inside ``lax.fori_loop`` and hands
+    the whole log to ``drain_into`` via ``log_many`` — same sync contract,
+    zero per-batch dispatches.
+    """
+
+    def __init__(self):
+        self._rows: list = []
+
+    def log(self, n_fresh, n_computed, n_prune_base, n_prune) -> None:
+        self._rows.append(step_row(n_fresh, n_computed,
+                                   n_prune_base, n_prune))
+
+    def log_row(self, row) -> None:
+        """Log a prebuilt int32[4] row (e.g. a fused step's output)."""
+        self._rows.append(row)
+
+    def log_many(self, rows) -> None:
+        """Log an int32[k, 4] block (a device-resident pass's whole log)."""
+        self._rows.append(jnp.asarray(rows).reshape(-1, 4))
+
+    def drain_into(self, ctr: BuildCounters) -> None:
+        """ONE host sync: fetch every logged row, add totals into ``ctr``."""
+        if not self._rows:
+            return
+        stacked = jnp.concatenate(
+            [jnp.atleast_2d(r) for r in self._rows], axis=0)
+        totals = np.asarray(stacked).astype(np.int64).sum(axis=0)
+        self._rows = []
+        for name, v in zip(TAPE_FIELDS, totals):
+            setattr(ctr, name, getattr(ctr, name) + int(v))

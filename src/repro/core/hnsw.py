@@ -9,6 +9,12 @@ inserted node is shared across *all* m graphs and *all* layers (Alg. 5 l.7).
 
 Storage: ids int32[n_layers, m, n, M_max] — dense per layer (laptop-scale
 simplicity; upper layers hold ~n/M rows).  alpha = 1 everywhere (HNSW).
+
+``build_impl`` (DESIGN.md §12): "fused" replaces each layer's
+search + mPrune + commit triple with one ``core/build.insert_batch``
+dispatch (the greedy ef=1 descent between layers stays a plain search
+dispatch); "per_batch" keeps the host-driven stages.  Both accumulate
+counters on device (CounterTape) and sync once at the end of the build.
 """
 from __future__ import annotations
 
@@ -18,9 +24,10 @@ import math
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import build as build_lib
 from repro.core import commit, graph, hashset, prune, search
 from repro.core import metric as metric_lib
-from repro.core.counters import BuildCounters
+from repro.core.counters import BuildCounters, CounterTape
 from repro.core.graph import INVALID
 
 
@@ -68,7 +75,9 @@ def build_multi_hnsw(
     metric: str = "l2",
     visited_impl: str = "dense",
     expand_width: int = 1,
+    build_impl: str = "per_batch",
 ) -> HNSWBuildResult:
+    build_impl = build_lib.resolve_build_impl(build_impl)
     met = metric_lib.resolve(metric)
     data = met.prepare(data)      # normalize ONCE for cosine (no-op otherwise)
     kform = met.kernel
@@ -82,7 +91,12 @@ def build_multi_hnsw(
     efc_max = graph.bucket(max(p.efc for p in params), 16)
     M_max = graph.bucket(max(p.M for p in params), 8)
     ctr = BuildCounters()
+    tape = CounterTape()
     hops = max_hops or search.default_max_hops(efc_max)
+    step_kw = dict(ef_max=efc_max, max_hops=hops, share_cache=use_eso,
+                   use_epo=use_epo, metric=kform,
+                   visited_impl=visited_impl,
+                   expand_width=expand_width, k_in=k_in, m_max=M_max)
 
     # Deterministic shared levels; mL = 1/ln(M_ref) with M_ref = max_i M_i.
     m_l = 1.0 / math.log(max(2, M_max))
@@ -134,42 +148,51 @@ def build_multi_hnsw(
                     ef_max=1, max_hops=hops, share_cache=use_eso,
                     metric=kform, visited_impl=visited_impl)
                 cache_d, cache_has = res.cache_d, res.cache_has
-                ctr.search_base += int(res.n_fresh)
-                ctr.search += int(res.n_computed)
+                tape.log(res.n_fresh, res.n_computed, 0, 0)
                 got = res.pool_ids[:, :, 0]
                 next_entry = jnp.where(
                     jnp.array(desc_np)[:, None] & (got != INVALID),
                     got, next_entry)
             if ins_np.any():    # search + mPrune + commit, Alg. 5 l.13-19
                 ins_mask = jnp.array(ins_np)
-                res = search.beam_search(
-                    lids[layer], data, queries, qids, ins_mask,
-                    efc, entry, cache_d, cache_has,
-                    ef_max=efc_max, max_hops=hops, share_cache=use_eso,
-                    metric=kform, visited_impl=visited_impl,
-                    expand_width=expand_width)
-                cache_d, cache_has = res.cache_d, res.cache_has
-                ctr.search_base += int(res.n_fresh)
-                ctr.search += int(res.n_computed)
-                got = res.pool_ids[:, :, 0]
+                if build_impl == "fused":
+                    # ONE dispatch for search + mPrune + commit of this
+                    # layer's inserts (DESIGN.md §12).
+                    nl, nd, row, got, cache_d, cache_has = (
+                        build_lib.insert_batch(
+                            lids[layer], ldist[layer], data, u, ins_mask,
+                            queries, efc, M, alpha1, entry,
+                            cache_d, cache_has, **step_kw))
+                    tape.log_row(row)
+                else:
+                    res = search.beam_search(
+                        lids[layer], data, queries, qids, ins_mask,
+                        efc, entry, cache_d, cache_has,
+                        ef_max=efc_max, max_hops=hops, share_cache=use_eso,
+                        metric=kform, visited_impl=visited_impl,
+                        expand_width=expand_width)
+                    cache_d, cache_has = res.cache_d, res.cache_has
+                    got = res.pool_ids[:, :, 0]
+
+                    cand_ids = jnp.transpose(res.pool_ids, (1, 0, 2))
+                    cand_dist = jnp.transpose(res.pool_dist, (1, 0, 2))
+                    valid = cand_ids != INVALID
+                    pruned, nb, nc = prune.multi_prune(
+                        data, cand_ids, cand_dist, valid, M, alpha1,
+                        m_max=M_max, use_epo=use_epo, metric=kform)
+                    nl, nd, rev_checks = commit.commit_group(
+                        data, lids[layer], ldist[layer], u, pruned,
+                        ins_mask, M, alpha1, k_in=k_in, m_max=M_max,
+                        metric=kform)
+                    tape.log(res.n_fresh, res.n_computed,
+                             nb + rev_checks, nc + rev_checks)
                 next_entry = jnp.where(
                     ins_mask[:, None] & (got != INVALID), got, next_entry)
-
-                cand_ids = jnp.transpose(res.pool_ids, (1, 0, 2))
-                cand_dist = jnp.transpose(res.pool_dist, (1, 0, 2))
-                valid = cand_ids != INVALID
-                pruned, nb, nc = prune.multi_prune(
-                    data, cand_ids, cand_dist, valid, M, alpha1,
-                    m_max=M_max, use_epo=use_epo, metric=kform)
-                ctr.prune_base += int(nb)
-                ctr.prune += int(nc)
-                nl, nd = commit.commit_group(
-                    data, lids[layer], ldist[layer], u, pruned, ins_mask,
-                    M, alpha1, ctr, k_in=k_in, m_max=M_max, metric=kform)
                 lids = lids.at[layer].set(nl)
                 ldist = ldist.at[layer].set(nd)
             entry = next_entry
 
+    tape.drain_into(ctr)          # the build's ONE counter host sync
     g = HNSWGraphs(layer_ids=lids, layer_dist=ldist, levels=levels,
                    entry=ep, top=top)
     return HNSWBuildResult(g=g, counters=ctr, params=params, metric=met.name)

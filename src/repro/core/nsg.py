@@ -9,6 +9,12 @@ pass re-attaches nodes unreachable from the medoid (NSG's spanning step).
 Parameters per graph: (K_i initial out-degree, L_i pool, M_i degree limit).
 The exact KNNG is computed once at K_max and every graph takes a prefix —
 the deterministic shared-initialization strategy (counted once under ESO).
+
+``build_impl`` (DESIGN.md §12): "fused" collapses each batch's
+search + KNNG-row candidate merge + mPrune + commit into one
+``core/build.nsg_insert_batch`` dispatch; "per_batch" keeps the
+host-driven stages.  Both accumulate counters on device (CounterTape)
+and sync once at the end of the main pass.
 """
 from __future__ import annotations
 
@@ -17,9 +23,10 @@ import dataclasses
 import jax.numpy as jnp
 import numpy as np
 
+from repro.core import build as build_lib
 from repro.core import commit, graph, knng, prune, search
 from repro.core import metric as metric_lib
-from repro.core.counters import BuildCounters
+from repro.core.counters import BuildCounters, CounterTape
 from repro.core.graph import INVALID, MultiGraph
 from repro.kernels import ops
 
@@ -58,7 +65,9 @@ def build_multi_nsg(
     metric: str = "l2",
     visited_impl: str = "dense",
     expand_width: int = 1,
+    build_impl: str = "per_batch",
 ) -> NSGBuildResult:
+    build_impl = build_lib.resolve_build_impl(build_impl)
     del seed
     met = metric_lib.resolve(metric)
     data = met.prepare(data)      # normalize ONCE for cosine (no-op otherwise)
@@ -73,7 +82,9 @@ def build_multi_nsg(
     M_max = graph.bucket(max(p.M for p in params), 8)
     K_max = graph.bucket(max(p.K for p in params), 8)
     ctr = BuildCounters()
+    tape = CounterTape()
     hops = max_hops or search.default_max_hops(L_max)
+    K = jnp.array([p.K for p in params], jnp.int32)
 
     # ---- Initialization: shared exact KNNG at K_max, per-graph prefixes ----
     knn_ids, knn_dist = knng.build_knng(data, K_max, metric=kform)
@@ -98,13 +109,25 @@ def build_multi_nsg(
         queries = data[jnp.minimum(u, n - 1)]
         entry = jnp.broadcast_to(jnp.int32(ep), (b, m))
 
+        if build_impl == "fused":
+            # ONE dispatch: search + KNNG-row merge + mPrune + commit
+            # (DESIGN.md §12).  Same statements as below, traced.
+            new_ids, new_dist, row = build_lib.nsg_insert_batch(
+                init_stack, g.ids, g.dist, knn_ids, knn_dist, data, u,
+                row_mask, queries, L, M, alpha1, K, entry,
+                ef_max=L_max, max_hops=hops, share_cache=use_eso,
+                use_epo=use_epo, metric=kform, visited_impl=visited_impl,
+                expand_width=expand_width, k_in=k_in, m_max=M_max,
+                k_max=K_max)
+            g = MultiGraph(ids=new_ids, dist=new_dist)
+            tape.log_row(row)
+            continue
+
         res = search.beam_search(
             init_stack, data, queries, jnp.where(row_mask, u, INVALID),
             row_mask, L, entry, ef_max=L_max, max_hops=hops,
             share_cache=use_eso, metric=kform, visited_impl=visited_impl,
             expand_width=expand_width)
-        ctr.search_base += int(res.n_fresh)
-        ctr.search += int(res.n_computed)
 
         # NSG's prune candidates are the nodes *visited* during search; the
         # pool alone loses u's local KNNG structure.  Merge each node's own
@@ -114,8 +137,7 @@ def build_multi_nsg(
         own_ids = jnp.broadcast_to(knn_ids[u_safe][None],
                                    (m,) + knn_ids[u_safe].shape)
         own_dist = jnp.broadcast_to(knn_dist[u_safe][None], own_ids.shape)
-        kmask = (jnp.arange(K_max)[None, None, :]
-                 < jnp.array([p.K for p in params], jnp.int32)[:, None, None])
+        kmask = (jnp.arange(K_max)[None, None, :] < K[:, None, None])
         own_ids = jnp.where(kmask & row_mask[None, :, None], own_ids, INVALID)
         own_dist = jnp.where(own_ids != INVALID, own_dist, jnp.inf)
         cand_ids = jnp.concatenate(
@@ -136,13 +158,15 @@ def build_multi_nsg(
         pruned, nb, nc = prune.multi_prune(
             data, cand_ids, cand_dist, valid, M, alpha1,
             m_max=M_max, use_epo=use_epo, metric=kform)
-        ctr.prune_base += int(nb)
-        ctr.prune += int(nc)
 
-        new_ids, new_dist = commit.commit_group(
-            data, g.ids, g.dist, u, pruned, row_mask, M, alpha1, ctr,
+        new_ids, new_dist, rev_checks = commit.commit_group(
+            data, g.ids, g.dist, u, pruned, row_mask, M, alpha1,
             k_in=k_in, m_max=M_max, metric=kform)
         g = MultiGraph(ids=new_ids, dist=new_dist)
+        tape.log(res.n_fresh, res.n_computed,
+                 nb + rev_checks, nc + rev_checks)
+
+    tape.drain_into(ctr)          # the main pass's ONE counter host sync
 
     # ---- connectivity repair (NSG spanning step, simplified) ---------------
     for _ in range(repair_iters):

@@ -99,6 +99,7 @@ def estimate(
     metric: str = "l2",
     visited_impl: str = "dense",
     expand_width: int = 1,
+    build_impl: str = "per_batch",
 ) -> EstimationRecord:
     """Estimate the quality of each configuration in ``cfgs``.
 
@@ -111,6 +112,9 @@ def estimate(
     applies to both (DESIGN.md §10); the default 1 keeps estimation
     paper-exact, while W > 1 estimates with the multi-expansion schedule
     serving will actually run (and speeds the measured QPS sweeps up).
+    ``build_impl="fused"`` runs each group's build with single-dispatch
+    batch steps — same graphs, same counters, less dispatch overhead
+    (DESIGN.md §12).
     """
     ef_grid = resolve_ef_grid(k, ef_grid)
     # Prepare the data ONCE and hand the kernel form down: otherwise every
@@ -137,7 +141,8 @@ def estimate(
             use_eso=use_eso and len(group) > 1,
             use_epo=use_epo and len(group) > 1,
             batch_size=build_batch_size, metric=metric,
-            visited_impl=visited_impl, expand_width=expand_width)
+            visited_impl=visited_impl, expand_width=expand_width,
+            build_impl=build_impl)
         t_build += time.perf_counter() - t0
         ctr = ctr.add(res.counters)
         t0 = time.perf_counter()

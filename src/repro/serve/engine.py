@@ -24,6 +24,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.configs.base import ArchConfig
+from repro.core import build as build_lib
 from repro.models import model as M
 from repro.serve import retrieval as retrieval_lib
 
@@ -39,6 +40,10 @@ class RetrievalKnobs:
     visited_impl: "hash" = O(ef) search state for any context length;
                   "dense" = exact-#dist instrumentation (DESIGN.md §9).
     block_size:   queries per compiled search shape on the batched path.
+    build_impl:   index-construction execution strategy (DESIGN.md §12) —
+                  "fused" builds with single-dispatch batch steps
+                  (same graphs up to documented ppm-level FP ties, lower
+                  host overhead), "per_batch" keeps the host-driven stages.
     num_shards:   corpus partitions (DESIGN.md §11) — a *build-time* knob
                   consumed by ``retrieval.build_index``: > 1 splits the
                   keys over a "shard" mesh axis so no device holds the
@@ -50,6 +55,7 @@ class RetrievalKnobs:
     expand_width: int = retrieval_lib.DEFAULT_EXPAND_WIDTH
     visited_impl: str = "hash"
     block_size: int = 64
+    build_impl: str = "per_batch"
     num_shards: int = 1
 
     def __post_init__(self):
@@ -60,6 +66,7 @@ class RetrievalKnobs:
         if self.num_shards < 1:
             raise ValueError(
                 f"num_shards must be >= 1, got {self.num_shards}")
+        build_lib.resolve_build_impl(self.build_impl)   # fail fast, not at build
 
     def search_kwargs(self) -> dict:
         """kwargs for ``retrieval.retrieval_attention`` (single batch)."""
@@ -73,7 +80,7 @@ class RetrievalKnobs:
 
     def index_kwargs(self) -> dict:
         """Build-time kwargs for ``retrieval.build_index``."""
-        return dict(num_shards=self.num_shards)
+        return dict(num_shards=self.num_shards, build_impl=self.build_impl)
 
 
 @dataclasses.dataclass

@@ -94,7 +94,8 @@ class RetrievalIndex:
 def build_index(keys: jax.Array, values: jax.Array,
                 params: vamana_lib.VamanaParams, *, metric: str = "ip",
                 seed: int = 0, batch_size: int = 256,
-                num_shards: int = 1) -> RetrievalIndex:
+                num_shards: int = 1,
+                build_impl: str = "per_batch") -> RetrievalIndex:
     """Index one head's keys under ``metric`` (default: native ip/MIPS).
 
     Any metric preparation (unit-normalization for cosine) happens exactly
@@ -107,13 +108,19 @@ def build_index(keys: jax.Array, values: jax.Array,
     (``search.sharded_knn_search``, DESIGN.md §11) so no device ever holds
     the whole corpus.  The default 1 is bit-identical to the unsharded
     path — same builder call, same ``knn_search``.
+
+    ``build_impl="fused"`` runs the Vamana build's whole insertion pass as
+    one compiled dispatch (DESIGN.md §12) — same graphs up to documented
+    ppm-level FP ties, less host dispatch overhead while prefill indexes
+    are constructed.
     """
     met = metric_lib.resolve(metric)
     search_keys = met.prepare(keys)
     if num_shards == 1:
         res = vamana_lib.build_vamana(search_keys, params, seed=seed,
                                       batch_size=batch_size,
-                                      metric=met.kernel)
+                                      metric=met.kernel,
+                                      build_impl=build_impl)
         return RetrievalIndex(graph_ids=res.g.ids[0], keys=keys,
                               values=values, search_keys=search_keys,
                               entry=res.entry, params=params,
@@ -122,7 +129,8 @@ def build_index(keys: jax.Array, values: jax.Array,
     def shard_builder(local):
         res = vamana_lib.build_vamana(local, params, seed=seed,
                                       batch_size=batch_size,
-                                      metric=met.kernel)
+                                      metric=met.kernel,
+                                      build_impl=build_impl)
         return res.g.ids[0], res.entry
 
     shards = graph_lib.partition(search_keys, num_shards,

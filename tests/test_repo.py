@@ -1,0 +1,32 @@
+"""Repo hygiene (tools/check_repo.py): compiled-Python artifacts must
+never be tracked — .gitignore can't evict a file that was force-added."""
+import importlib.util
+import pathlib
+
+import pytest
+
+_ROOT = pathlib.Path(__file__).resolve().parent.parent
+_spec = importlib.util.spec_from_file_location(
+    "check_repo", _ROOT / "tools" / "check_repo.py")
+check_repo = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(check_repo)
+
+
+@pytest.mark.parametrize("path,bad", [
+    ("src/repro/core/__pycache__/build.cpython-311.pyc", True),
+    ("__pycache__/x.pyc", True),
+    ("a/b/c.pyo", True),
+    ("src/repro/core/build.py", False),
+    ("docs/__pycache__.md", False),          # only real path segments count
+    ("notes/pycache.txt", False),
+])
+def test_is_artifact(path, bad):
+    assert check_repo.is_artifact(path) is bad
+
+
+def test_no_tracked_bytecode():
+    try:
+        bad = check_repo.tracked_artifacts(_ROOT)
+    except Exception as e:                     # no git in the sandbox
+        pytest.skip(f"git ls-files unavailable: {e}")
+    assert bad == [], f"tracked __pycache__/.pyc files: {bad}"

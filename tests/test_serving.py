@@ -131,10 +131,14 @@ def test_sharded_index_serves_and_blocks_consistently():
 
 def test_retrieval_knobs_num_shards():
     from repro.serve.engine import RetrievalKnobs
-    assert RetrievalKnobs().index_kwargs() == {"num_shards": 1}
-    assert RetrievalKnobs(num_shards=4).index_kwargs() == {"num_shards": 4}
+    assert RetrievalKnobs().index_kwargs() == {
+        "num_shards": 1, "build_impl": "per_batch"}
+    assert RetrievalKnobs(num_shards=4, build_impl="fused").index_kwargs() == {
+        "num_shards": 4, "build_impl": "fused"}
     with pytest.raises(ValueError, match="num_shards"):
         RetrievalKnobs(num_shards=0)
+    with pytest.raises(ValueError, match="build_impl"):
+        RetrievalKnobs(build_impl="nope")
 
 
 def test_retrieval_index_tunable_by_fastpgt():

@@ -1,0 +1,48 @@
+#!/usr/bin/env python
+"""Repo-hygiene check: no compiled-Python artifacts may be tracked.
+
+``__pycache__`` directories and ``.pyc``/``.pyo`` bytecode are
+machine-local build products; once committed they churn on every Python
+upgrade and silently bloat diffs.  The .gitignore already excludes them,
+but an ignore rule cannot evict a file that was force-added or tracked
+before the rule existed — this check closes that gap by failing CI (and
+tests/test_repo.py) whenever ``git ls-files`` reports one.
+
+Exits 1 listing every offending tracked path.
+"""
+from __future__ import annotations
+
+import pathlib
+import subprocess
+import sys
+
+ROOT = pathlib.Path(__file__).resolve().parent.parent
+BYTECODE_SUFFIXES = (".pyc", ".pyo")
+
+
+def is_artifact(path: str) -> bool:
+    """True when a repo-relative path is a compiled-Python artifact."""
+    return ("__pycache__" in path.split("/")
+            or path.endswith(BYTECODE_SUFFIXES))
+
+
+def tracked_artifacts(root: pathlib.Path = ROOT) -> list[str]:
+    out = subprocess.run(["git", "ls-files"], cwd=root, check=True,
+                         capture_output=True, text=True).stdout
+    return [p for p in out.splitlines() if is_artifact(p)]
+
+
+def main() -> int:
+    bad = tracked_artifacts()
+    for path in bad:
+        print(f"tracked compiled-Python artifact: {path}", file=sys.stderr)
+    if bad:
+        print(f"{len(bad)} tracked __pycache__/.pyc file(s) — "
+              f"git rm --cached them", file=sys.stderr)
+        return 1
+    print("repo hygiene OK (no tracked __pycache__/.pyc)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
