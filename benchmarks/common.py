@@ -90,7 +90,7 @@ def time_min(fn, *args, reps=5):
     return best, out
 
 
-def time_interleaved(thunks, reps=5):
+def time_interleaved(thunks, reps=5, prime=False):
     """Per-thunk (seconds, warmup_result), timed in interleaved rounds.
 
     Configurations being *compared* must sample host noise together:
@@ -99,7 +99,18 @@ def time_interleaved(thunks, reps=5):
     (mean-of-reps sequential timing made PR 3's W=1 vs W=4 CPU comparison
     unstable).  Per-config min over rounds is the reported number — the
     policy the BENCH_*.json trajectories record as
-    ``interleaved-min-of-reps``."""
+    ``interleaved-min-of-reps``.
+
+    ``prime=True`` runs each thunk once, untimed, immediately before its
+    timed rep.  Interleaving fixes *who* precedes each config — every
+    config inherits the same neighbor's cache/TLB state each round, which
+    at corpus scale is systematically unfair: the routed-search row runs
+    behind the S=4 scatter-gather row's ~500 MB sweep and measured 8%
+    slower than the identical program self-warm, while the plain row's
+    predecessor touches the very arrays it reads.  Priming gives every
+    config its own working set in cache, i.e. steady-state repeated-query
+    cost — the quantity a serving QPS number means — recorded as
+    ``primed-interleaved-min-of-reps``."""
     outs = []
     for fn in thunks:                       # warmup/compile, untimed
         out = fn()
@@ -108,6 +119,8 @@ def time_interleaved(thunks, reps=5):
     best = [float("inf")] * len(thunks)
     for _ in range(reps):
         for i, fn in enumerate(thunks):
+            if prime:
+                jax.block_until_ready(fn())
             t0 = time.perf_counter()
             jax.block_until_ready(fn())
             best[i] = min(best[i], time.perf_counter() - t0)

@@ -5,13 +5,14 @@ path; the Pallas TPU kernels are exercised in interpret mode by tests and
 by the CI smoke lane, not timed here).
 
 The search-scaling bench sweeps n ∈ {10k, 100k, 1M synthetic} × visited
-impls × W ∈ {1, 4}, plus the mesh-partitioned serving profile at
-shards ∈ {1, 4} (DESIGN.md §11), and audits the traced jaxpr: in hash mode
-(and in the sharded path at S > 1) no intermediate array may carry a
-corpus-sized dimension — i.e. no (b, n) / (b, m, n) state is ever
-materialized — which is the property that makes million-key serving fit
-in memory.  Timing is interleaved min-of-reps (host wall time here is
-±80% noisy; see _time_interleaved).
+impls × W ∈ {1, 4}, the mesh-partitioned serving profile at
+shards ∈ {1, 4} (DESIGN.md §11), and the query-routed sweep S=4 ×
+p ∈ {1, 2} over a kmeans partition (DESIGN.md §13), and audits the traced
+jaxpr: in hash mode (and in the sharded path at S > 1) no intermediate
+array may carry a corpus-sized dimension — i.e. no (b, n) / (b, m, n)
+state is ever materialized — which is the property that makes million-key
+serving fit in memory.  Timing is interleaved min-of-reps (host wall time
+here is ±80% noisy; see _time_interleaved).
 
 Every run also writes ``BENCH_search.json`` at the repo root (QPS, hops,
 #dist, peak search-state bytes per config) so the serving-perf trajectory
@@ -26,6 +27,7 @@ regressions fail fast.
 from __future__ import annotations
 
 import argparse
+import functools
 import json
 import os
 
@@ -84,40 +86,59 @@ def _corpus_sized_shapes(fn, n: int, *args, **kw) -> list[tuple]:
 
 
 def search_scaling_rows(sizes=(10_000, 100_000, 1_000_000), *,
-                        widths=(1, 4), shard_counts=(1, 4), reps=5
+                        widths=(1, 4), shard_counts=(1, 4),
+                        routed_ps=(1, 2), reps=5
                         ) -> tuple[list[str], list[dict]]:
     """Search memory/QPS scaling: (dense | hash visited state) × width W,
-    plus the mesh-partitioned serving profile at shards ∈ {1, 4}
-    (DESIGN.md §11 — the S=1 row isolates shard_map overhead vs the plain
-    path; on a 1-device host the mesh is 1-way, with 4 forced host devices
-    the same rows measure real scatter-gather).
+    the mesh-partitioned serving profile at shards ∈ {1, 4} (DESIGN.md
+    §11 — the S=1 row isolates shard_map overhead vs the plain path), and
+    the query-routed sweep S=4 × p ∈ {1, 2} over a kmeans partition
+    (DESIGN.md §13 — the configuration that turns sharding from a capacity
+    win into a throughput win; on this host it takes the fused flat-graph
+    program, on an S-device mesh the same call routes per device).
 
-    Synthetic corpora (random data + random regular graph — graph quality
-    is irrelevant to the memory/time profile being measured).  Reports QPS,
-    hop count, #dist, and the analytic peak search-state bytes per query
-    batch (visited + V_delta — the quantity DESIGN.md §9 tabulates;
-    process RSS is a lifetime high-water mark and would misattribute
-    earlier configs' peaks, so it is deliberately not reported per row).
-    All configs of one corpus size are timed in interleaved min-of-reps
-    rounds (``_time_interleaved``) so host-load spikes don't bias the
-    cross-config comparison.  Returns (csv rows, json records); the
-    hash/ef=32 configs are the serving profile the PR-over-PR trajectory
-    in BENCH_search.json tracks.
+    Synthetic corpora: an 8-blob Gaussian mixture (unit spread, the regime
+    where centroid routing is meaningful — pure isotropic noise spreads
+    every query's neighbors over all shards and no router can help) with
+    random regular graphs (graph *quality* is irrelevant to the memory/
+    time profile being measured; the recall-preservation bar for routing
+    on real built graphs is tests/test_sharded_search.py's n=10k slow
+    test).  Reports QPS, hop count, #dist, the analytic peak search-state
+    bytes per query batch (visited + V_delta — the quantity DESIGN.md §9
+    tabulates; process RSS is a lifetime high-water mark and would
+    misattribute earlier configs' peaks, so it is deliberately not
+    reported per row), and recall@k against exact ground truth on a wider
+    64-query probe batch (8 timing queries × k would quantize recall at
+    1/80 — coarser than the 0.01 routed-vs-unsharded comparison this
+    column exists to record).  All configs of one corpus size are timed in
+    interleaved min-of-reps rounds (``_time_interleaved``) so host-load
+    spikes don't bias the cross-config comparison.  Returns (csv rows,
+    json records); the hash/ef=32 configs are the serving profile the
+    PR-over-PR trajectory in BENCH_search.json tracks.
     """
+    from repro.core import eval as evallib
+
     rows: list[str] = []
     records: list[dict] = []
-    b, d, deg, k, ef = 8, 32, 16, 10, 32
+    b, bq, d, deg, k, ef = 8, 64, 32, 16, 10, 32
+    n_blobs = 8
     r = np.random.default_rng(0)
+    centers = r.normal(size=(n_blobs, d)) * 3.0
     for n in sizes:
-        data = jnp.asarray(r.normal(size=(n, d)), jnp.float32)
+        data = jnp.asarray(
+            centers[r.integers(0, n_blobs, n)] + r.normal(size=(n, d)),
+            jnp.float32)
         adj = graph.random_knng_ids(0, n, deg)[None]       # (1, n, deg)
         queries = data[:b] + 0.1 * jnp.asarray(
             r.normal(size=(b, d)), jnp.float32)
+        rq = data[r.integers(0, n, bq)] + 0.1 * jnp.asarray(
+            r.normal(size=(bq, d)), jnp.float32)           # recall probe
+        gt = evallib.ground_truth(data, rq, k)
         cfgs: list[dict] = []
         for impl in ("dense", "hash"):
             for w in widths:
-                def f(impl=impl, w=w):
-                    return search.knn_search(adj, data, queries, k, ef, 0,
+                def f(impl=impl, w=w, q=queries):
+                    return search.knn_search(adj, data, q, k, ef, 0,
                                              visited_impl=impl,
                                              expand_width=w)
                 linear = _corpus_sized_shapes(f, n)
@@ -134,18 +155,20 @@ def search_scaling_rows(sizes=(10_000, 100_000, 1_000_000), *,
                     state_bytes = b * n               # visited bool[b, 1, n]
                 cfgs.append(dict(
                     name=f"search_scaling/{impl}/W={w}/n={n}", fn=f,
+                    recall_fn=functools.partial(f, q=rq),
                     rec=dict(path="plain", n=n, impl=impl, expand_width=w,
                              num_shards=1, ef=ef, k=k, batch=b, degree=deg,
                              state_bytes=state_bytes)))
+
+        def shard_graph(local):
+            return graph.random_knng_ids(0, local.shape[0], deg), 0
+
         for s in shard_counts:
-            def shard_graph(local):
-                return graph.random_knng_ids(0, local.shape[0], deg), 0
             sg = graph.partition(data, s, build_fn=shard_graph)
 
-            def f(sg=sg):
+            def f(sg=sg, q=queries):
                 return search.sharded_knn_search(
-                    sg, queries, k, ef, visited_impl="hash",
-                    expand_width=4)
+                    sg, q, k, ef, visited_impl="hash", expand_width=4)
             if s > 1:
                 linear = _corpus_sized_shapes(f, n)
                 assert not linear, (
@@ -157,19 +180,45 @@ def search_scaling_rows(sizes=(10_000, 100_000, 1_000_000), *,
             # hash/W=4 row (same config keys, different execution path)
             cfgs.append(dict(
                 name=f"search_scaling/sharded/S={s}/W=4/n={n}", fn=f,
+                recall_fn=functools.partial(f, q=rq),
                 rec=dict(path="sharded", n=n, impl="hash", expand_width=4,
                          num_shards=s, ef=ef, k=k, batch=b, degree=deg,
                          state_bytes=b * slots * 4 * s)))
-        timed = _time_interleaved([c["fn"] for c in cfgs], reps=reps)
+        sr = max(shard_counts)
+        sgk = graph.partition(data, sr, build_fn=shard_graph,
+                              assignment="kmeans")
+        slots = hashset.auto_slots(search.default_max_hops(ef, 4), 4 * deg)
+        for p in routed_ps:
+            def f(p=p, q=queries):
+                return search.sharded_knn_search(
+                    sgk, q, k, ef, visited_impl="hash", expand_width=4,
+                    routed_shards=p)
+            # no jaxpr audit here: the fused routed program views the
+            # stacked shard arrays as flat (aliasing reshapes the audit
+            # would flag as corpus-sized); the per-device residency claim
+            # belongs to the mesh path, which CI's multi-device lane runs.
+            cfgs.append(dict(
+                name=f"search_scaling/routed/S={sr}/p={p}/n={n}", fn=f,
+                recall_fn=functools.partial(f, q=rq),
+                rec=dict(path="routed", n=n, impl="hash", expand_width=4,
+                         num_shards=sr, routed_shards=p, assign="kmeans",
+                         ef=ef, k=k, batch=b, degree=deg,
+                         state_bytes=b * p * slots * 4)))
+        timed = _time_interleaved([c["fn"] for c in cfgs], reps=reps,
+                                  prime=True)
         for cfg, (sec, res) in zip(cfgs, timed):
+            rres = cfg["recall_fn"]()
+            recall = round(evallib.recall_at_k(rres.pool_ids[:, :k], gt), 4)
             rec = dict(cfg["rec"], qps=round(b / sec, 1),
                        us_per_batch=round(sec * 1e6, 1),
-                       hops=int(res.hops), n_dist=int(res.n_computed))
+                       hops=int(res.hops), n_dist=int(res.n_computed),
+                       recall=recall)
             records.append(rec)
             rows.append(common.row(
                 cfg["name"], sec * 1e6,
                 f"qps={rec['qps']} hops={rec['hops']} "
-                f"ndist={rec['n_dist']} state_bytes={rec['state_bytes']}"))
+                f"ndist={rec['n_dist']} recall={recall} "
+                f"state_bytes={rec['state_bytes']}"))
     return rows, records
 
 
@@ -183,8 +232,18 @@ def write_bench_json(records: list[dict], *, quick: bool = False) -> None:
         "bench": "search_scaling",
         "contract": "serving config = hash/ef=32; compare qps across PRs. "
                     "Rows before PR 5 were mean-of-reps; qps is not "
-                    "comparable across that boundary",
-        "timing": {"policy": "interleaved-min-of-reps",
+                    "comparable across that boundary. PR 7 switched the "
+                    "corpus from isotropic noise to an 8-blob mixture "
+                    "(routing regime) and added the recall column — "
+                    "another qps-comparability boundary. recall is "
+                    "measured on random regular graphs (near 0 by design "
+                    "at large n); its job is the routed-vs-unsharded "
+                    "delta, the absolute bar lives in the slow tests. "
+                    "PR 7 also primed the timing rounds (see "
+                    "common.time_interleaved): qps is steady-state "
+                    "repeated-query cost, not follow-the-neighbor cache "
+                    "state",
+        "timing": {"policy": "primed-interleaved-min-of-reps",
                    "noise": "host wall time is +/-80% under load; per-n "
                             "config sets share timing rounds and report "
                             "the per-config min"},

@@ -8,6 +8,7 @@ as ``float32`` with ``+inf`` padding so top-k merges need no branching.
 from __future__ import annotations
 
 import dataclasses
+import functools
 from typing import Any
 
 import jax
@@ -137,7 +138,7 @@ def bucket(x: int, mult: int) -> int:
 
 
 # ---------------------------------------------------------------------------
-# Corpus sharding (DESIGN.md §11).
+# Corpus sharding (DESIGN.md §11) and query routing (DESIGN.md §13).
 #
 # Scatter-gather partitioned search splits the corpus into ``num_shards``
 # disjoint node sets; each shard holds its own vectors and a subgraph over
@@ -146,9 +147,28 @@ def bucket(x: int, mult: int) -> int:
 # common row count so they stack on a leading axis that a "shard" mesh axis
 # can partition (core/search.py sharded_knn_search) — the first place the
 # corpus-resident arrays stop being replicated across devices.
+#
+# Every partition also records a per-shard *centroid* (the mean of the
+# shard's metric-prepared member vectors): the routing statistic
+# ``search.sharded_knn_search(routed_shards=p)`` scores queries against to
+# search only the p most promising shards (DESIGN.md §13).  The "kmeans"
+# assignment optimizes exactly that statistic — mini-batch k-means with
+# jitted Lloyd steps, balanced by capacity-constrained rounding — while
+# "chunked"/"random" keep their placement and merely report their means.
 # ---------------------------------------------------------------------------
 
-ASSIGNMENTS = ("chunked", "random")
+ASSIGNMENTS = ("chunked", "random", "kmeans")
+
+# mini-batch k-means schedule (Sculley-style per-centroid learning rates);
+# build-time only, so the defaults favor determinism and partition quality
+KMEANS_BATCH = 4096
+KMEANS_EPOCHS = 8
+# capacity slack ε: shards may hold up to ⌈n/S · (1+ε)⌉ rows.  A hard
+# ⌈n/S⌉ cap forcibly spills cluster-boundary points into geometrically
+# wrong shards, and each misplaced point is a routing recall hole (its
+# neighborhood stays behind); 5% slack removes most forced spills while
+# keeping shards balanced enough for the mesh (DESIGN.md §13).
+KMEANS_CAP_SLACK = 0.05
 
 
 @jax.tree_util.register_dataclass
@@ -164,12 +184,31 @@ class ShardedGraph:
       global_ids: int32[S, n_s] local row -> global id (INVALID on padding).
       entries:    int32[S] shard-local search entry point per shard.
       counts:     int32[S] real (non-padding) rows per shard.
+      centroids:  float32[S, d] routing statistic in metric-prepared space
+                  — ``search.sharded_knn_search(routed_shards=p)`` scores
+                  queries against it (DESIGN.md §13).  Lloyd centroids for
+                  kmeans partitions (the statistic the placement
+                  optimized), member means otherwise.  None on
+                  ShardedGraphs constructed before routing existed
+                  (routing then raises).
+      flat_ids:   int32[S * n_s, Mx] the same per-shard adjacency in
+                  *stacked-flat* id space (shard s row i lives at
+                  s * n_s + i; INVALID padding preserved).  The graph is
+                  block-diagonal — no row points outside its shard — so a
+                  single beam search over it explores exactly one shard
+                  per query row.  Precomputed here because the fused
+                  routed path (DESIGN.md §13) would otherwise pay an
+                  O(n·Mx) offset materialization per search call; None on
+                  pre-routing ShardedGraphs (the routed search then falls
+                  back to the shard_map path).
     """
     ids: jax.Array
     data: jax.Array
     global_ids: jax.Array
     entries: jax.Array
     counts: jax.Array
+    centroids: jax.Array | None = None
+    flat_ids: jax.Array | None = None
 
     @property
     def num_shards(self) -> int:
@@ -184,15 +223,137 @@ class ShardedGraph:
         return self.ids.shape[2]
 
 
+@functools.partial(
+    jax.jit, static_argnames=("num_shards", "kernel", "batch", "epochs"))
+def _kmeans_fit(x: jax.Array, key: jax.Array, *, num_shards: int,
+                kernel: str, batch: int, epochs: int) -> jax.Array:
+    """Mini-batch k-means centroids float32[S, d], one compiled dispatch.
+
+    Sculley-style: each Lloyd step assigns one mini-batch to its nearest
+    centroid under ``kernel`` distance and moves centroids by the
+    count-weighted running mean (per-centroid learning rate 1/seen_count),
+    so early batches move centroids fast and late batches anneal.  Each
+    epoch re-shuffles via ``fold_in(key, epoch)``; the ragged tail of a
+    shuffle is dropped to keep every batch the same static shape.  Pure
+    function of (x, key) — partition determinism inherits from here.
+    """
+    n = x.shape[0]
+    cents = x[jax.random.choice(key, n, (num_shards,), replace=False)]
+    counts = jnp.ones((num_shards,), jnp.float32)
+    nb = max(n // batch, 1)
+
+    def batch_step(carry, ids):
+        cents, counts = carry
+        xb = x[ids]                                              # (batch, d)
+        d = metric_lib.kernel_distance(xb[:, None, :], cents[None, :, :],
+                                       kernel)                   # (batch, S)
+        a = jnp.argmin(d, axis=-1)
+        cnt = jax.ops.segment_sum(jnp.ones_like(a, jnp.float32), a,
+                                  num_segments=num_shards)
+        sx = jax.ops.segment_sum(xb, a, num_segments=num_shards)  # (S, d)
+        counts = counts + cnt
+        cents = cents + (sx - cnt[:, None] * cents) / counts[:, None]
+        return (cents, counts), None
+
+    def epoch(e, carry):
+        perm = jax.random.permutation(jax.random.fold_in(key, e), n)
+        carry, _ = jax.lax.scan(batch_step, carry,
+                                perm[:nb * batch].reshape(nb, batch))
+        return carry
+
+    cents, _ = jax.lax.fori_loop(0, epochs, epoch, (cents, counts))
+    return cents
+
+
+def _capacity_round(dist, cap: int):
+    """Round a soft k-means assignment to a ≤ ``cap``-per-shard hard one.
+
+    Deterministic host-side spill rounds over ``dist`` float[n, S]:
+    every point starts at its argmin column; while some shard exceeds
+    ``cap``, that shard keeps its ``cap`` closest movable members (stable
+    sort; forced members — rows with only one finite column left — always
+    stay) and spills the rest, striking the spilled (row, col) entries to
+    +inf so a point never bounces back.  Each productive round strikes
+    ≥ 1 entry of the finite n×S budget, so the loop terminates.  Shards
+    left empty (duplicate centroids can starve one) are repaired by
+    moving the closest point under the ORIGINAL distances from a donor
+    shard that keeps ≥ 1 member.  Returns int assignment[n].
+    """
+    import numpy as np
+    n, num_shards = dist.shape
+    orig = np.asarray(dist, np.float64)
+    d = orig.copy()
+    assign = np.argmin(d, axis=1)
+    while True:
+        counts = np.bincount(assign, minlength=num_shards)
+        over = np.flatnonzero(counts > cap)
+        if over.size == 0:
+            break
+        moved = False
+        for s in over:
+            members = np.flatnonzero(assign == s)
+            if members.size <= cap:       # earlier spill this round shrank it
+                continue
+            movable = members[np.isfinite(d[members]).sum(axis=1) > 1]
+            keep = max(cap - (members.size - movable.size), 0)
+            order = np.argsort(d[movable, s], kind="stable")
+            spill = movable[order[keep:]]
+            if spill.size == 0:           # all forced: accept the overflow
+                continue
+            moved = True
+            d[spill, s] = np.inf
+            assign[spill] = np.argmin(d[spill], axis=1)
+        if not moved:
+            break
+    counts = np.bincount(assign, minlength=num_shards)
+    for s in np.flatnonzero(counts == 0):
+        for i in np.argsort(orig[:, s], kind="stable"):
+            if counts[assign[i]] > 1:
+                counts[assign[i]] -= 1
+                assign[i] = s
+                counts[s] += 1
+                break
+    return assign
+
+
+def _kmeans_parts(n: int, num_shards: int, data, metric: str, seed: int):
+    """(per-shard global-id arrays, Lloyd centroids f32[S, d]) for "kmeans".
+
+    The centroids returned are the CLUSTERING MODEL's, not the rounded
+    members' means: capacity rounding spills boundary points, and scoring
+    queries against post-spill member means ranks shards differently from
+    the statistic the placement optimized — measured as routing recall
+    holes on cluster boundaries (DESIGN.md §13).
+    """
+    import numpy as np
+    met = metric_lib.resolve(metric)
+    x = met.prepare(jnp.asarray(data, jnp.float32))
+    cents = _kmeans_fit(
+        x, jax.random.PRNGKey(seed ^ 0xC3A7), num_shards=num_shards,
+        kernel=met.kernel, batch=min(KMEANS_BATCH, n), epochs=KMEANS_EPOCHS)
+    d = metric_lib.kernel_distance(x[:, None, :], cents[None, :, :],
+                                   met.kernel)
+    cap = int(np.ceil(n / num_shards * (1.0 + KMEANS_CAP_SLACK)))
+    assign = _capacity_round(np.asarray(d), cap)
+    return [np.flatnonzero(assign == s).astype(np.int32)
+            for s in range(num_shards)], cents
+
+
 def shard_assignment(n: int, num_shards: int, *, assignment: str = "chunked",
-                     seed: int = 0) -> list:
+                     seed: int = 0, data: jax.Array | None = None,
+                     metric: str = "l2") -> list:
     """Global-id arrays per shard (ascending within each shard).
 
     "chunked" splits [0, n) into contiguous runs (np.array_split balance:
     the first n % S shards get one extra row); "random" deterministically
     permutes ids first (pure function of ``seed`` — the deterministic
     random strategy of §IV-C applied to placement), then chunks the
-    permutation.  Every id lands in exactly one shard.
+    permutation.  "kmeans" (DESIGN.md §13) clusters ``data`` (required)
+    with mini-batch k-means under ``metric`` and balances the assignment
+    by capacity-constrained rounding (cap = ⌈n/S · (1+ε)⌉,
+    ε = KMEANS_CAP_SLACK), so routed searches can skip shards without
+    any shard hoarding the corpus.  Every id lands in exactly one shard;
+    every path is deterministic in ``seed``.
     """
     import numpy as np
     if assignment not in ASSIGNMENTS:
@@ -201,6 +362,12 @@ def shard_assignment(n: int, num_shards: int, *, assignment: str = "chunked",
         raise ValueError(
             f"num_shards={num_shards} must be in [1, n={n}]: an empty shard "
             f"has no entry point")
+    if assignment == "kmeans":
+        if data is None:
+            raise ValueError(
+                "assignment='kmeans' clusters the corpus vectors: pass "
+                "data= (the other assignments are data-independent)")
+        return _kmeans_parts(n, num_shards, data, metric, seed)[0]
     ids = np.arange(n, dtype=np.int32)
     if assignment == "random":
         ids = np.random.default_rng(seed).permutation(ids)
@@ -226,7 +393,10 @@ def partition(data: jax.Array, num_shards: int, *,
       * neither: exact KNNG of ``degree`` per shard (knng.build_knng) —
         the quality default at container scale.
     Entry points come from ``build_fn`` when given, else the shard-local
-    medoid under ``metric``.
+    medoid under ``metric``.  ``assignment`` picks the placement
+    (shard_assignment; "kmeans" clusters ``data`` under ``metric``), and
+    every mode stores per-shard centroids for query routing (DESIGN.md
+    §13).
 
     The result is placed onto ``mesh`` (default: the ``"shard"`` mesh
     ``distributed.sharding.search_mesh(num_shards)``) with every array
@@ -247,7 +417,24 @@ def partition(data: jax.Array, num_shards: int, *,
 
     data = jnp.asarray(data)
     n = data.shape[0]
-    parts = shard_assignment(n, num_shards, assignment=assignment, seed=seed)
+    # Routing statistic per assignment mode (DESIGN.md §13): kmeans shards
+    # get the Lloyd centroid their placement optimized (NOT the post-
+    # rounding member mean — see _kmeans_parts); chunked/random report
+    # their member means (routing over them is legal, just geometrically
+    # blind).
+    if assignment == "kmeans":
+        if not 1 <= num_shards <= n:     # mirror shard_assignment's guard
+            raise ValueError(
+                f"num_shards={num_shards} must be in [1, n={n}]: an empty "
+                f"shard has no entry point")
+        parts, cents = _kmeans_parts(n, num_shards, data, metric, seed)
+    else:
+        parts = shard_assignment(n, num_shards, assignment=assignment,
+                                 seed=seed)
+        prepared = metric_lib.resolve(metric).prepare(data)
+        cents = jnp.stack([jnp.mean(prepared[jnp.asarray(part)], axis=0)
+                           for part in parts])
+    cents = jnp.asarray(cents, jnp.float32)
     n_s = max(len(p) for p in parts)
     all_ids, all_data, all_gids, entries, counts = [], [], [], [], []
     mx = 0
@@ -285,9 +472,16 @@ def partition(data: jax.Array, num_shards: int, *,
     gids = jnp.stack([
         jnp.pad(g, (0, n_s - g.shape[0]), constant_values=INVALID)
         for g in all_gids])
+    # Stacked-flat adjacency for the fused routed path (DESIGN.md §13):
+    # offset each shard's local ids into the concatenated row space once at
+    # build time (INVALID padding stays INVALID, so padded rows stay
+    # unreachable and the flat graph stays block-diagonal).
+    offs = (jnp.arange(len(parts), dtype=jnp.int32) * n_s)[:, None, None]
+    flat = jnp.where(ids >= 0, ids + offs, INVALID).reshape(-1, mx)
     sg = ShardedGraph(ids=ids, data=dat, global_ids=gids,
                       entries=jnp.asarray(entries, jnp.int32),
-                      counts=jnp.asarray(counts, jnp.int32))
+                      counts=jnp.asarray(counts, jnp.int32),
+                      centroids=cents, flat_ids=flat)
     mesh = mesh or sharding_lib.search_mesh(num_shards)
     return jax.device_put(sg, NamedSharding(mesh, PartitionSpec("shard")))
 

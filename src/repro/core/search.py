@@ -54,6 +54,11 @@ runs this same loop per shard of a ``graph.ShardedGraph`` under a
 ``shard_map`` over the ``"shard"`` mesh axis, restores global ids, and
 merges per-shard pools with ``_merge_topk`` — scatter-gather partitioned
 search with the single-shard case bit-identical to ``knn_search``.
+``routed_shards=p`` (DESIGN.md §13) turns the scatter-gather into a
+routed search: each query scores the partition centroids with the same
+metric kernels, searches only its top-p shards (``route_topk``), and the
+per-shard query blocks are compacted host-side into static bucketed
+shapes so every device only searches queries routed to it.
 """
 from __future__ import annotations
 
@@ -66,6 +71,7 @@ import jax.numpy as jnp
 from jax.experimental.shard_map import shard_map
 from jax.sharding import NamedSharding, PartitionSpec as P
 
+from repro.core import graph as graph_lib
 from repro.core import hashset
 from repro.core import metric as metric_lib
 from repro.core.graph import INVALID
@@ -539,11 +545,191 @@ def _sharded_search_fn(mesh, *, k, ef, max_hops, metric, visited_impl,
     return run
 
 
+# ---------------------------------------------------------------------------
+# Query-routed sharded search (DESIGN.md §13).
+# ---------------------------------------------------------------------------
+
+# Per-shard query blocks pad up to a multiple of this (graph.bucket) so the
+# set of compiled routed-search shapes stays small across batches.  Tighter
+# than the serving block multiple of 16: routed per-shard counts are b·p/S
+# in expectation, and padding rows still pay full lockstep search work.
+ROUTED_BLOCK_MULT = 4
+
+
+def route_topk(scores: jax.Array, p: int) -> jax.Array:
+    """Top-p shard selection from centroid distances (smaller = closer).
+
+    ``scores`` is float[b, S]; returns int32[b, p] shard ids.  Stable
+    argsort fixes the tie rule — equal-distance centroids route to the
+    LOWER shard id — and the selected ids come back sorted ascending so
+    the pool fold visits shards in the same serial order the
+    scatter-gather fold uses (tie precedence stays (shard, pool rank)).
+    Module-level on purpose: the routing oracle's mutation test swaps it
+    (tests/test_oracle.py) the way PR 5's swapped ``_merge_topk``.
+    """
+    order = jnp.argsort(scores, axis=-1)            # jnp.argsort is stable
+    return jnp.sort(order[..., :p].astype(jnp.int32), axis=-1)
+
+
+def _routed_search_body(graph_ids, data, global_ids, entries, qblocks,
+                       qmask, *, ef, max_hops, metric, visited_impl,
+                       hash_slots, expand_width):
+    """Search one mesh slot's shards over their own routed query blocks.
+
+    Runs inside ``shard_map``: this slot's ``s_loc`` shards each receive a
+    compacted (Bq, d) block holding ONLY the queries routed to them
+    (padding rows masked by ``qmask`` do no search work — beam_search's
+    row_mask semantics).  Same unchanged lockstep search per shard as the
+    scatter-gather body, same global-id restore before anything leaves the
+    shard; but no local fold — each (shard, slot) pool is returned intact
+    because a query's p pools live at different slots and merge outside
+    the shard_map.  Counters psum over the mesh: since un-routed
+    (query, shard) pairs never enter any block, the totals count routed
+    work only (DESIGN.md §13).
+    """
+    s_loc = graph_ids.shape[0]
+    bq = qblocks.shape[1]
+    qids = jnp.full((bq,), INVALID, jnp.int32)
+    outs_i, outs_d = [], []
+    n_fresh = n_comp = hops = jnp.int32(0)
+    for s in range(s_loc):
+        ep = jnp.broadcast_to(entries[s].astype(jnp.int32), (bq,))[:, None]
+        res = beam_search(
+            graph_ids[s][None], data[s], qblocks[s], qids, qmask[s],
+            jnp.array([ef], jnp.int32), ep,
+            ef_max=ef, max_hops=max_hops, share_cache=False, metric=metric,
+            visited_impl=visited_impl, hash_slots=hash_slots,
+            expand_width=expand_width)
+        lids = res.pool_ids[:, 0]                             # (Bq, ef) local
+        outs_i.append(jnp.where(lids == INVALID, INVALID,
+                                global_ids[s][jnp.maximum(lids, 0)]))
+        outs_d.append(res.pool_dist[:, 0])
+        n_fresh += res.n_fresh
+        n_comp += res.n_computed
+        hops = jnp.maximum(hops, res.hops)
+    n_fresh = jax.lax.psum(n_fresh, "shard")
+    n_comp = jax.lax.psum(n_comp, "shard")
+    hops = jax.lax.pmax(hops, "shard")
+    return jnp.stack(outs_i), jnp.stack(outs_d), n_fresh, n_comp, hops
+
+
+@functools.lru_cache(maxsize=None)
+def _routed_search_fn(mesh, *, k, ef, max_hops, metric, visited_impl,
+                      hash_slots, expand_width, p):
+    """jit'd routed mesh search, cached per (mesh, static knobs, p)."""
+    body = functools.partial(
+        _routed_search_body, ef=ef, max_hops=max_hops, metric=metric,
+        visited_impl=visited_impl, hash_slots=hash_slots,
+        expand_width=expand_width)
+    sharded = shard_map(
+        body, mesh=mesh,
+        in_specs=(P("shard"),) * 6,
+        out_specs=(P("shard"), P("shard"), P(), P(), P()),
+        check_rep=False)
+
+    @jax.jit
+    def run(graph_ids, data, global_ids, entries, queries, q_index, q_mask,
+            routed, slot_of, row_mask):
+        qblocks = queries[q_index]                             # (S, Bq, d)
+        blocks_i, blocks_d, n_fresh, n_comp, hops = sharded(
+            graph_ids, data, global_ids, entries, qblocks, q_mask)
+        # Per-query fold over its p pools: query b's j-th routed shard
+        # searched it at (routed[b,j], slot_of[b,j]).  routed rows are
+        # sorted ascending, so the fold runs in ascending shard order —
+        # the serial tie precedence of the scatter-gather fold.
+        pool_i = blocks_i[routed[:, 0], slot_of[:, 0]]         # (b, ef)
+        pool_d = blocks_d[routed[:, 0], slot_of[:, 0]]
+        for j in range(1, p):
+            pool_i, pool_d, _ = _merge_topk(
+                pool_i, pool_d, jnp.zeros_like(pool_i, bool),
+                blocks_i[routed[:, j], slot_of[:, j]],
+                blocks_d[routed[:, j], slot_of[:, j]])
+        pool_i = jnp.where(row_mask[:, None], pool_i[:, :k], INVALID)
+        pool_d = jnp.where(row_mask[:, None], pool_d[:, :k], jnp.inf)
+        return pool_i, pool_d, n_fresh, n_comp, hops
+    return run
+
+
+@functools.lru_cache(maxsize=None)
+def _fused_routed_search_fn(*, k, ef, max_hops, metric, visited_impl,
+                            hash_slots, expand_width, p):
+    """jit'd single-dispatch routed search over the stacked-flat graph.
+
+    The packed execution strategy (DESIGN.md §13): when a mesh slot holds
+    more than one shard (always true on a single device), the shard_map
+    body's per-shard ``data[s]`` / ``graph_ids[s]`` slices materialize
+    O(n/S) copies per shard per call — measured at ~4× the search itself
+    at n=1M — and the slot's shards run as serial while loops.  This
+    program instead searches ``ShardedGraph.flat_ids``, the precomputed
+    block-diagonal adjacency over the concatenated shard rows: every
+    routed (query, shard) pair becomes one row of a single ``beam_search``
+    whose entry point is that shard's entry in flat id space.  Rows cannot
+    escape their shard (the flat graph has no cross-shard edges), so each
+    row is bit-identical to the same row of the per-shard search under
+    dense visited state, and identical under hash state while the
+    auto-sized tables don't overflow (flat vs local ids hash to different
+    slots, so overflow — which upper-bounds counters either way, DESIGN.md
+    §9 — is the one divergence point).  No per-shard query blocks and no
+    padding rows: the row batch is exactly b·p.  Counter semantics match
+    the mesh path: one search's totals equal the psum over shards, and its
+    hop count is the max over rows = pmax over shards.
+
+    Routing itself (centroid scoring + ``route_topk``) runs inside the jit
+    — the mesh path must route on the host to build per-shard blocks, but
+    here the routed pairs feed straight into the row batch, so the device
+    round-trip would be pure latency.  Same ops, same backend, so both
+    paths pick identical shards.  (Consequence: a monkeypatched
+    ``route_topk`` only affects this path's freshly-compiled entries — the
+    oracle's mutation test targets the host-routed mesh path.)
+    """
+    met = metric_lib.resolve(metric)
+
+    @jax.jit
+    def run(flat_ids, data, global_ids, entries, centroids, queries,
+            row_mask):
+        b = queries.shape[0]
+        n_s, d = data.shape[1], data.shape[2]
+        flat_data = data.reshape(-1, d)                # contiguous: no copy
+        flat_gids = global_ids.reshape(-1)
+        qprep = met.prepare(queries)
+        scores = metric_lib.kernel_distance(
+            qprep[:, None, :], centroids[None, :, :], met.kernel)
+        routed = route_topk(scores, p)                 # (b, p) ascending
+        p_ = routed.shape[1]
+        # row r = (query r // p, routed shard r % p), ascending shard order
+        # within each query (route_topk sorts), so the pool fold below
+        # keeps the serial (shard, pool rank) tie precedence.
+        qrows = jnp.repeat(queries, p_, axis=0)                  # (b*p, d)
+        ep = (entries[routed] + routed * n_s).reshape(-1)        # flat ids
+        rmask = jnp.repeat(row_mask, p_, axis=0)
+        res = beam_search(
+            flat_ids[None], flat_data, qrows,
+            jnp.full((b * p_,), INVALID, jnp.int32), rmask,
+            jnp.array([ef], jnp.int32), ep[:, None],
+            ef_max=ef, max_hops=max_hops, share_cache=False, metric=metric,
+            visited_impl=visited_impl, hash_slots=hash_slots,
+            expand_width=expand_width)
+        lids = res.pool_ids[:, 0]                           # (b*p, ef) flat
+        gpool = jnp.where(lids == INVALID, INVALID,
+                          flat_gids[jnp.maximum(lids, 0)]).reshape(b, p_, -1)
+        dpool = res.pool_dist[:, 0].reshape(b, p_, -1)
+        pool_i, pool_d = gpool[:, 0], dpool[:, 0]
+        for j in range(1, p):
+            pool_i, pool_d, _ = _merge_topk(
+                pool_i, pool_d, jnp.zeros_like(pool_i, bool),
+                gpool[:, j], dpool[:, j])
+        pool_i = jnp.where(row_mask[:, None], pool_i[:, :k], INVALID)
+        pool_d = jnp.where(row_mask[:, None], pool_d[:, :k], jnp.inf)
+        return pool_i, pool_d, res.n_fresh, res.n_computed, res.hops
+    return run
+
+
 def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
                        *, metric: str = "l2", visited_impl: str = "dense",
                        hash_slots: int | None = None, expand_width: int = 1,
                        max_hops: int | None = None,
                        row_mask: jax.Array | None = None,
+                       routed_shards: int | None = None,
                        mesh=None) -> SearchResult:
     """Scatter-gather k-ANNS over a mesh-partitioned corpus (DESIGN.md §11).
 
@@ -563,6 +749,22 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
     is bit-identical to ``knn_search`` from the same entry point (pinned
     by test); the default mesh places num_shards / n_devices shards per
     device (distributed.sharding.search_mesh).
+
+    ``routed_shards=p`` (DESIGN.md §13) searches only each query's top-p
+    shards by centroid distance (``route_topk`` — stable: ties go to the
+    lower shard id), and each query's p pools fold through ``_merge_topk``
+    in ascending shard order.  Counters then total the routed work only.
+    Two execution strategies, selected by mesh shape: with one device per
+    shard, queries are compacted host-side into one static bucketed block
+    per shard (padding rows masked, ROUTED_BLOCK_MULT) so each device only
+    searches queries routed to it (shard_map); with shards packed many-per-
+    device (any single-device run), the routed pairs instead become the
+    b·p rows of ONE beam search over the precomputed block-diagonal flat
+    graph (``ShardedGraph.flat_ids``) — same results row-for-row, none of
+    the per-shard slice copies (``_fused_routed_search_fn``).  ``p == S``
+    routes every query to every shard — the scatter-gather decomposition
+    exactly — and dispatches the scatter-gather program itself, so it is
+    bit-identical to ``routed_shards=None`` by construction.
     """
     if k > ef:
         raise ValueError(
@@ -574,6 +776,29 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
             f"visited_impl {visited_impl!r} not in {VISITED_IMPLS}")
     if expand_width < 1:
         raise ValueError(f"expand_width must be >= 1, got {expand_width}")
+    if row_mask is not None:
+        row_mask = jnp.asarray(row_mask)
+        if row_mask.dtype != jnp.bool_:
+            raise ValueError(
+                f"row_mask dtype {row_mask.dtype} must be bool: integer "
+                f"masks silently cast inside the search (0/1 arithmetic "
+                f"instead of validity), so a wrong-dtype mask would search "
+                f"padding rows; pass a bool array")
+    num_shards = sharded_graph.num_shards
+    if routed_shards is not None:
+        p = int(routed_shards)
+        if not 1 <= p <= num_shards:
+            raise ValueError(
+                f"routed_shards={routed_shards} must be in [1, "
+                f"num_shards={num_shards}]: each query searches its top-p "
+                f"shards by centroid distance")
+        if p == num_shards:
+            routed_shards = None       # degenerate: exact scatter-gather
+        elif sharded_graph.centroids is None:
+            raise ValueError(
+                "routed_shards needs per-shard centroids; this ShardedGraph "
+                "has none — rebuild it with graph.partition (any "
+                "assignment), which stores them")
     b = queries.shape[0]
     if mesh is None:
         # default to the mesh the graph was placed on (graph.partition
@@ -584,16 +809,75 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
         if isinstance(sh, NamedSharding) and "shard" in sh.mesh.shape:
             mesh = sh.mesh
         else:
-            mesh = sharding_lib.search_mesh(sharded_graph.num_shards)
-    run = _sharded_search_fn(
-        mesh, k=k, ef=ef,
-        max_hops=max_hops or default_max_hops(ef, expand_width),
-        metric=metric, visited_impl=visited_impl, hash_slots=hash_slots,
-        expand_width=expand_width)
+            mesh = sharding_lib.search_mesh(num_shards)
+    max_hops = max_hops or default_max_hops(ef, expand_width)
+    dummy_d, dummy_has = fresh_cache(b, 1, False)
+    if routed_shards is None:
+        run = _sharded_search_fn(
+            mesh, k=k, ef=ef, max_hops=max_hops, metric=metric,
+            visited_impl=visited_impl, hash_slots=hash_slots,
+            expand_width=expand_width)
+        pool_i, pool_d, n_fresh, n_comp, hops = run(
+            sharded_graph.ids, sharded_graph.data, sharded_graph.global_ids,
+            sharded_graph.entries, queries,
+            jnp.ones((b,), bool) if row_mask is None else row_mask)
+        return SearchResult(pool_i, pool_d, n_fresh, n_comp, hops,
+                            dummy_d, dummy_has)
+
+    p = int(routed_shards)
+    if mesh.size < num_shards and sharded_graph.flat_ids is not None:
+        # Packed slots (> 1 shard per device): the shard_map body's
+        # per-shard slices would materialize O(n/S) copies per shard per
+        # call, so dispatch the fused single-search program over the
+        # precomputed block-diagonal flat graph instead (DESIGN.md §13).
+        # Bit-identical per routed (query, shard) row — pinned by test.
+        run = _fused_routed_search_fn(
+            k=k, ef=ef, max_hops=max_hops, metric=metric,
+            visited_impl=visited_impl, hash_slots=hash_slots,
+            expand_width=expand_width, p=p)
+        pool_i, pool_d, n_fresh, n_comp, hops = run(
+            sharded_graph.flat_ids, sharded_graph.data,
+            sharded_graph.global_ids, sharded_graph.entries,
+            sharded_graph.centroids, queries,
+            jnp.ones((b,), bool) if row_mask is None else row_mask)
+        return SearchResult(pool_i, pool_d, n_fresh, n_comp, hops,
+                            dummy_d, dummy_has)
+
+    import numpy as np        # host-side routing + compaction below
+    met = metric_lib.resolve(metric)
+    qprep = met.prepare(queries)
+    scores = metric_lib.kernel_distance(
+        qprep[:, None, :], sharded_graph.centroids[None, :, :], met.kernel)
+    routed = np.asarray(route_topk(scores, p))                 # (b, p) asc
+    rmask = (np.ones(b, bool) if row_mask is None
+             else np.asarray(row_mask))
+    # Compact per shard: shard s searches exactly the queries routed to it,
+    # in query order; slot_of[b, j] is query b's row inside shard
+    # routed[b, j]'s block.  Static bucketed block height (graph.bucket)
+    # keeps the compiled-shape set small across batches.
+    per_shard: list = [[] for _ in range(num_shards)]
+    slot_of = np.zeros((b, p), np.int32)
+    for i in range(b):
+        if not rmask[i]:
+            continue                     # padding queries route nowhere
+        for j, s in enumerate(routed[i]):
+            slot_of[i, j] = len(per_shard[s])
+            per_shard[s].append(i)
+    bq = graph_lib.bucket(max(1, max(len(l) for l in per_shard)),
+                          ROUTED_BLOCK_MULT)
+    q_index = np.zeros((num_shards, bq), np.int32)
+    q_mask = np.zeros((num_shards, bq), bool)
+    for s, rows in enumerate(per_shard):
+        q_index[s, :len(rows)] = rows
+        q_mask[s, :len(rows)] = True
+    run = _routed_search_fn(
+        mesh, k=k, ef=ef, max_hops=max_hops, metric=metric,
+        visited_impl=visited_impl, hash_slots=hash_slots,
+        expand_width=expand_width, p=p)
     pool_i, pool_d, n_fresh, n_comp, hops = run(
         sharded_graph.ids, sharded_graph.data, sharded_graph.global_ids,
-        sharded_graph.entries, queries,
-        jnp.ones((b,), bool) if row_mask is None else row_mask)
-    dummy_d, dummy_has = fresh_cache(b, 1, False)
+        sharded_graph.entries, queries, jnp.asarray(q_index),
+        jnp.asarray(q_mask), jnp.asarray(routed), jnp.asarray(slot_of),
+        jnp.asarray(rmask))
     return SearchResult(pool_i, pool_d, n_fresh, n_comp, hops,
                         dummy_d, dummy_has)

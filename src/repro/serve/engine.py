@@ -25,6 +25,7 @@ import numpy as np
 
 from repro.configs.base import ArchConfig
 from repro.core import build as build_lib
+from repro.core import graph as graph_lib
 from repro.models import model as M
 from repro.serve import retrieval as retrieval_lib
 
@@ -49,6 +50,12 @@ class RetrievalKnobs:
                   keys over a "shard" mesh axis so no device holds the
                   whole corpus; searches scatter-gather and merge.  The
                   default 1 keeps today's single-device path bit-identical.
+    assign:       shard placement policy (DESIGN.md §13, build-time):
+                  "chunked" | "random" | "kmeans" — kmeans clusters the
+                  keys so centroid routing can skip shards.
+    routed_shards: top-p shards searched per decode query (DESIGN.md §13,
+                  search-time).  None = scatter-gather over all shards;
+                  p < num_shards skips the rest by centroid distance.
     """
     top_k: int = 48
     ef: int = 96
@@ -57,6 +64,8 @@ class RetrievalKnobs:
     block_size: int = 64
     build_impl: str = "per_batch"
     num_shards: int = 1
+    assign: str = "chunked"
+    routed_shards: int | None = None
 
     def __post_init__(self):
         if self.top_k > self.ef:
@@ -66,13 +75,23 @@ class RetrievalKnobs:
         if self.num_shards < 1:
             raise ValueError(
                 f"num_shards must be >= 1, got {self.num_shards}")
+        if self.assign not in graph_lib.ASSIGNMENTS:
+            raise ValueError(
+                f"assign {self.assign!r} not in {graph_lib.ASSIGNMENTS}")
+        if self.routed_shards is not None and not (
+                1 <= self.routed_shards <= self.num_shards):
+            raise ValueError(
+                f"routed_shards={self.routed_shards} must be None or in "
+                f"[1, num_shards={self.num_shards}] (search.sharded_"
+                f"knn_search routes each query to its top-p shards)")
         build_lib.resolve_build_impl(self.build_impl)   # fail fast, not at build
 
     def search_kwargs(self) -> dict:
         """kwargs for ``retrieval.retrieval_attention`` (single batch)."""
         return dict(top_k=self.top_k, ef=self.ef,
                     expand_width=self.expand_width,
-                    visited_impl=self.visited_impl)
+                    visited_impl=self.visited_impl,
+                    routed_shards=self.routed_shards)
 
     def batched_kwargs(self) -> dict:
         """kwargs for ``retrieval.retrieval_attention_batched``."""
@@ -80,7 +99,8 @@ class RetrievalKnobs:
 
     def index_kwargs(self) -> dict:
         """Build-time kwargs for ``retrieval.build_index``."""
-        return dict(num_shards=self.num_shards, build_impl=self.build_impl)
+        return dict(num_shards=self.num_shards, build_impl=self.build_impl,
+                    assign=self.assign)
 
 
 @dataclasses.dataclass

@@ -94,7 +94,7 @@ class RetrievalIndex:
 def build_index(keys: jax.Array, values: jax.Array,
                 params: vamana_lib.VamanaParams, *, metric: str = "ip",
                 seed: int = 0, batch_size: int = 256,
-                num_shards: int = 1,
+                num_shards: int = 1, assign: str = "chunked",
                 build_impl: str = "per_batch") -> RetrievalIndex:
     """Index one head's keys under ``metric`` (default: native ip/MIPS).
 
@@ -102,7 +102,9 @@ def build_index(keys: jax.Array, values: jax.Array,
     once here; ``search_keys`` stores the prepared matrix so query-time
     never touches the full cache again.
 
-    ``num_shards > 1`` partitions the keys into contiguous chunks and
+    ``num_shards > 1`` partitions the keys (placement policy ``assign``:
+    "chunked" | "random" | "kmeans", graph.ASSIGNMENTS — kmeans clusters
+    the keys so centroid routing can skip shards, DESIGN.md §13) and
     builds an independent Vamana subindex per shard (same ``params``);
     searches then run scatter-gather over a ``"shard"`` mesh axis
     (``search.sharded_knn_search``, DESIGN.md §11) so no device ever holds
@@ -134,7 +136,7 @@ def build_index(keys: jax.Array, values: jax.Array,
         return res.g.ids[0], res.entry
 
     shards = graph_lib.partition(search_keys, num_shards,
-                                 assignment="chunked", seed=seed,
+                                 assignment=assign, seed=seed,
                                  build_fn=shard_builder, metric=met.kernel)
     entry = int(shards.global_ids[0][int(shards.entries[0])])
     return RetrievalIndex(graph_ids=None, keys=keys, values=values,
@@ -159,14 +161,20 @@ def _attend(idx: RetrievalIndex, q: jax.Array, pool_ids: jax.Array,
 
 def _search_index(idx: RetrievalIndex, qs: jax.Array, top_k: int, ef: int,
                   visited_impl: str, expand_width: int,
-                  row_mask: jax.Array | None = None
+                  row_mask: jax.Array | None = None,
+                  routed_shards: int | None = None
                   ) -> search_lib.SearchResult:
     """Route one prepared-query batch to the un- or mesh-sharded search."""
     if idx.shards is not None:
         return search_lib.sharded_knn_search(
             idx.shards, qs, top_k, ef, metric=idx.kernel,
             visited_impl=visited_impl, expand_width=expand_width,
-            row_mask=row_mask)
+            row_mask=row_mask, routed_shards=routed_shards)
+    if routed_shards not in (None, 1):
+        raise ValueError(
+            f"routed_shards={routed_shards} on an unsharded index: routing "
+            f"selects among shards, so build the index with num_shards > 1 "
+            f"(DESIGN.md §13)")
     return search_lib.knn_search(
         idx.graph_ids, idx.search_keys, qs, top_k, ef, idx.entry,
         metric=idx.kernel, visited_impl=visited_impl,
@@ -176,7 +184,8 @@ def _search_index(idx: RetrievalIndex, qs: jax.Array, top_k: int, ef: int,
 def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
                         ef: int, scale: float | None = None,
                         visited_impl: str = "hash",
-                        expand_width: int = DEFAULT_EXPAND_WIDTH
+                        expand_width: int = DEFAULT_EXPAND_WIDTH,
+                        routed_shards: int | None = None
                         ) -> tuple[jax.Array, search_lib.SearchResult]:
     """Approximate attention for decode queries q: (B, dh).
 
@@ -187,11 +196,15 @@ def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
     ``expand_width`` is the per-hop frontier width (DESIGN.md §10) —
     1 reproduces the paper's sequential schedule exactly.  On an index
     built with ``num_shards > 1`` the search scatter-gathers across the
-    shard mesh (DESIGN.md §11) and returns global key ids either way.
+    shard mesh (DESIGN.md §11) and returns global key ids either way;
+    ``routed_shards=p`` searches only each query's top-p shards by
+    centroid distance (DESIGN.md §13 — pair with
+    ``build_index(assign="kmeans")`` for shards worth routing between).
     """
     met = metric_lib.resolve(idx.metric)
     qs = met.prepare(q)            # per-call cost is (B, dh) — keys untouched
-    res = _search_index(idx, qs, top_k, ef, visited_impl, expand_width)
+    res = _search_index(idx, qs, top_k, ef, visited_impl, expand_width,
+                        routed_shards=routed_shards)
     return _attend(idx, q, res.pool_ids, scale), res
 
 
@@ -200,6 +213,7 @@ def retrieval_attention_batched(
     scale: float | None = None, block_size: int = 64,
     visited_impl: str = "hash",
     expand_width: int = DEFAULT_EXPAND_WIDTH,
+    routed_shards: int | None = None,
 ) -> tuple[jax.Array, search_lib.SearchResult]:
     """Query-blocked retrieval attention for serving-sized batches.
 
@@ -224,7 +238,8 @@ def retrieval_attention_batched(
         qb = jnp.zeros((bs, dh), qs_all.dtype).at[:nrows].set(
             qs_all[off:off + nrows])
         res = _search_index(idx, qb, top_k, ef, visited_impl, expand_width,
-                            row_mask=jnp.arange(bs) < nrows)
+                            row_mask=jnp.arange(bs) < nrows,
+                            routed_shards=routed_shards)
         # accumulate device scalars — no host sync inside the dispatch loop
         pool_ids.append(res.pool_ids[:nrows])
         pool_dist.append(res.pool_dist[:nrows])

@@ -16,13 +16,21 @@ degrades to one deterministic example and the suite still collects.
 Sensitivity is pinned, not assumed: ``test_oracle_catches_tie_rule_flip``
 seeds the mutation the suite must catch (flipping ``_merge_topk``'s
 pool-wins tie rule) and asserts the parity check fails on it.
+
+The same contract covers query routing (DESIGN.md §13): ``oracle_route`` +
+``oracle_routed_search`` define centroid scoring, stable top-p selection
+(ties -> lower shard id), serial per-shard search and the ascending-shard
+pool fold in pure NumPy; parity tests drive them against
+``search.sharded_knn_search(routed_shards=p)`` across metric × impl × W × p,
+and ``test_oracle_catches_router_flip`` proves the suite fails when the
+router's tie rule is flipped to prefer the higher shard id.
 """
 import numpy as np
 import pytest
 
 import jax.numpy as jnp
 
-from repro.core import search
+from repro.core import graph, search
 from repro.core.graph import INVALID, random_knng_ids
 
 try:
@@ -267,3 +275,165 @@ def test_oracle_catches_tie_rule_flip():
     finally:
         search._merge_topk = orig
         search.beam_search.clear_cache()
+
+
+# ---------------------------------------------------------------------------
+# Query-routing oracle (DESIGN.md §13): centroid scoring + stable top-p
+# selection + serial per-shard search + ascending-shard pool fold, all in
+# pure NumPy — the semantics sharded_knn_search(routed_shards=p) must match.
+# ---------------------------------------------------------------------------
+
+S_ROUTE = 3          # shards in the routed parity cases
+EF_W_P = [(8, 1, 1), (16, 3, 2), (8, 5, 2)]     # static (ef, W, p) shapes
+
+
+def _np_route_scores(q, centroids, metric):
+    """Per-shard centroid distances for one raw query, _np_dist numerics.
+
+    Centroids already live in prepared space (graph.partition computes
+    them over metric-prepared members), so only the query is prepared.
+    """
+    q = np.asarray(q, np.float32)
+    if metric == "cosine":
+        q = q / max(np.linalg.norm(q), 1e-12)
+        kernel = "ip"
+    else:
+        kernel = metric
+    return np.array([_np_dist(q, c, kernel) for c in centroids], np.float32)
+
+
+def oracle_route(scores, p):
+    """Stable top-p selection: equal centroid distances route to the LOWER
+    shard id; selected ids come back ascending (the fold order)."""
+    order = np.argsort(np.asarray(scores), kind="stable")
+    return np.sort(order[:p])
+
+
+def oracle_routed_search(sg_np, q, k, ef, p, *, metric="l2",
+                         expand_width=1):
+    """Routed search for one query over host-side ShardedGraph arrays.
+
+    ``sg_np`` is a dict of np arrays (ids/data/global_ids/entries/
+    centroids).  Scores centroids, selects top-p (oracle_route), runs
+    ``oracle_search`` per routed shard in ascending order, restores global
+    ids, and folds pools by the stable pool-first merge (earlier shards
+    win distance ties — the serial-fold precedence the device path pins).
+    Returns (ids int32[k], dist f32[k], n_dist, hops).
+    """
+    routed = oracle_route(
+        _np_route_scores(q, sg_np["centroids"], metric), p)
+    pool = []                              # [(dist, gid)] sorted, <= ef
+    n_dist = 0
+    hops = 0
+    for s in routed:
+        ids, dist, nd, hp = oracle_search(
+            sg_np["ids"][s], sg_np["data"][s], q, ef,
+            int(sg_np["entries"][s]), metric=metric,
+            expand_width=expand_width)
+        cands = [(float(dist[j]), int(sg_np["global_ids"][s][ids[j]]))
+                 for j in range(ef) if ids[j] != INVALID]
+        # stable sort of [pool, cands]: pool entries outrank equal-distance
+        # candidates — exactly _merge_topk's rule (PR 5 pin)
+        pool = sorted(pool + cands, key=lambda e: e[0])[:ef]
+        n_dist += nd
+        hops = max(hops, hp)
+    out_ids = np.full(k, INVALID, np.int32)
+    out_dist = np.full(k, np.inf, np.float32)
+    for j, e in enumerate(pool[:k]):
+        out_dist[j], out_ids[j] = e
+    return out_ids, out_dist, n_dist, hops
+
+
+def _routed_case(seed, n=90, degree=6):
+    """A kmeans-partitioned corpus + queries, device- and host-side."""
+    r = np.random.default_rng(seed)
+    data = jnp.asarray(r.normal(size=(n, 8)), jnp.float32)
+    queries = np.asarray(data)[r.integers(0, n, B)] + r.normal(
+        size=(B, 8)).astype(np.float32) * 0.25
+    sg = graph.partition(data, S_ROUTE, assignment="kmeans", seed=seed,
+                         degree=degree)
+    sg_np = {f: np.asarray(getattr(sg, f)) for f in
+             ("ids", "data", "global_ids", "entries", "centroids")}
+    return sg, sg_np, queries.astype(np.float32)
+
+
+def _assert_routed_matches_oracle(sg, sg_np, queries, k, ef, W, p, metric,
+                                  impl):
+    res = search.sharded_knn_search(
+        sg, jnp.asarray(queries), k, ef, metric=metric, visited_impl=impl,
+        expand_width=W, routed_shards=p)
+    got_ids = np.asarray(res.pool_ids)
+    got_dist = np.asarray(res.pool_dist)
+    total_dist = 0
+    max_hops = 0
+    for qi in range(queries.shape[0]):
+        ids, dist, nd, hops = oracle_routed_search(
+            sg_np, queries[qi], k, ef, p, metric=metric, expand_width=W)
+        np.testing.assert_array_equal(
+            got_ids[qi], ids,
+            err_msg=f"routed pool diverged from routing oracle (query {qi}, "
+                    f"metric={metric}, impl={impl}, W={W}, p={p})")
+        np.testing.assert_allclose(got_dist[qi], dist, rtol=1e-5, atol=1e-5)
+        total_dist += nd
+        max_hops = max(max_hops, hops)
+    # counters total the routed work only: psum over the per-shard blocks,
+    # where un-routed (query, shard) pairs never appear (DESIGN.md §13)
+    assert int(res.n_computed) == total_dist, (int(res.n_computed),
+                                               total_dist)
+    assert int(res.n_fresh) == total_dist
+    assert int(res.hops) == max_hops, (int(res.hops), max_hops)
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@pytest.mark.parametrize("metric", METRICS)
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), ef_w_p=st.sampled_from(EF_W_P))
+def test_routed_search_matches_oracle(metric, impl, seed, ef_w_p):
+    ef, W, p = ef_w_p
+    sg, sg_np, queries = _routed_case(seed)
+    _assert_routed_matches_oracle(sg, sg_np, queries, ef, ef, W, p, metric,
+                                  impl)
+
+
+def test_routed_truncation_matches_k_prefix():
+    """The k-prefix of the routed fold equals the oracle's k-prefix."""
+    sg, sg_np, queries = _routed_case(11)
+    _assert_routed_matches_oracle(sg, sg_np, queries, 5, 16, 2, 2, "l2",
+                                  "dense")
+
+
+def flipped_route_topk(scores, p):
+    """The seeded router mutation: equal centroid distances route to the
+    HIGHER shard id (stable argsort over the column-reversed scores,
+    mapped back) — rank order on distinct scores is unchanged."""
+    S = scores.shape[-1]
+    rev = jnp.argsort(scores[..., ::-1], axis=-1)[..., :p]
+    return jnp.sort((S - 1 - rev).astype(jnp.int32), axis=-1)
+
+
+def test_oracle_catches_router_flip():
+    """Acceptance gate: the routed suite must FAIL when the router's
+    top-p tie rule is flipped.  Duplicated centroid rows guarantee exact
+    score ties on every query, so lower-id and higher-id routing pick
+    different shards whenever the tied pair ranks first."""
+    sg, sg_np, queries = _routed_case(13)
+    # force exact centroid-score ties: shards 0 and 1 share a centroid row
+    # (identical float rows -> identical scores), contents still differ
+    cents = np.asarray(sg.centroids).copy()
+    cents[1] = cents[0]
+    sg.centroids = jnp.asarray(cents)
+    sg_np["centroids"] = cents
+    # sanity: the healthy router passes on this exact tied workload
+    _assert_routed_matches_oracle(sg, sg_np, queries, 8, 8, 1, 1, "l2",
+                                  "dense")
+    orig = search.route_topk
+    search.route_topk = flipped_route_topk
+    try:
+        # no jit-cache clearing needed: routing runs host-side and eagerly
+        # resolves the module global on every call (DESIGN.md §13)
+        with pytest.raises(AssertionError,
+                           match="diverged from routing oracle"):
+            _assert_routed_matches_oracle(sg, sg_np, queries, 8, 8, 1, 1,
+                                          "l2", "dense")
+    finally:
+        search.route_topk = orig

@@ -132,13 +132,67 @@ def test_sharded_index_serves_and_blocks_consistently():
 def test_retrieval_knobs_num_shards():
     from repro.serve.engine import RetrievalKnobs
     assert RetrievalKnobs().index_kwargs() == {
-        "num_shards": 1, "build_impl": "per_batch"}
+        "num_shards": 1, "build_impl": "per_batch", "assign": "chunked"}
     assert RetrievalKnobs(num_shards=4, build_impl="fused").index_kwargs() == {
-        "num_shards": 4, "build_impl": "fused"}
+        "num_shards": 4, "build_impl": "fused", "assign": "chunked"}
     with pytest.raises(ValueError, match="num_shards"):
         RetrievalKnobs(num_shards=0)
     with pytest.raises(ValueError, match="build_impl"):
         RetrievalKnobs(build_impl="nope")
+
+
+def test_retrieval_knobs_routing():
+    """assign / routed_shards (DESIGN.md §13) thread through the knob
+    kwargs and are validated at construction, not at search time."""
+    from repro.serve.engine import RetrievalKnobs
+    knobs = RetrievalKnobs(num_shards=4, assign="kmeans", routed_shards=2)
+    assert knobs.index_kwargs()["assign"] == "kmeans"
+    assert knobs.search_kwargs()["routed_shards"] == 2
+    assert knobs.batched_kwargs()["routed_shards"] == 2
+    assert RetrievalKnobs().search_kwargs()["routed_shards"] is None
+    with pytest.raises(ValueError, match="assign"):
+        RetrievalKnobs(assign="hashed")
+    with pytest.raises(ValueError, match="routed_shards"):
+        RetrievalKnobs(routed_shards=2)        # > num_shards=1
+    with pytest.raises(ValueError, match="routed_shards"):
+        RetrievalKnobs(num_shards=4, routed_shards=0)
+
+
+def test_routed_sharded_index_serves():
+    """kmeans-built sharded index + routed search: global ids, exact-
+    attention quality preserved, and the routed path computes strictly
+    fewer distances than scatter-gather (DESIGN.md §13)."""
+    r = np.random.default_rng(8)
+    n, dh, b = 400, 16, 12
+    keys = jnp.asarray(r.normal(size=(n, dh)), jnp.float32)
+    vals = jnp.asarray(r.normal(size=(n, dh)), jnp.float32)
+    q = keys[r.integers(0, n, b)] * 4.0
+    idx = retrieval.build_index(
+        keys, vals, vamana.VamanaParams(L=32, M=12, alpha=1.2),
+        num_shards=4, assign="kmeans")
+    assert idx.shards.centroids is not None
+    out_full, res_full = retrieval.retrieval_attention(
+        idx, q, top_k=16, ef=32)
+    out, res = retrieval.retrieval_attention(
+        idx, q, top_k=16, ef=32, routed_shards=2)
+    ids = np.asarray(res.pool_ids)
+    assert ids.min() >= 0 and ids.max() < n
+    assert int(res.n_computed) < int(res_full.n_computed)
+    exact = retrieval.exact_attention(keys, vals, q)
+    cos = jnp.sum(out * exact, -1) / (
+        jnp.linalg.norm(out, axis=-1) * jnp.linalg.norm(exact, axis=-1))
+    assert float(jnp.mean(cos)) > 0.97
+    # blocked path stays a pure scheduling change under routing
+    outb, resb = retrieval.retrieval_attention_batched(
+        idx, q, top_k=16, ef=32, block_size=8, routed_shards=2)
+    np.testing.assert_array_equal(ids, np.asarray(resb.pool_ids))
+    assert bool(jnp.allclose(out, outb, atol=1e-5))
+    # routing on an unsharded index is a user error, caught loudly
+    idx1 = retrieval.build_index(
+        keys, vals, vamana.VamanaParams(L=32, M=12, alpha=1.2))
+    with pytest.raises(ValueError, match="unsharded"):
+        retrieval.retrieval_attention(idx1, q, top_k=8, ef=16,
+                                      routed_shards=2)
 
 
 def test_retrieval_index_tunable_by_fastpgt():

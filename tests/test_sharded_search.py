@@ -1,7 +1,11 @@
 """Mesh-partitioned scatter-gather search (DESIGN.md §11): differential
 parity against the serial decomposition, num_shards=1 bit-identity against
 ``knn_search``, counter accounting under psum, uneven remainder shards,
-partitioner invariants, and the n=10k recall bars (slow lane).
+partitioner invariants — including the kmeans partitioner's coverage /
+balance / determinism / no-empty-shard properties and the routed-search
+degeneracy pins (DESIGN.md §13: routed_shards=S bit-identical to
+scatter-gather, validation, routed row masking) — and the n=10k recall
+bars (slow lane).
 
 CI runs this under ``XLA_FLAGS=--xla_force_host_platform_device_count=4``
 (tests/conftest.py forces it for local runs too) so the shard_map path
@@ -170,6 +174,240 @@ def test_partition_validates():
         search.sharded_knn_search(sg, data[:2], 8, 4)
 
 
+def test_row_mask_dtype_rejected():
+    """Integer masks used to silently cast to 0/1 arithmetic inside the
+    search; sharded_knn_search now rejects them up front (mirror of the
+    k > ef guard)."""
+    data, queries = _dataset(200, b=8, seed=7)
+    sg = graph.partition(data, 2, degree=8)
+    with pytest.raises(ValueError, match="row_mask dtype"):
+        search.sharded_knn_search(sg, queries, 4, 8,
+                                  row_mask=jnp.ones(8, jnp.int32))
+    with pytest.raises(ValueError, match="row_mask dtype"):
+        search.sharded_knn_search(sg, queries, 4, 8, routed_shards=2,
+                                  row_mask=jnp.arange(8))
+    # bool masks (and None) still pass
+    search.sharded_knn_search(sg, queries, 4, 8,
+                              row_mask=jnp.ones(8, bool))
+
+
+# ---------------------------------------------------------------------------
+# kmeans partitioner properties (DESIGN.md §13)
+# ---------------------------------------------------------------------------
+
+def _clustered(n, d=16, seed=0, n_clusters=3, skew=(8, 3, 1)):
+    """Gaussian clusters with skewed sizes — the balance stressor: raw
+    k-means would hoard the big cluster into one shard."""
+    r = np.random.default_rng(seed)
+    centers = r.normal(size=(n_clusters, d)) * 6.0
+    sizes = (np.array(skew) * n / sum(skew)).astype(int)
+    sizes[0] += n - sizes.sum()
+    rows = np.concatenate([
+        centers[i] + r.normal(size=(s, d)) for i, s in enumerate(sizes)])
+    return jnp.asarray(rows[r.permutation(n)], jnp.float32)
+
+
+def test_kmeans_partition_covers_and_balances():
+    n, S = 1200, 4
+    data = _clustered(n, seed=11)
+    parts = graph.shard_assignment(n, S, assignment="kmeans", data=data)
+    ids = np.concatenate(parts)
+    assert np.array_equal(np.sort(ids), np.arange(n))     # exactly once
+    cap = int(np.ceil(n / S * (1.0 + graph.KMEANS_CAP_SLACK)))
+    assert max(len(p) for p in parts) <= cap, \
+        "capacity rounding must bound every shard by ceil(n/S * (1+eps))"
+    assert min(len(p) for p in parts) >= 1
+
+
+def test_kmeans_partition_deterministic_in_seed():
+    n, S = 500, 4
+    data = _clustered(n, seed=3)
+    a = graph.shard_assignment(n, S, assignment="kmeans", seed=0, data=data)
+    b = graph.shard_assignment(n, S, assignment="kmeans", seed=0, data=data)
+    for pa, pb in zip(a, b):
+        np.testing.assert_array_equal(pa, pb)
+    c = graph.shard_assignment(n, S, assignment="kmeans", seed=1, data=data)
+    assert any(not np.array_equal(pa, pc) for pa, pc in zip(a, c)), \
+        "different seeds should explore different initializations"
+
+
+def test_kmeans_no_empty_shard_under_duplicates():
+    """n >> S with only 3 distinct vectors: duplicate centroids starve
+    shards mid-rounding; the deterministic repair must still hand every
+    shard >= 1 member (an empty shard has no entry point)."""
+    n, S = 256, 8
+    r = np.random.default_rng(5)
+    base = r.normal(size=(3, 8)).astype(np.float32)
+    data = jnp.asarray(base[r.integers(0, 3, n)])
+    parts = graph.shard_assignment(n, S, assignment="kmeans", data=data)
+    sizes = [len(p) for p in parts]
+    assert min(sizes) >= 1, sizes
+    assert sum(sizes) == n
+    assert max(sizes) <= int(np.ceil(n / S * (1.0 + graph.KMEANS_CAP_SLACK)))
+
+
+def test_kmeans_requires_data():
+    with pytest.raises(ValueError, match="kmeans"):
+        graph.shard_assignment(100, 4, assignment="kmeans")
+
+
+def test_partition_stores_centroids_for_all_assignments():
+    data, _ = _dataset(120, b=1, seed=6)
+    for assignment in graph.ASSIGNMENTS:
+        sg = graph.partition(data, 3, assignment=assignment, degree=8)
+        cents = np.asarray(sg.centroids)
+        assert cents.shape == (3, 16)
+        assert np.all(np.isfinite(cents))
+        if assignment == "kmeans":
+            # Lloyd centroids (the statistic the placement optimized), not
+            # member means — each shard's members must be closer to their
+            # own centroid than the mean of the other shards' distances
+            d = ((np.asarray(data)[:, None, :] - cents[None]) ** 2).sum(-1)
+            for s in range(3):
+                part = np.asarray(sg.global_ids[s][:int(sg.counts[s])])
+                others = [t for t in range(3) if t != s]
+                assert d[part, s].mean() < d[part][:, others].mean()
+        else:
+            for s in range(3):
+                part = np.asarray(sg.global_ids[s][:int(sg.counts[s])])
+                np.testing.assert_allclose(
+                    cents[s], np.asarray(data)[part].mean(axis=0),
+                    rtol=1e-5, atol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# Routed search degeneracy + validation (DESIGN.md §13; full differential
+# parity against the NumPy routing oracle lives in tests/test_oracle.py)
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("impl", ["dense", "hash"])
+def test_routed_p_equals_S_bit_identical_to_scatter_gather(impl):
+    """The degeneracy pin: p = S routes every query to every shard and
+    must return byte-identical pools AND counters to routed_shards=None
+    (it dispatches the same scatter-gather program)."""
+    data, queries = _dataset(600, b=16, seed=12)
+    sg = graph.partition(data, 4, assignment="kmeans", degree=10)
+    full = search.sharded_knn_search(sg, queries, 8, 24, visited_impl=impl)
+    same = search.sharded_knn_search(sg, queries, 8, 24, visited_impl=impl,
+                                     routed_shards=4)
+    np.testing.assert_array_equal(np.asarray(full.pool_ids),
+                                  np.asarray(same.pool_ids))
+    np.testing.assert_array_equal(np.asarray(full.pool_dist),
+                                  np.asarray(same.pool_dist))
+    assert int(full.n_computed) == int(same.n_computed)
+    assert int(full.n_fresh) == int(same.n_fresh)
+    assert int(full.hops) == int(same.hops)
+
+
+def test_routed_does_less_work_and_masks_padding():
+    """p < S: counters count routed work only (strictly less than the
+    scatter-gather totals), and row-masked queries return INVALID pools
+    without perturbing the routed queries' results."""
+    data, queries = _dataset(600, b=16, seed=14)
+    sg = graph.partition(data, 4, assignment="kmeans", degree=10)
+    full = search.sharded_knn_search(sg, queries, 8, 24)
+    routed = search.sharded_knn_search(sg, queries, 8, 24, routed_shards=2)
+    assert int(routed.n_computed) < int(full.n_computed)
+    assert bool(jnp.all(routed.pool_ids != INVALID))
+    mask = jnp.zeros(16, bool).at[:5].set(True)
+    masked = search.sharded_knn_search(sg, queries, 8, 24, routed_shards=2,
+                                       row_mask=mask)
+    assert bool(jnp.all(masked.pool_ids[5:] == INVALID))
+    np.testing.assert_array_equal(np.asarray(masked.pool_ids[:5]),
+                                  np.asarray(routed.pool_ids[:5]))
+
+
+def test_routed_validates():
+    import dataclasses
+    data, queries = _dataset(200, b=8, seed=15)
+    sg = graph.partition(data, 4, degree=8)
+    for bad in (0, 5, -1):
+        with pytest.raises(ValueError, match="routed_shards"):
+            search.sharded_knn_search(sg, queries, 4, 8, routed_shards=bad)
+    legacy = dataclasses.replace(sg, centroids=None)
+    with pytest.raises(ValueError, match="centroids"):
+        search.sharded_knn_search(legacy, queries, 4, 8, routed_shards=2)
+    # p = S on a legacy graph is fine: it never consults centroids
+    search.sharded_knn_search(legacy, queries, 4, 8, routed_shards=4)
+
+
+def test_partition_flat_ids_block_diagonal():
+    """The fused routed path's precondition (DESIGN.md §13): the stacked-
+    flat adjacency must keep every edge inside its own shard's row range
+    (a cross-shard edge would let one routed row silently search another
+    shard) and must leave padding rows both edge-free and unreferenced."""
+    data, _ = _dataset(300, b=1, seed=22)
+    sg = graph.partition(data, 3, assignment="kmeans", degree=8)
+    flat = np.asarray(sg.flat_ids)
+    n_s = sg.shard_rows
+    assert flat.shape == (3 * n_s, sg.max_degree)
+    for s in range(3):
+        c = int(sg.counts[s])
+        rows = flat[s * n_s:(s + 1) * n_s]
+        real = rows[rows != INVALID]
+        assert ((real >= s * n_s) & (real < s * n_s + c)).all()
+        assert (rows[c:] == INVALID).all()          # padding has no edges
+        # flat rows are exactly the local rows shifted by the shard base
+        local = np.asarray(sg.ids[s])
+        np.testing.assert_array_equal(
+            rows, np.where(local != INVALID, local + s * n_s, INVALID))
+
+
+@pytest.mark.parametrize("impl", ["dense", "hash"])
+@pytest.mark.parametrize("p", [1, 2, 3])
+def test_routed_fused_path_matches_mesh_path(impl, p):
+    """Packed-mesh dispatch (DESIGN.md §13): when a mesh slot holds more
+    than one shard, routing runs as ONE beam search over the block-
+    diagonal flat graph.  Same routed pairs, same per-row searches, same
+    ascending-shard fold — so pools AND counters must come back byte-
+    identical to the shard_map routed path (forced here via a 1-device
+    mesh vs the 4-device placement mesh)."""
+    import dataclasses
+    data, queries = _dataset(600, b=16, seed=21)
+    sg = graph.partition(data, 4, assignment="kmeans", degree=10)
+    # same partition (deterministic in seed) committed to a packed 1-device
+    # mesh: its placement makes sharded_knn_search pick the fused program
+    mesh1 = sharding_lib.search_mesh(4, devices=jax.devices()[:1])
+    sg1 = graph.partition(data, 4, assignment="kmeans", degree=10,
+                          mesh=mesh1)
+    assert sg1.flat_ids is not None
+    via_mesh = search.sharded_knn_search(
+        sg, queries, 8, 24, visited_impl=impl, routed_shards=p)
+    fused = search.sharded_knn_search(
+        sg1, queries, 8, 24, visited_impl=impl, routed_shards=p)
+    np.testing.assert_array_equal(np.asarray(via_mesh.pool_ids),
+                                  np.asarray(fused.pool_ids))
+    np.testing.assert_array_equal(np.asarray(via_mesh.pool_dist),
+                                  np.asarray(fused.pool_dist))
+    assert int(via_mesh.n_computed) == int(fused.n_computed)
+    assert int(via_mesh.n_fresh) == int(fused.n_fresh)
+    assert int(via_mesh.hops) == int(fused.hops)
+    # a pre-flat_ids graph on a packed mesh falls back to the shard_map
+    # program: slower, never wrong
+    legacy = dataclasses.replace(sg1, flat_ids=None)
+    fb = search.sharded_knn_search(
+        legacy, queries, 8, 24, visited_impl=impl, routed_shards=p)
+    np.testing.assert_array_equal(np.asarray(via_mesh.pool_ids),
+                                  np.asarray(fb.pool_ids))
+
+
+def test_routed_fused_path_masks_rows():
+    """Row masking on the fused path: masked queries return INVALID pools,
+    stay out of the counters, and don't perturb unmasked queries."""
+    data, queries = _dataset(600, b=16, seed=14)
+    mesh1 = sharding_lib.search_mesh(4, devices=jax.devices()[:1])
+    sg = graph.partition(data, 4, assignment="kmeans", degree=10,
+                         mesh=mesh1)
+    routed = search.sharded_knn_search(sg, queries, 8, 24, routed_shards=2)
+    mask = jnp.zeros(16, bool).at[:5].set(True)
+    masked = search.sharded_knn_search(sg, queries, 8, 24, routed_shards=2,
+                                       row_mask=mask)
+    assert bool(jnp.all(masked.pool_ids[5:] == INVALID))
+    assert int(masked.n_computed) < int(routed.n_computed)
+    np.testing.assert_array_equal(np.asarray(masked.pool_ids[:5]),
+                                  np.asarray(routed.pool_ids[:5]))
+
+
 def test_induced_partition_drops_only_cross_shard_edges():
     data, _ = _dataset(80, b=1, seed=4)
     adj, _ = knng.build_knng(data, 8)
@@ -261,3 +499,30 @@ def test_random_partition_recall_10k(metric):
     res = search.sharded_knn_search(sg, queries, k, ef, metric=metric)
     rec = evallib.recall_at_k(res.pool_ids, gt)
     assert rec >= rec_base - 0.005, (rec, rec_base)
+
+
+@pytest.mark.slow
+def test_routed_kmeans_recall_floor_10k():
+    """Acceptance (ISSUE 7): kmeans partition, S=4, routed p=2 at n=10k —
+    recall@10 within 0.01 of the unsharded search.  The corpus has mild
+    cluster structure (the workload routing is FOR — on structureless
+    isotropic noise no partition can put a neighborhood in < S shards,
+    and no graph stays navigable once clusters fully separate): the
+    partitioner puts each query's neighborhood in few shards, so the two
+    centroid-nearest shards recover what scatter-gather finds in four."""
+    n, b, k, ef, deg = 10_000, 32, 10, 64, 16
+    r = np.random.default_rng(29)
+    centers = r.normal(size=(8, 16)).astype(np.float32)   # unit-spread blobs
+    data = jnp.asarray(
+        centers[r.integers(0, 8, n)] + r.normal(size=(n, 16)), jnp.float32)
+    queries = data[r.integers(0, n, b)] + 0.1 * jnp.asarray(
+        r.normal(size=(b, 16)), jnp.float32)
+    gt = evallib.ground_truth(data, queries, k)
+    adj, _ = knng.build_knng(data, deg)
+    base = search.knn_search(adj, data, queries, k, ef, 0)
+    rec_base = evallib.recall_at_k(base.pool_ids, gt)
+    assert rec_base > 0.9          # the baseline itself must be healthy
+    sg = graph.partition(data, 4, assignment="kmeans", degree=deg)
+    res = search.sharded_knn_search(sg, queries, k, ef, routed_shards=2)
+    rec = evallib.recall_at_k(res.pool_ids, gt)
+    assert rec >= rec_base - 0.01, (rec, rec_base)
