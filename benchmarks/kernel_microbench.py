@@ -6,8 +6,10 @@ by the CI smoke lane, not timed here).
 
 The search-scaling bench sweeps n ∈ {10k, 100k, 1M synthetic} × visited
 impls × W ∈ {1, 4}, the mesh-partitioned serving profile at
-shards ∈ {1, 4} (DESIGN.md §11), and the query-routed sweep S=4 ×
-p ∈ {1, 2} over a kmeans partition (DESIGN.md §13), and audits the traced
+shards ∈ {1, 4} (DESIGN.md §11), the query-routed sweep S=4 × p ∈ {1, 2}
+over a kmeans partition (DESIGN.md §13), and the degraded-mode sweep
+(0 vs 1 dead shards × scatter-gather/routed, DESIGN.md §14), and audits
+the traced
 jaxpr: in hash mode (and in the sharded path at S > 1) no intermediate
 array may carry a corpus-sized dimension — i.e. no (b, n) / (b, m, n)
 state is ever materialized — which is the property that makes million-key
@@ -204,6 +206,38 @@ def search_scaling_rows(sizes=(10_000, 100_000, 1_000_000), *,
                          num_shards=sr, routed_shards=p, assign="kmeans",
                          ef=ef, k=k, batch=b, degree=deg,
                          state_bytes=b * p * slots * 4)))
+        # Degraded-mode sweep (DESIGN.md §14): the same kmeans partition
+        # with 0 vs 1 dead shards, on both execution strategies.  The
+        # dead=1 rows record what serving actually costs and returns while
+        # routing around a failed shard — qps should rise (less work) and
+        # recall fall by roughly the dead shard's ground-truth share
+        # (tests/test_resilience.py pins the bound); the dead=0 rows are
+        # the in-family baselines timed in the same interleaved rounds.
+        # The mask comes from the same ShardHealth harness the chaos lane
+        # drives, so bench rows and guarding tests inject identical state.
+        from repro.serve import resilience
+        health = resilience.ShardHealth.fresh(sr)
+        health.kill(0)
+        for dead, mask in ((0, None), (1, health.mask())):
+            for strat, skw in (("scatter_gather", {}),
+                               ("routed", {"routed_shards": 2})):
+                def f(mask=mask, skw=skw, q=queries):
+                    return search.sharded_knn_search(
+                        sgk, q, k, ef, visited_impl="hash", expand_width=4,
+                        shard_mask=mask, **skw)
+                live = sr - dead
+                sb = (b * skw["routed_shards"] * slots * 4 if skw
+                      else b * slots * 4 * live)
+                cfgs.append(dict(
+                    name=(f"search_scaling/degraded/{strat}/dead={dead}"
+                          f"/n={n}"), fn=f,
+                    recall_fn=functools.partial(f, q=rq),
+                    rec=dict(path="degraded", strategy=strat,
+                             dead_shards=dead, n=n, impl="hash",
+                             expand_width=4, num_shards=sr, assign="kmeans",
+                             routed_shards=skw.get("routed_shards"),
+                             ef=ef, k=k, batch=b, degree=deg,
+                             state_bytes=sb)))
         timed = _time_interleaved([c["fn"] for c in cfgs], reps=reps,
                                   prime=True)
         for cfg, (sec, res) in zip(cfgs, timed):
@@ -242,7 +276,11 @@ def write_bench_json(records: list[dict], *, quick: bool = False) -> None:
                     "PR 7 also primed the timing rounds (see "
                     "common.time_interleaved): qps is steady-state "
                     "repeated-query cost, not follow-the-neighbor cache "
-                    "state",
+                    "state. PR 8 added the degraded-mode rows "
+                    "(path=degraded): recall there is against the FULL "
+                    "ground truth, so dead=1 rows are expected to sit "
+                    "below their dead=0 baselines by about the dead "
+                    "shard's ground-truth share",
         "timing": {"policy": "primed-interleaved-min-of-reps",
                    "noise": "host wall time is +/-80% under load; per-n "
                             "config sets share timing rounds and report "

@@ -482,7 +482,23 @@ def partition(data: jax.Array, num_shards: int, *,
                       entries=jnp.asarray(entries, jnp.int32),
                       counts=jnp.asarray(counts, jnp.int32),
                       centroids=cents, flat_ids=flat)
-    mesh = mesh or sharding_lib.search_mesh(num_shards)
+    return place_sharded(sg, mesh=mesh)
+
+
+def place_sharded(sg: ShardedGraph, mesh=None) -> ShardedGraph:
+    """Commit a ShardedGraph's arrays onto the ``"shard"`` mesh.
+
+    The one ``device_put`` of the sharded-search lifecycle — ``partition``
+    calls it at build time, and ``serve.resilience.load_index`` calls it
+    when restoring a snapshot, so a restored index gets the same resident
+    layout (and hence the same zero-reshard dispatch) as a freshly built
+    one.  Default mesh: ``distributed.sharding.search_mesh(num_shards)``.
+    """
+    from jax.sharding import NamedSharding, PartitionSpec
+
+    from repro.distributed import sharding as sharding_lib
+
+    mesh = mesh or sharding_lib.search_mesh(sg.num_shards)
     return jax.device_put(sg, NamedSharding(mesh, PartitionSpec("shard")))
 
 

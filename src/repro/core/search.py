@@ -63,13 +63,14 @@ shapes so every device only searches queries routed to it.
 from __future__ import annotations
 
 import functools
+import warnings
 from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 from jax.experimental.shard_map import shard_map
-from jax.sharding import NamedSharding, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.core import graph as graph_lib
 from repro.core import hashset
@@ -467,9 +468,9 @@ def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
 # Mesh-partitioned scatter-gather search (DESIGN.md §11).
 # ---------------------------------------------------------------------------
 
-def _shard_search_body(graph_ids, data, global_ids, entries, queries,
-                       row_mask, *, ef, max_hops, metric, visited_impl,
-                       hash_slots, expand_width):
+def _shard_search_body(graph_ids, data, global_ids, entries, shard_mask,
+                       queries, row_mask, *, ef, max_hops, metric,
+                       visited_impl, hash_slots, expand_width):
     """Search every shard of one mesh slot's block; merge its pools locally.
 
     Runs inside ``shard_map``: arguments carry this slot's ``s_loc``
@@ -482,6 +483,13 @@ def _shard_search_body(graph_ids, data, global_ids, entries, queries,
     meaningless outside its shard), then folded left-to-right in shard
     order through the rank merge; counters psum over the mesh so every
     slot returns the global totals.
+
+    ``shard_mask`` (bool[s_loc], DESIGN.md §14) is this slot's view of the
+    shard liveness mask: a dead shard searches with an all-False row mask,
+    which is beam_search's zero-work state — its pool comes back all
+    INVALID/inf (rank-merging it is a no-op), its counters are 0 (so the
+    psum'd totals count live shards only), and its hop count is 0 (so
+    pmax reflects the slowest *live* shard).
     """
     s_loc = graph_ids.shape[0]
     b = queries.shape[0]
@@ -491,7 +499,8 @@ def _shard_search_body(graph_ids, data, global_ids, entries, queries,
     for s in range(s_loc):
         ep = jnp.broadcast_to(entries[s].astype(jnp.int32), (b,))[:, None]
         res = beam_search(
-            graph_ids[s][None], data[s], queries, qids, row_mask,
+            graph_ids[s][None], data[s], queries, qids,
+            row_mask & shard_mask[s],
             jnp.array([ef], jnp.int32), ep,
             ef_max=ef, max_hops=max_hops, share_cache=False, metric=metric,
             visited_impl=visited_impl, hash_slots=hash_slots,
@@ -524,14 +533,17 @@ def _sharded_search_fn(mesh, *, k, ef, max_hops, metric, visited_impl,
         expand_width=expand_width)
     sharded = shard_map(
         body, mesh=mesh,
-        in_specs=(P("shard"), P("shard"), P("shard"), P("shard"), P(), P()),
+        in_specs=(P("shard"), P("shard"), P("shard"), P("shard"),
+                  P("shard"), P(), P()),
         out_specs=(P("shard"), P("shard"), P(), P(), P()),
         check_rep=False)
 
     @jax.jit
-    def run(graph_ids, data, global_ids, entries, queries, row_mask):
+    def run(graph_ids, data, global_ids, entries, shard_mask, queries,
+            row_mask):
         blocks_i, blocks_d, n_fresh, n_comp, hops = sharded(
-            graph_ids, data, global_ids, entries, queries, row_mask)
+            graph_ids, data, global_ids, entries, shard_mask, queries,
+            row_mask)
         # Fold the per-slot pools in slot order: slots hold contiguous
         # shard blocks, and each block was itself folded in shard order, so
         # the tie precedence is globally (shard, pool rank) — identical to
@@ -685,8 +697,8 @@ def _fused_routed_search_fn(*, k, ef, max_hops, metric, visited_impl,
     met = metric_lib.resolve(metric)
 
     @jax.jit
-    def run(flat_ids, data, global_ids, entries, centroids, queries,
-            row_mask):
+    def run(flat_ids, data, global_ids, entries, centroids, shard_mask,
+            queries, row_mask):
         b = queries.shape[0]
         n_s, d = data.shape[1], data.shape[2]
         flat_data = data.reshape(-1, d)                # contiguous: no copy
@@ -694,6 +706,11 @@ def _fused_routed_search_fn(*, k, ef, max_hops, metric, visited_impl,
         qprep = met.prepare(queries)
         scores = metric_lib.kernel_distance(
             qprep[:, None, :], centroids[None, :, :], met.kernel)
+        # Dead shards score +inf, so route_topk never selects one while
+        # p <= live count (the caller clamps; DESIGN.md §14).  All-True
+        # masks leave scores bit-unchanged — the healthy path stays
+        # identical to the unmasked program.
+        scores = jnp.where(shard_mask[None, :], scores, jnp.inf)
         routed = route_topk(scores, p)                 # (b, p) ascending
         p_ = routed.shape[1]
         # row r = (query r // p, routed shard r % p), ascending shard order
@@ -730,6 +747,7 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
                        max_hops: int | None = None,
                        row_mask: jax.Array | None = None,
                        routed_shards: int | None = None,
+                       shard_mask=None,
                        mesh=None) -> SearchResult:
     """Scatter-gather k-ANNS over a mesh-partitioned corpus (DESIGN.md §11).
 
@@ -765,6 +783,17 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
     routes every query to every shard — the scatter-gather decomposition
     exactly — and dispatches the scatter-gather program itself, so it is
     bit-identical to ``routed_shards=None`` by construction.
+
+    ``shard_mask`` (bool[S], DESIGN.md §14) marks live shards for
+    degraded-mode serving: dead shards are excluded from BOTH routing
+    (their centroid scores mask to +inf so ``route_topk`` never picks
+    them) and the merge (their scatter-gather pools search under an
+    all-False row mask, returning INVALID/inf that rank-merge as no-ops),
+    and the psum'd counters count live-shard work only.  An all-False
+    mask raises (no live shard can answer); ``routed_shards`` above the
+    live count clamps down with a warning.  ``shard_mask=None`` (and any
+    all-True mask) is the healthy path, bit-identical to not having the
+    parameter.
     """
     if k > ef:
         raise ValueError(
@@ -785,6 +814,30 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
                 f"instead of validity), so a wrong-dtype mask would search "
                 f"padding rows; pass a bool array")
     num_shards = sharded_graph.num_shards
+    import numpy as np       # host-side mask validation + routing below
+    if shard_mask is not None:
+        shard_mask = np.asarray(shard_mask)
+        if shard_mask.dtype != np.bool_:
+            raise ValueError(
+                f"shard_mask dtype {shard_mask.dtype} must be bool: an "
+                f"integer mask would silently cast inside the search; pass "
+                f"a bool array (True = shard alive)")
+        if shard_mask.shape != (num_shards,):
+            raise ValueError(
+                f"shard_mask shape {shard_mask.shape} must be "
+                f"({num_shards},): one liveness flag per shard of this "
+                f"ShardedGraph")
+        if bool(shard_mask.all()):
+            shard_mask = None           # healthy: identical program + args
+        elif not bool(shard_mask.any()):
+            raise ValueError(
+                f"shard_mask is all-False: every one of the {num_shards} "
+                f"shards is marked dead, so no shard can answer the query "
+                f"— an all-INVALID pool would be silently softmaxed by "
+                f"retrieval attention.  Refusing to search; restore at "
+                f"least one shard (ShardHealth.revive) or swap in a "
+                f"snapshot (serve.resilience)")
+    n_live = int(shard_mask.sum()) if shard_mask is not None else num_shards
     if routed_shards is not None:
         p = int(routed_shards)
         if not 1 <= p <= num_shards:
@@ -792,6 +845,13 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
                 f"routed_shards={routed_shards} must be in [1, "
                 f"num_shards={num_shards}]: each query searches its top-p "
                 f"shards by centroid distance")
+        if p > n_live:
+            warnings.warn(
+                f"routed_shards={p} exceeds the {n_live} live shards "
+                f"(shard_mask kills {num_shards - n_live}); clamping to "
+                f"{n_live} — every live shard is searched (DESIGN.md §14)",
+                stacklevel=2)
+            p = n_live
         if p == num_shards:
             routed_shards = None       # degenerate: exact scatter-gather
         elif sharded_graph.centroids is None:
@@ -799,19 +859,20 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
                 "routed_shards needs per-shard centroids; this ShardedGraph "
                 "has none — rebuild it with graph.partition (any "
                 "assignment), which stores them")
+        else:
+            routed_shards = p
     b = queries.shape[0]
     if mesh is None:
-        # default to the mesh the graph was placed on (graph.partition
-        # commits the arrays along "shard" at build time), so the jit'd
-        # program consumes the resident layout with no per-call reshard;
-        # an explicit mesh must match that placement (jax raises otherwise)
-        sh = getattr(sharded_graph.ids, "sharding", None)
-        if isinstance(sh, NamedSharding) and "shard" in sh.mesh.shape:
-            mesh = sh.mesh
-        else:
-            mesh = sharding_lib.search_mesh(num_shards)
+        # default to the mesh the graph was placed on (graph.place_sharded
+        # commits the arrays along "shard" at build/restore time), so the
+        # jit'd program consumes the resident layout with no per-call
+        # reshard; an explicit mesh must match that placement (jax raises
+        # otherwise)
+        mesh = sharding_lib.placement_mesh(sharded_graph.ids, num_shards)
     max_hops = max_hops or default_max_hops(ef, expand_width)
     dummy_d, dummy_has = fresh_cache(b, 1, False)
+    live = jnp.asarray(np.ones(num_shards, bool) if shard_mask is None
+                       else shard_mask)
     if routed_shards is None:
         run = _sharded_search_fn(
             mesh, k=k, ef=ef, max_hops=max_hops, metric=metric,
@@ -819,7 +880,7 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
             expand_width=expand_width)
         pool_i, pool_d, n_fresh, n_comp, hops = run(
             sharded_graph.ids, sharded_graph.data, sharded_graph.global_ids,
-            sharded_graph.entries, queries,
+            sharded_graph.entries, live, queries,
             jnp.ones((b,), bool) if row_mask is None else row_mask)
         return SearchResult(pool_i, pool_d, n_fresh, n_comp, hops,
                             dummy_d, dummy_has)
@@ -838,17 +899,22 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
         pool_i, pool_d, n_fresh, n_comp, hops = run(
             sharded_graph.flat_ids, sharded_graph.data,
             sharded_graph.global_ids, sharded_graph.entries,
-            sharded_graph.centroids, queries,
+            sharded_graph.centroids, live, queries,
             jnp.ones((b,), bool) if row_mask is None else row_mask)
         return SearchResult(pool_i, pool_d, n_fresh, n_comp, hops,
                             dummy_d, dummy_has)
 
-    import numpy as np        # host-side routing + compaction below
     met = metric_lib.resolve(metric)
     qprep = met.prepare(queries)
     scores = metric_lib.kernel_distance(
         qprep[:, None, :], sharded_graph.centroids[None, :, :], met.kernel)
-    routed = np.asarray(route_topk(scores, p))                 # (b, p) asc
+    scores = np.asarray(scores)
+    if shard_mask is not None:
+        # Host-side analogue of the fused path's in-jit masking: dead
+        # shards score +inf and p <= n_live, so they are never routed to —
+        # their blocks stay empty and contribute nothing to the psums.
+        scores = np.where(shard_mask[None, :], scores, np.inf)
+    routed = np.asarray(route_topk(jnp.asarray(scores), p))    # (b, p) asc
     rmask = (np.ones(b, bool) if row_mask is None
              else np.asarray(row_mask))
     # Compact per shard: shard s searches exactly the queries routed to it,

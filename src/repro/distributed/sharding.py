@@ -42,6 +42,20 @@ def search_mesh(num_shards: int, devices=None) -> Mesh:
                if num_shards % s == 0)
     return Mesh(np.asarray(devices[:size]), ("shard",))
 
+
+def placement_mesh(x, num_shards: int) -> Mesh:
+    """Mesh an array is already placed on, else a fresh ``search_mesh``.
+
+    Sharded-search entry points accept arrays that were ``device_put`` onto
+    a ``"shard"`` mesh at partition/restore time; reusing that mesh keeps
+    dispatch zero-copy.  Arrays with any other placement (fresh numpy,
+    single-device jnp) fall back to the default mesh for ``num_shards``.
+    """
+    sh = getattr(x, "sharding", None)
+    if isinstance(sh, NamedSharding) and "shard" in sh.mesh.shape:
+        return sh.mesh
+    return search_mesh(num_shards)
+
 # logical name -> mesh axis name (or tuple of axes)
 DEFAULT_RULES: dict[str, object] = {
     "batch": ("pod", "data"),      # data parallel over pod x data

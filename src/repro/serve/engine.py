@@ -56,6 +56,16 @@ class RetrievalKnobs:
     routed_shards: top-p shards searched per decode query (DESIGN.md §13,
                   search-time).  None = scatter-gather over all shards;
                   p < num_shards skips the rest by centroid distance.
+    deadline_ms:  per-search latency budget (DESIGN.md §14).  None (the
+                  default) disables deadline handling entirely — the
+                  healthy path stays bit-identical.  Set, it arms
+                  ``serve.resilience.LatencyGovernor``: when the EWMA of
+                  observed search latency exceeds the budget, the
+                  governor downshifts ef / routed_shards / expand_width
+                  along the degradation ladder and recovers with
+                  hysteresis once load subsides.  Consumed by the
+                  resilience layer, not passed to the search itself
+                  (``search_kwargs`` deliberately omits it).
     """
     top_k: int = 48
     ef: int = 96
@@ -66,6 +76,7 @@ class RetrievalKnobs:
     num_shards: int = 1
     assign: str = "chunked"
     routed_shards: int | None = None
+    deadline_ms: float | None = None
 
     def __post_init__(self):
         if self.top_k > self.ef:
@@ -84,6 +95,10 @@ class RetrievalKnobs:
                 f"routed_shards={self.routed_shards} must be None or in "
                 f"[1, num_shards={self.num_shards}] (search.sharded_"
                 f"knn_search routes each query to its top-p shards)")
+        if self.deadline_ms is not None and self.deadline_ms <= 0:
+            raise ValueError(
+                f"deadline_ms={self.deadline_ms} must be positive (or None "
+                f"to disable the latency governor)")
         build_lib.resolve_build_impl(self.build_impl)   # fail fast, not at build
 
     def search_kwargs(self) -> dict:
@@ -128,8 +143,52 @@ class ServeEngine:
         self._decode = jax.jit(
             lambda p, tok, cache, pos: M.decode_step(p, cfg, tok, cache, pos))
         self.greedy = greedy
+        self.retrieval = None          # ResilientSearcher (attach_retrieval)
+
+    def attach_retrieval(self, index, knobs: RetrievalKnobs | None = None,
+                         **resilience_kwargs):
+        """Wire a retrieval index into the engine behind the resilience
+        layer (serve.resilience, DESIGN.md §14): searches issued through
+        ``retrieve`` get shard-health masking, the deadline governor
+        (armed by ``knobs.deadline_ms``), and bounded dispatch retry.
+        Returns the ResilientSearcher for direct health/plan access."""
+        from repro.serve import resilience as resilience_lib
+        self.retrieval = resilience_lib.ResilientSearcher(
+            index, knobs or RetrievalKnobs(), **resilience_kwargs)
+        return self.retrieval
+
+    def retrieve(self, q, **overrides):
+        """Resilient retrieval attention for decode queries ``q``."""
+        if self.retrieval is None:
+            raise ValueError(
+                "no retrieval index attached: call attach_retrieval(index) "
+                "before retrieve()")
+        return self.retrieval.search(q, **overrides)
+
+    def swap_retrieval_index(self, new_index) -> None:
+        """Hot-swap the served retrieval index (e.g. one restored via
+        serve.resilience.load_index) without touching engine slots, KV
+        cache, or governor state."""
+        if self.retrieval is None:
+            raise ValueError(
+                "no retrieval index attached: call attach_retrieval(index) "
+                "first — swap replaces an index that is being served")
+        self.retrieval.swap_index(new_index)
 
     def submit(self, req: Request):
+        # Reject at submit time, not at admission: _admit's per-token
+        # prefill would otherwise advance pos past the KV cache's max_seq
+        # pages, silently overwriting live cache rows (the decode loop only
+        # checks pos AFTER generating, so an oversized prompt corrupts
+        # every slot sharing the cache before the overflow is noticed).
+        limit = self.max_seq - 1          # >= 1 position left to decode into
+        if len(req.prompt) > limit:
+            raise ValueError(
+                f"prompt of {len(req.prompt)} tokens exceeds the "
+                f"{limit}-token prefill capacity of this engine "
+                f"(max_seq={self.max_seq} KV pages, and decoding needs at "
+                f"least one free position); truncate the prompt or build "
+                f"the engine with a larger max_seq")
         self.queue.append(req)
 
     def _admit(self):

@@ -1,0 +1,527 @@
+"""Serving resilience: shard health, fault injection, degradation, snapshots.
+
+The serving counterpart of ``train/fault_tolerance.py`` (DESIGN.md §14).
+PR 5/7 made the corpus shard-resident across a device mesh, which turned
+one dead or slow shard into a whole-search outage; this module gives the
+serving stack the three mechanisms production systems use against that:
+
+  1. **Shard health + fault injection.**  ``ShardHealth`` tracks a
+     per-shard liveness mask and injected delays; its ``mask()`` feeds the
+     ``shard_mask`` parameter threaded through ``sharded_knn_search`` and
+     both routed execution strategies (DESIGN.md §14 has the counter and
+     merge contract).  ``FaultPlan`` is the injection harness — kill,
+     revive, delay, or corrupt a shard at a scheduled search call — usable
+     identically from tests and benches, so degraded-mode behaviour is
+     pinned, not guessed.
+
+  2. **Deadline-aware graceful degradation.**  ``LatencyGovernor`` tracks
+     an EWMA of per-call search latency against ``RetrievalKnobs``'
+     ``deadline_ms`` budget and walks a precomputed knob ladder
+     (``degradation_ladder``: halve ``ef`` toward ``top_k``, then shed
+     ``routed_shards`` toward 1, then halve ``expand_width``) — downshift
+     immediately on overload, recover one rung only after ``patience``
+     consecutive calls under ``recover_frac`` of budget (hysteresis, so a
+     noisy boundary doesn't thrash compile caches).  ``search_with_retry``
+     adds bounded retry-with-backoff for transient dispatch failures.
+
+  3. **Index snapshot / restore.**  ``save_index`` / ``load_index``
+     serialize a ``RetrievalIndex`` (sharded or not) with the
+     write-temp-then-rename idiom of ``train/checkpoint.py`` (shared
+     helpers ``atomic_write_npz`` / ``atomic_write_json``): the manifest
+     sidecar is written *after* the array archive, so a torn writer leaves
+     no manifest and the loader refuses — readers only ever see complete
+     snapshots.  Restore ``device_put``s the shards back onto the
+     ``"shard"`` mesh (``graph.place_sharded``), so a restored index
+     serves bit-identical results through the same cached programs.
+
+``ResilientSearcher`` composes all three around
+``retrieval.retrieval_attention_batched`` and is what
+``ServeEngine.attach_retrieval`` runs; ``swap_index`` hot-swaps a restored
+(or freshly rebuilt) index between calls without dropping engine state.
+This module deliberately does not import ``serve.engine`` — the engine
+imports it, never the reverse.
+"""
+from __future__ import annotations
+
+import dataclasses
+import json
+import os
+import time
+
+import jax
+import numpy as np
+
+from repro.core import graph as graph_lib
+from repro.core import vamana as vamana_lib
+from repro.serve import retrieval as retrieval_lib
+from repro.train import checkpoint as ckpt_lib
+
+SNAPSHOT_FORMAT = 1
+# Snapshot artifacts are runtime state, never repo content: tools/
+# check_repo.py rejects any tracked file matching these suffixes.
+SNAPSHOT_NPZ = ".snapshot.npz"
+SNAPSHOT_MANIFEST = ".snapshot.json"
+
+
+# ---------------------------------------------------------------------------
+# Shard health + fault injection.
+# ---------------------------------------------------------------------------
+
+@dataclasses.dataclass
+class ShardHealth:
+    """Per-shard liveness + injected-delay state for one sharded index.
+
+    ``alive`` is the authoritative liveness mask — ``mask()`` hands it to
+    ``sharded_knn_search(shard_mask=...)``, which excludes dead shards
+    from routing, merge, and counters (DESIGN.md §14).  ``delays_s``
+    models slow-but-alive shards: the searcher stalls by the worst live
+    delay per call, which is exactly how a straggling shard shows up in
+    scatter-gather latency (the merge waits for the slowest pool).
+    """
+    alive: np.ndarray            # bool[S]
+    delays_s: np.ndarray         # float64[S] injected per-call stall
+
+    @classmethod
+    def fresh(cls, num_shards: int) -> "ShardHealth":
+        return cls(alive=np.ones(num_shards, bool),
+                   delays_s=np.zeros(num_shards, np.float64))
+
+    @property
+    def num_shards(self) -> int:
+        return self.alive.shape[0]
+
+    @property
+    def n_live(self) -> int:
+        return int(self.alive.sum())
+
+    def kill(self, shard: int) -> None:
+        self.alive[shard] = False
+
+    def revive(self, shard: int) -> None:
+        self.alive[shard] = True
+        self.delays_s[shard] = 0.0
+
+    def delay(self, shard: int, seconds: float) -> None:
+        self.delays_s[shard] = float(seconds)
+
+    def mask(self) -> np.ndarray | None:
+        """``shard_mask`` argument for the search: None while all-alive
+        (the healthy path stays the bit-identical no-mask program)."""
+        return None if self.alive.all() else self.alive.copy()
+
+    def live_delay(self) -> float:
+        """Worst injected stall among live shards (the merge's critical
+        path); dead shards don't stall anyone — they are routed around."""
+        live = self.delays_s[self.alive]
+        return float(live.max()) if live.size else 0.0
+
+
+FAULT_KINDS = ("kill", "revive", "delay", "corrupt")
+
+
+@dataclasses.dataclass(frozen=True)
+class Fault:
+    """One scheduled fault: applied when the searcher reaches ``at_call``.
+
+    kind:     "kill" | "revive" | "delay" | "corrupt" (FAULT_KINDS).
+    shard:    target shard id.
+    at_call:  0-based search-call index the fault fires at.
+    seconds:  injected per-call stall ("delay" only; 0 clears).
+    rows:     adjacency rows to scramble ("corrupt" only).
+    seed:     corruption RNG seed ("corrupt" only — deterministic chaos).
+    """
+    kind: str
+    shard: int
+    at_call: int
+    seconds: float = 0.0
+    rows: int = 8
+    seed: int = 0
+
+    def __post_init__(self):
+        if self.kind not in FAULT_KINDS:
+            raise ValueError(f"fault kind {self.kind!r} not in {FAULT_KINDS}")
+
+
+@dataclasses.dataclass
+class FaultPlan:
+    """A seeded, replayable schedule of faults (the injection harness).
+
+    ``apply(call_idx, health, index)`` fires every fault scheduled at
+    ``call_idx`` against the health mask (kill/revive/delay) or the index
+    itself (corrupt — returns a REPLACEMENT index; adjacency corruption
+    must go through the functional update because device arrays are
+    immutable).  Tests and benches drive the same plan object, so a
+    degraded-mode bench row and its guarding test inject literally the
+    same failure.
+    """
+    faults: list[Fault] = dataclasses.field(default_factory=list)
+
+    def apply(self, call_idx: int, health: ShardHealth,
+              index: "retrieval_lib.RetrievalIndex | None" = None):
+        """Fire faults due at ``call_idx``; returns the (maybe new) index."""
+        for f in self.faults:
+            if f.at_call != call_idx:
+                continue
+            if not 0 <= f.shard < health.num_shards:
+                raise ValueError(
+                    f"fault targets shard {f.shard} but the index has "
+                    f"{health.num_shards} shards")
+            if f.kind == "kill":
+                health.kill(f.shard)
+            elif f.kind == "revive":
+                health.revive(f.shard)
+            elif f.kind == "delay":
+                health.delay(f.shard, f.seconds)
+            elif f.kind == "corrupt":
+                if index is None or index.shards is None:
+                    raise ValueError(
+                        "corrupt fault needs a sharded RetrievalIndex")
+                index = dataclasses.replace(
+                    index, shards=corrupt_shard(index.shards, f.shard,
+                                                rows=f.rows, seed=f.seed))
+        return index
+
+
+def corrupt_shard(sg: graph_lib.ShardedGraph, shard: int, *, rows: int = 8,
+                  seed: int = 0) -> graph_lib.ShardedGraph:
+    """Scramble ``rows`` adjacency rows of one shard (silent data damage).
+
+    Each victim row's out-neighbors are replaced with uniform-random
+    *valid local ids of the same shard* — the graph stays structurally
+    legal (no out-of-range gathers, no crash), but the navigability of the
+    damaged region is destroyed, which is the failure mode bit-rot or a
+    partial write produces in practice.  ``flat_ids`` is recomputed so
+    both execution strategies see the same damage; the result is placed
+    back onto the mesh the input lived on.  Deterministic in ``seed``.
+    """
+    ids = np.array(sg.ids)                                 # (S, n_s, Mx)
+    S, n_s, mx = ids.shape
+    if not 0 <= shard < S:
+        raise ValueError(f"shard {shard} out of range [0, {S})")
+    count = int(sg.counts[shard])
+    rng = np.random.default_rng(seed)
+    victims = rng.choice(count, size=min(rows, count), replace=False)
+    ids[shard, victims] = rng.integers(
+        0, count, size=(victims.size, mx)).astype(np.int32)
+    offs = (np.arange(S, dtype=np.int32) * n_s)[:, None, None]
+    flat = np.where(ids >= 0, ids + offs, graph_lib.INVALID).reshape(-1, mx)
+    mesh = getattr(getattr(sg.ids, "sharding", None), "mesh", None)
+    return graph_lib.place_sharded(
+        dataclasses.replace(sg, ids=ids, flat_ids=flat), mesh=mesh)
+
+
+# ---------------------------------------------------------------------------
+# Deadline-aware graceful degradation.
+# ---------------------------------------------------------------------------
+
+def degradation_ladder(base) -> list:
+    """Precompute the stepwise knob downshifts from ``base`` knobs.
+
+    Rung 0 is ``base`` untouched (the healthy program — bit-identical
+    serving while the budget holds).  Each further rung sheds work in
+    recall-cheapest-first order (DESIGN.md §14):
+
+      1. halve ``ef`` until it floors at ``top_k`` (pool depth is the
+         biggest #dist lever and the shallowest recall cliff),
+      2. shed ``routed_shards`` toward 1 (sharded indexes only; each halving
+         cuts distance work ~2x at the clustered-corpus recall cost §13
+         bounds),
+      3. halve ``expand_width`` to 1 (last: it trades latency per hop, not
+         work, so it only helps once pools are already minimal).
+
+    Rungs are full knob objects (``dataclasses.replace``), so every rung
+    hits an lru-cached search program after its first compile — the ladder
+    is a set of precompilable operating points, not a continuous dial.
+    """
+    ladder = [base]
+    cur = base
+    while cur.ef > base.top_k:
+        cur = dataclasses.replace(cur, ef=max(base.top_k, cur.ef // 2))
+        ladder.append(cur)
+    if cur.num_shards > 1:
+        p = cur.routed_shards or cur.num_shards
+        while p > 1:
+            p = max(1, p // 2)
+            cur = dataclasses.replace(cur, routed_shards=p)
+            ladder.append(cur)
+    while cur.expand_width > 1:
+        cur = dataclasses.replace(
+            cur, expand_width=max(1, cur.expand_width // 2))
+        ladder.append(cur)
+    return ladder
+
+
+class LatencyGovernor:
+    """EWMA latency vs budget -> a rung on the degradation ladder.
+
+    Downshift is immediate (one rung per over-budget observation — an
+    overloaded engine must shed now); recovery is hysteresis-guarded: one
+    rung up only after ``patience`` consecutive observations below
+    ``recover_frac`` x budget, and the patience counter resets on any
+    non-qualifying tick.  With no budget (``deadline_ms=None``) the
+    governor is inert and always returns rung 0.
+    """
+
+    def __init__(self, knobs, *, alpha: float = 0.3,
+                 recover_frac: float = 0.5, patience: int = 3):
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha={alpha} must be in (0, 1]")
+        if not 0.0 < recover_frac < 1.0:
+            raise ValueError(
+                f"recover_frac={recover_frac} must be in (0, 1): recovery "
+                f"must require real headroom below the budget, or the "
+                f"governor oscillates on the boundary")
+        self.base = knobs
+        self.ladder = degradation_ladder(knobs)
+        self.budget_s = (None if getattr(knobs, "deadline_ms", None) is None
+                         else knobs.deadline_ms / 1e3)
+        self.alpha = alpha
+        self.recover_frac = recover_frac
+        self.patience = patience
+        self.level = 0
+        self.ewma_s: float | None = None
+        self._calm = 0
+
+    @property
+    def knobs(self):
+        return self.ladder[self.level]
+
+    def observe(self, latency_s: float):
+        """Fold one search latency in; returns the knobs for the NEXT call."""
+        self.ewma_s = (latency_s if self.ewma_s is None else
+                       self.alpha * latency_s
+                       + (1.0 - self.alpha) * self.ewma_s)
+        if self.budget_s is None:
+            return self.knobs
+        if self.ewma_s > self.budget_s:
+            if self.level < len(self.ladder) - 1:
+                self.level += 1
+            self._calm = 0
+        elif self.ewma_s < self.recover_frac * self.budget_s:
+            self._calm += 1
+            if self._calm >= self.patience and self.level > 0:
+                self.level -= 1
+                self._calm = 0
+        else:
+            self._calm = 0
+        return self.knobs
+
+
+def search_with_retry(fn, *args, retries: int = 2, backoff_s: float = 0.05,
+                      retriable: tuple = (RuntimeError,), sleep=time.sleep,
+                      **kwargs):
+    """Call ``fn`` with bounded retry + exponential backoff.
+
+    Covers *transient* dispatch failure (device OOM races, interconnect
+    hiccups — they surface as ``RuntimeError`` / XlaRuntimeError from the
+    jax dispatch layer); programming errors (``ValueError`` validation)
+    are never retried.  ``retries`` is the number of RE-tries: the call
+    runs at most ``retries + 1`` times, backoff doubling each attempt.
+    The last failure re-raises unchanged.
+    """
+    if retries < 0:
+        raise ValueError(f"retries={retries} must be >= 0")
+    for attempt in range(retries + 1):
+        try:
+            return fn(*args, **kwargs)
+        except retriable:
+            if attempt == retries:
+                raise
+            sleep(backoff_s * (2 ** attempt))
+
+
+# ---------------------------------------------------------------------------
+# Index snapshot / restore.
+# ---------------------------------------------------------------------------
+
+def _snapshot_paths(snap_dir: str, tag: str) -> tuple[str, str]:
+    return (os.path.join(snap_dir, tag + SNAPSHOT_NPZ),
+            os.path.join(snap_dir, tag + SNAPSHOT_MANIFEST))
+
+
+def save_index(idx: retrieval_lib.RetrievalIndex, snap_dir: str,
+               tag: str = "index") -> str:
+    """Atomically snapshot a RetrievalIndex; returns the manifest path.
+
+    Two files in ``snap_dir``: ``<tag>.snapshot.npz`` (every array, host
+    np) and ``<tag>.snapshot.json`` (the manifest: format version, metric,
+    entry, Vamana params, shard count, build provenance, array inventory).
+    Both go through the atomic write-temp-then-rename helpers of
+    ``train/checkpoint.py``, and the manifest is written AFTER the
+    archive: a writer killed mid-snapshot leaves at worst an npz with no
+    manifest, which ``load_index`` treats as absent — the previous
+    complete snapshot (same tag) survives the overwrite untouched.
+    """
+    arrays: dict[str, np.ndarray] = {
+        "keys": np.asarray(idx.keys),
+        "values": np.asarray(idx.values),
+    }
+    if idx.graph_ids is not None:
+        arrays["graph_ids"] = np.asarray(idx.graph_ids)
+    if idx.search_keys is not None:
+        arrays["search_keys"] = np.asarray(idx.search_keys)
+    if idx.shards is not None:
+        sg = idx.shards
+        arrays["shards/ids"] = np.asarray(sg.ids)
+        arrays["shards/data"] = np.asarray(sg.data)
+        arrays["shards/global_ids"] = np.asarray(sg.global_ids)
+        arrays["shards/entries"] = np.asarray(sg.entries)
+        arrays["shards/counts"] = np.asarray(sg.counts)
+        if sg.centroids is not None:
+            arrays["shards/centroids"] = np.asarray(sg.centroids)
+        if sg.flat_ids is not None:
+            arrays["shards/flat_ids"] = np.asarray(sg.flat_ids)
+    npz_path, man_path = _snapshot_paths(snap_dir, tag)
+    ckpt_lib.atomic_write_npz(npz_path, arrays)
+    manifest = {
+        "format": SNAPSHOT_FORMAT,
+        "tag": tag,
+        "metric": idx.metric,
+        "entry": int(idx.entry),
+        "params": {"L": int(idx.params.L), "M": int(idx.params.M),
+                   "alpha": float(idx.params.alpha)},
+        "num_shards": idx.num_shards,
+        "sharded": idx.shards is not None,
+        "provenance": idx.provenance,
+        "arrays": sorted(arrays),
+    }
+    ckpt_lib.atomic_write_json(man_path, manifest)
+    return man_path
+
+
+def load_index(snap_dir: str, tag: str = "index",
+               mesh=None) -> retrieval_lib.RetrievalIndex:
+    """Restore a snapshot; sharded arrays go back onto the shard mesh.
+
+    Refuses (FileNotFoundError) when the manifest is missing — including
+    the torn-writer case where only the npz exists — and rejects unknown
+    format versions.  Sharded indexes are re-placed with
+    ``graph.place_sharded`` (default mesh: ``search_mesh(S)``), giving
+    the restored index the same resident layout as a freshly partitioned
+    one, so searches reuse the same cached programs and reproduce
+    bit-identical results (pinned by tests/test_resilience.py).
+    """
+    npz_path, man_path = _snapshot_paths(snap_dir, tag)
+    if not os.path.exists(man_path):
+        hint = (" (an orphaned .snapshot.npz exists — a writer died "
+                "mid-snapshot; the archive without its manifest is "
+                "unverifiable and is ignored)" if os.path.exists(npz_path)
+                else "")
+        raise FileNotFoundError(
+            f"no snapshot manifest {man_path}{hint}")
+    with open(man_path) as f:
+        manifest = json.load(f)
+    fmt = manifest.get("format")
+    if fmt != SNAPSHOT_FORMAT:
+        raise ValueError(
+            f"snapshot format {fmt!r} != supported {SNAPSHOT_FORMAT} "
+            f"({man_path})")
+    with np.load(npz_path) as z:
+        arrays = {k: z[k] for k in z.files}
+    missing = sorted(set(manifest["arrays"]) - set(arrays))
+    if missing:
+        raise ValueError(
+            f"snapshot {npz_path} is missing arrays {missing} the "
+            f"manifest promises — refusing a partial restore")
+    params = vamana_lib.VamanaParams(**manifest["params"])
+    shards = None
+    if manifest["sharded"]:
+        sg = graph_lib.ShardedGraph(
+            ids=arrays["shards/ids"],
+            data=arrays["shards/data"],
+            global_ids=arrays["shards/global_ids"],
+            entries=arrays["shards/entries"],
+            counts=arrays["shards/counts"],
+            centroids=arrays.get("shards/centroids"),
+            flat_ids=arrays.get("shards/flat_ids"))
+        shards = graph_lib.place_sharded(sg, mesh=mesh)
+    return retrieval_lib.RetrievalIndex(
+        graph_ids=(None if "graph_ids" not in arrays
+                   else jax.numpy.asarray(arrays["graph_ids"])),
+        keys=jax.numpy.asarray(arrays["keys"]),
+        values=jax.numpy.asarray(arrays["values"]),
+        search_keys=(None if "search_keys" not in arrays
+                     else jax.numpy.asarray(arrays["search_keys"])),
+        entry=int(manifest["entry"]),
+        params=params,
+        metric=manifest["metric"],
+        shards=shards,
+        provenance=manifest.get("provenance"))
+
+
+# ---------------------------------------------------------------------------
+# The composed degraded-mode searcher.
+# ---------------------------------------------------------------------------
+
+class ResilientSearcher:
+    """Degraded-mode front door for retrieval search (DESIGN.md §14).
+
+    Wraps ``retrieval.retrieval_attention_batched`` with, per call:
+
+      1. fire the ``FaultPlan`` faults due at this call index (chaos
+         harness — a production deployment passes ``plan=None`` and mutates
+         ``health`` from its real failure detector instead),
+      2. stall by the worst live injected delay (a slow shard bounds the
+         scatter-gather merge),
+      3. search with the governor's current knob rung and the health
+         mask, under bounded retry-with-backoff,
+      4. feed the observed wall latency back to the governor.
+
+    ``swap_index`` hot-swaps a restored or rebuilt index between calls —
+    the engine keeps its slots, cache, and governor state; only the index
+    object is replaced (crash recovery and background reindex both land
+    here).  Single-threaded by design, like ``ServeEngine``'s tick loop.
+    """
+
+    def __init__(self, index: retrieval_lib.RetrievalIndex, knobs, *,
+                 health: ShardHealth | None = None,
+                 plan: FaultPlan | None = None,
+                 retries: int = 2, backoff_s: float = 0.05,
+                 clock=time.perf_counter, sleep=time.sleep,
+                 **governor_kwargs):
+        self.index = index
+        self.health = health or ShardHealth.fresh(index.num_shards)
+        if self.health.num_shards != index.num_shards:
+            raise ValueError(
+                f"health tracks {self.health.num_shards} shards but the "
+                f"index has {index.num_shards}")
+        self.plan = plan
+        self.governor = LatencyGovernor(knobs, **governor_kwargs)
+        self.retries = retries
+        self.backoff_s = backoff_s
+        self.clock = clock
+        self.sleep = sleep
+        self.calls = 0
+
+    @property
+    def knobs(self):
+        """The knob rung the next search will run with."""
+        return self.governor.knobs
+
+    def swap_index(self, new_index: retrieval_lib.RetrievalIndex) -> None:
+        """Hot-swap the served index (snapshot restore / background
+        reindex).  Health resets to all-alive for the new index's shard
+        count; governor state (EWMA, rung) carries over — load pressure
+        does not vanish because the index changed."""
+        self.health = ShardHealth.fresh(new_index.num_shards)
+        self.index = new_index
+
+    def search(self, q, **overrides):
+        """One resilient search; returns (attention out, SearchResult)."""
+        if self.plan is not None:
+            self.index = self.plan.apply(self.calls, self.health, self.index)
+        self.calls += 1
+        stall = self.health.live_delay()
+        if stall > 0.0:
+            self.sleep(stall)
+        knobs = self.governor.knobs
+        kwargs = dict(knobs.batched_kwargs(),
+                      shard_mask=self.health.mask(), **overrides)
+        t0 = self.clock()
+        out, res = search_with_retry(
+            retrieval_lib.retrieval_attention_batched, self.index, q,
+            retries=self.retries, backoff_s=self.backoff_s,
+            sleep=self.sleep, **kwargs)
+        jax.block_until_ready(res.pool_ids)
+        self.governor.observe(self.clock() - t0 + stall)
+        return out, res

@@ -80,6 +80,10 @@ class RetrievalIndex:
     params: vamana_lib.VamanaParams
     metric: str                # public metric name ("ip" | "cosine" | "l2")
     shards: graph_lib.ShardedGraph | None = None   # mesh-partitioned index
+    provenance: dict | None = None   # build knobs (build_impl/assign/seed/
+                                     # batch_size) — recorded by build_index
+                                     # so snapshot manifests can say how the
+                                     # index was built (DESIGN.md §14)
 
     @property
     def kernel(self) -> str:
@@ -118,6 +122,8 @@ def build_index(keys: jax.Array, values: jax.Array,
     """
     met = metric_lib.resolve(metric)
     search_keys = met.prepare(keys)
+    prov = {"build_impl": build_impl, "assign": assign, "seed": seed,
+            "batch_size": batch_size, "num_shards": num_shards}
     if num_shards == 1:
         res = vamana_lib.build_vamana(search_keys, params, seed=seed,
                                       batch_size=batch_size,
@@ -126,7 +132,7 @@ def build_index(keys: jax.Array, values: jax.Array,
         return RetrievalIndex(graph_ids=res.g.ids[0], keys=keys,
                               values=values, search_keys=search_keys,
                               entry=res.entry, params=params,
-                              metric=met.name)
+                              metric=met.name, provenance=prov)
 
     def shard_builder(local):
         res = vamana_lib.build_vamana(local, params, seed=seed,
@@ -141,7 +147,8 @@ def build_index(keys: jax.Array, values: jax.Array,
     entry = int(shards.global_ids[0][int(shards.entries[0])])
     return RetrievalIndex(graph_ids=None, keys=keys, values=values,
                           search_keys=None, entry=entry,
-                          params=params, metric=met.name, shards=shards)
+                          params=params, metric=met.name, shards=shards,
+                          provenance=prov)
 
 
 def _attend(idx: RetrievalIndex, q: jax.Array, pool_ids: jax.Array,
@@ -162,19 +169,25 @@ def _attend(idx: RetrievalIndex, q: jax.Array, pool_ids: jax.Array,
 def _search_index(idx: RetrievalIndex, qs: jax.Array, top_k: int, ef: int,
                   visited_impl: str, expand_width: int,
                   row_mask: jax.Array | None = None,
-                  routed_shards: int | None = None
-                  ) -> search_lib.SearchResult:
+                  routed_shards: int | None = None,
+                  shard_mask=None) -> search_lib.SearchResult:
     """Route one prepared-query batch to the un- or mesh-sharded search."""
     if idx.shards is not None:
         return search_lib.sharded_knn_search(
             idx.shards, qs, top_k, ef, metric=idx.kernel,
             visited_impl=visited_impl, expand_width=expand_width,
-            row_mask=row_mask, routed_shards=routed_shards)
+            row_mask=row_mask, routed_shards=routed_shards,
+            shard_mask=shard_mask)
     if routed_shards not in (None, 1):
         raise ValueError(
             f"routed_shards={routed_shards} on an unsharded index: routing "
             f"selects among shards, so build the index with num_shards > 1 "
             f"(DESIGN.md §13)")
+    if shard_mask is not None:
+        raise ValueError(
+            "shard_mask on an unsharded index: liveness masking selects "
+            "among shards, so build the index with num_shards > 1 "
+            "(DESIGN.md §14)")
     return search_lib.knn_search(
         idx.graph_ids, idx.search_keys, qs, top_k, ef, idx.entry,
         metric=idx.kernel, visited_impl=visited_impl,
@@ -185,7 +198,8 @@ def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
                         ef: int, scale: float | None = None,
                         visited_impl: str = "hash",
                         expand_width: int = DEFAULT_EXPAND_WIDTH,
-                        routed_shards: int | None = None
+                        routed_shards: int | None = None,
+                        shard_mask=None,
                         ) -> tuple[jax.Array, search_lib.SearchResult]:
     """Approximate attention for decode queries q: (B, dh).
 
@@ -200,11 +214,13 @@ def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
     ``routed_shards=p`` searches only each query's top-p shards by
     centroid distance (DESIGN.md §13 — pair with
     ``build_index(assign="kmeans")`` for shards worth routing between).
+    ``shard_mask`` (bool[S]) excludes dead shards from routing and merge —
+    degraded-mode serving, DESIGN.md §14 (serve.resilience owns the mask).
     """
     met = metric_lib.resolve(idx.metric)
     qs = met.prepare(q)            # per-call cost is (B, dh) — keys untouched
     res = _search_index(idx, qs, top_k, ef, visited_impl, expand_width,
-                        routed_shards=routed_shards)
+                        routed_shards=routed_shards, shard_mask=shard_mask)
     return _attend(idx, q, res.pool_ids, scale), res
 
 
@@ -214,6 +230,7 @@ def retrieval_attention_batched(
     visited_impl: str = "hash",
     expand_width: int = DEFAULT_EXPAND_WIDTH,
     routed_shards: int | None = None,
+    shard_mask=None,
 ) -> tuple[jax.Array, search_lib.SearchResult]:
     """Query-blocked retrieval attention for serving-sized batches.
 
@@ -239,7 +256,8 @@ def retrieval_attention_batched(
             qs_all[off:off + nrows])
         res = _search_index(idx, qb, top_k, ef, visited_impl, expand_width,
                             row_mask=jnp.arange(bs) < nrows,
-                            routed_shards=routed_shards)
+                            routed_shards=routed_shards,
+                            shard_mask=shard_mask)
         # accumulate device scalars — no host sync inside the dispatch loop
         pool_ids.append(res.pool_ids[:nrows])
         pool_dist.append(res.pool_dist[:nrows])

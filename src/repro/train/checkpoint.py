@@ -12,7 +12,6 @@ import concurrent.futures as cf
 import json
 import os
 import re
-import shutil
 import tempfile
 
 import jax
@@ -20,6 +19,38 @@ import numpy as np
 
 _SEP = "/"
 _executor = cf.ThreadPoolExecutor(max_workers=1)
+
+
+def atomic_write_npz(path: str, arrays: dict[str, np.ndarray]) -> None:
+    """Write an npz archive via temp-file + atomic rename.
+
+    The write-temp-then-rename idiom the training checkpoints rely on,
+    factored out so other durable artifacts (serving index snapshots,
+    serve/resilience.py) share one implementation: a preempted writer
+    never leaves a torn file at ``path`` — readers see the old complete
+    archive or the new one, nothing in between.
+    """
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
+    fd, tmp = tempfile.mkstemp(dir=d, suffix=".tmp")
+    os.close(fd)
+    try:
+        with open(tmp, "wb") as fh:         # handle: savez won't add .npz
+            np.savez(fh, **arrays)
+        os.replace(tmp, path)               # atomic on POSIX
+    finally:
+        if os.path.exists(tmp):
+            os.unlink(tmp)
+
+
+def atomic_write_json(path: str, obj) -> None:
+    """Atomic JSON sidecar write (same contract as atomic_write_npz)."""
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
+    tmp = path + ".tmp"
+    with open(tmp, "w") as f:
+        json.dump(obj, f, indent=1, sort_keys=True)
+    os.replace(tmp, path)
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -44,20 +75,9 @@ def save(ckpt_dir: str, step: int, tree, *, keep: int = 3,
     os.makedirs(ckpt_dir, exist_ok=True)
     flat = _flatten(tree)
     final = os.path.join(ckpt_dir, f"step_{step:08d}.npz")
-    fd, tmp = tempfile.mkstemp(dir=ckpt_dir, suffix=".tmp")
-    os.close(fd)
-    try:
-        with open(tmp, "wb") as fh:         # handle: savez won't add .npz
-            np.savez(fh, **flat)
-        os.replace(tmp, final)              # atomic on POSIX
-    finally:
-        if os.path.exists(tmp):
-            os.unlink(tmp)
+    atomic_write_npz(final, flat)
     meta = {"step": step, "keys": sorted(flat), **(extra or {})}
-    mtmp = final + ".meta.tmp"
-    with open(mtmp, "w") as f:
-        json.dump(meta, f)
-    os.replace(mtmp, final + ".meta")
+    atomic_write_json(final + ".meta", meta)
     _retain(ckpt_dir, keep)
     return final
 

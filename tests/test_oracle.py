@@ -402,6 +402,168 @@ def test_routed_truncation_matches_k_prefix():
                                   "dense")
 
 
+# ---------------------------------------------------------------------------
+# Masked-routing oracle (DESIGN.md §14): dead shards are excluded from BOTH
+# routing (centroid scores -> +inf) and the merge (their pools never enter
+# the fold), and counters total live-shard work only — the semantics
+# sharded_knn_search(shard_mask=...) must match on every execution strategy.
+# ---------------------------------------------------------------------------
+
+def oracle_masked_search(sg_np, q, k, ef, *, shard_mask, p=None,
+                         metric="l2", expand_width=1):
+    """Degraded-mode reference for one query: search live shards only.
+
+    ``p=None`` is masked scatter-gather: serial fold over the live shards
+    in ascending id order.  ``p`` set is masked routing: dead shards score
+    +inf (never selected while p <= live count; the caller-facing clamp is
+    applied here too), then the usual stable top-p + ascending fold.
+    Returns (ids int32[k], dist f32[k], n_dist, hops).
+    """
+    shard_mask = np.asarray(shard_mask, bool)
+    live = np.flatnonzero(shard_mask)
+    assert live.size, "oracle requires >= 1 live shard (the search raises)"
+    if p is None:
+        routed = live
+    else:
+        scores = _np_route_scores(q, sg_np["centroids"], metric)
+        scores = np.where(shard_mask, scores, np.inf)
+        routed = oracle_route(scores, min(int(p), live.size))
+    pool = []
+    n_dist = 0
+    hops = 0
+    for s in routed:
+        ids, dist, nd, hp = oracle_search(
+            sg_np["ids"][s], sg_np["data"][s], q, ef,
+            int(sg_np["entries"][s]), metric=metric,
+            expand_width=expand_width)
+        cands = [(float(dist[j]), int(sg_np["global_ids"][s][ids[j]]))
+                 for j in range(ef) if ids[j] != INVALID]
+        pool = sorted(pool + cands, key=lambda e: e[0])[:ef]
+        n_dist += nd
+        hops = max(hops, hp)
+    out_ids = np.full(k, INVALID, np.int32)
+    out_dist = np.full(k, np.inf, np.float32)
+    for j, e in enumerate(pool[:k]):
+        out_dist[j], out_ids[j] = e
+    return out_ids, out_dist, n_dist, hops
+
+
+def _assert_masked_matches_oracle(sg, sg_np, queries, k, ef, W, p, mask,
+                                  metric, impl, mesh=None):
+    res = search.sharded_knn_search(
+        sg, jnp.asarray(queries), k, ef, metric=metric, visited_impl=impl,
+        expand_width=W, routed_shards=p, shard_mask=mask, mesh=mesh)
+    got_ids = np.asarray(res.pool_ids)
+    got_dist = np.asarray(res.pool_dist)
+    total_dist = 0
+    max_hops = 0
+    for qi in range(queries.shape[0]):
+        ids, dist, nd, hops = oracle_masked_search(
+            sg_np, queries[qi], k, ef, shard_mask=mask, p=p, metric=metric,
+            expand_width=W)
+        np.testing.assert_array_equal(
+            got_ids[qi], ids,
+            err_msg=f"masked pool diverged from masked oracle (query {qi}, "
+                    f"metric={metric}, impl={impl}, W={W}, p={p}, "
+                    f"mask={mask.tolist()})")
+        np.testing.assert_allclose(got_dist[qi], dist, rtol=1e-5, atol=1e-5)
+        total_dist += nd
+        max_hops = max(max_hops, hops)
+    # the §14 counter contract: totals count LIVE-shard work only (a dead
+    # shard's all-False row mask does zero work before the psum)
+    assert int(res.n_computed) == total_dist, (int(res.n_computed),
+                                               total_dist)
+    assert int(res.n_fresh) == total_dist
+    assert int(res.hops) == max_hops, (int(res.hops), max_hops)
+
+
+MASKS = [np.array(m) for m in
+         ([True, False, True], [False, True, True], [True, True, False])]
+
+
+@pytest.mark.parametrize("impl", IMPLS)
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), mask_i=st.integers(0, 2))
+def test_masked_scatter_gather_matches_oracle(impl, seed, mask_i):
+    sg, sg_np, queries = _routed_case(seed)
+    _assert_masked_matches_oracle(sg, sg_np, queries, 8, 8, 2, None,
+                                  MASKS[mask_i], "l2", impl)
+
+
+@pytest.mark.parametrize("metric", METRICS)
+@settings(max_examples=4, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), mask_i=st.integers(0, 2))
+def test_masked_routed_search_matches_oracle(metric, seed, mask_i):
+    """Host-routed (mesh) strategy under a mask: dead shards excluded
+    from routing and merge, counters live-only."""
+    sg, sg_np, queries = _routed_case(seed)
+    _assert_masked_matches_oracle(sg, sg_np, queries, 8, 8, 2, 1,
+                                  MASKS[mask_i], metric, "dense")
+
+
+def test_masked_fused_routed_matches_oracle():
+    """The packed single-dispatch strategy (flat-graph, in-jit routing)
+    under a mask must match the same masked oracle — forced by a 1-device
+    mesh the way test_sharded_search pins the healthy fused path."""
+    import jax as _jax
+    from repro.distributed import sharding as sharding_lib
+    sg, sg_np, queries = _routed_case(17)
+    mesh = sharding_lib.search_mesh(S_ROUTE, devices=_jax.devices()[:1])
+    _assert_masked_matches_oracle(sg, sg_np, queries, 8, 8, 2, 1,
+                                  MASKS[0], "l2", "dense", mesh=mesh)
+
+
+def test_masked_clamps_routed_shards_to_live():
+    """p > live-shard count clamps (with a warning) to searching every
+    live shard — same pools as the masked scatter-gather oracle."""
+    sg, sg_np, queries = _routed_case(19)
+    mask = MASKS[0]                                  # 2 live of 3
+    with pytest.warns(UserWarning, match="clamping"):
+        res = search.sharded_knn_search(
+            sg, jnp.asarray(queries), 8, 8, metric="l2",
+            visited_impl="dense", expand_width=2, routed_shards=3,
+            shard_mask=mask)
+    for qi in range(queries.shape[0]):
+        ids, dist, _, _ = oracle_masked_search(
+            sg_np, queries[qi], 8, 8, shard_mask=mask, p=2, metric="l2",
+            expand_width=2)
+        np.testing.assert_array_equal(np.asarray(res.pool_ids)[qi], ids)
+
+
+def leaky_shard_search_body(graph_ids, data, global_ids, entries,
+                            shard_mask, queries, row_mask, **kw):
+    """The seeded §14 mutation: a merge that LEAKS dead shards — the body
+    ignores the liveness mask, so every shard's pool (and counters) enter
+    the fold as if all shards were alive."""
+    return search._shard_search_body_orig(
+        graph_ids, data, global_ids, entries,
+        jnp.ones_like(shard_mask), queries, row_mask, **kw)
+
+
+def test_oracle_catches_dead_shard_leak():
+    """Acceptance gate: the masked suite must FAIL on a merge that leaks a
+    dead shard's pool.  Queries are drawn near corpus points, so the dead
+    shard (kmeans: the one owning those points for some query) holds
+    top-pool entries for at least one query — leaking it changes pools,
+    and the counter contract breaks for every query."""
+    sg, sg_np, queries = _routed_case(23)
+    mask = MASKS[0]
+    # sanity: the healthy masked path passes on this exact workload
+    _assert_masked_matches_oracle(sg, sg_np, queries, 8, 8, 2, None, mask,
+                                  "l2", "dense")
+    search._shard_search_body_orig = search._shard_search_body
+    search._shard_search_body = leaky_shard_search_body
+    search._sharded_search_fn.cache_clear()
+    try:
+        with pytest.raises(AssertionError):
+            _assert_masked_matches_oracle(sg, sg_np, queries, 8, 8, 2,
+                                          None, mask, "l2", "dense")
+    finally:
+        search._shard_search_body = search._shard_search_body_orig
+        del search._shard_search_body_orig
+        search._sharded_search_fn.cache_clear()
+
+
 def flipped_route_topk(scores, p):
     """The seeded router mutation: equal centroid distances route to the
     HIGHER shard id (stable argsort over the column-reversed scores,

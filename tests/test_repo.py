@@ -1,5 +1,6 @@
-"""Repo hygiene (tools/check_repo.py): compiled-Python artifacts must
-never be tracked — .gitignore can't evict a file that was force-added."""
+"""Repo hygiene (tools/check_repo.py): compiled-Python artifacts and
+runtime index snapshots (serve/resilience.py) must never be tracked —
+.gitignore can't evict a file that was force-added."""
 import importlib.util
 import pathlib
 
@@ -19,9 +20,21 @@ _spec.loader.exec_module(check_repo)
     ("src/repro/core/build.py", False),
     ("docs/__pycache__.md", False),          # only real path segments count
     ("notes/pycache.txt", False),
+    ("snaps/index.snapshot.npz", True),      # runtime serving state
+    ("index.snapshot.json", True),
+    ("data/corpus.npz", False),              # plain npz data is fine
+    ("docs/snapshot.md", False),
 ])
 def test_is_artifact(path, bad):
     assert check_repo.is_artifact(path) is bad
+
+
+def test_snapshot_suffixes_match_resilience():
+    """The tool's hardcoded suffixes must track serve/resilience.py's
+    constants (the tool can't import repro — it runs dependency-free)."""
+    from repro.serve import resilience
+    assert set(check_repo.SNAPSHOT_SUFFIXES) == {
+        resilience.SNAPSHOT_NPZ, resilience.SNAPSHOT_MANIFEST}
 
 
 def test_no_tracked_bytecode():

@@ -210,3 +210,63 @@ def test_retrieval_index_tunable_by_fastpgt():
                                            ef=16)
     assert out.shape == (4, 8)
     assert bool(jnp.all(jnp.isfinite(out)))
+
+
+def test_submit_rejects_oversized_prompt(tiny_model):
+    """Prompts longer than max_seq-1 must fail at submit, not corrupt the
+    KV cache during _admit's per-token prefill (regression: the overflow
+    used to wrap pos past the cache pages and overwrite live slots)."""
+    params, cfg = tiny_model
+    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=16)
+    with pytest.raises(ValueError, match="prefill capacity"):
+        eng.submit(Request(rid=0, prompt=np.arange(16, dtype=np.int32) % 8))
+    # exactly at the limit (max_seq-1 tokens) is admissible and completes
+    ok = Request(rid=1, prompt=(np.arange(15, dtype=np.int32) % 8) + 1,
+                 max_new=1)
+    eng.run([ok])
+    assert ok.done and len(ok.out) == 1
+
+
+def test_knobs_deadline_validation():
+    from repro.serve.engine import RetrievalKnobs
+    with pytest.raises(ValueError, match="deadline_ms"):
+        RetrievalKnobs(deadline_ms=0.0)
+    with pytest.raises(ValueError, match="deadline_ms"):
+        RetrievalKnobs(deadline_ms=-5.0)
+    k = RetrievalKnobs(deadline_ms=25.0)
+    # consumed by the resilience layer only — never forwarded to search
+    assert "deadline_ms" not in k.search_kwargs()
+    assert "deadline_ms" not in k.batched_kwargs()
+    assert "deadline_ms" not in k.index_kwargs()
+
+
+def test_engine_retrieval_attachment(tiny_model):
+    """attach_retrieval -> retrieve -> swap_retrieval_index round trip:
+    the engine serves search through the resilience layer and hot-swaps
+    a restored snapshot without touching decode state."""
+    from repro.serve import resilience
+    from repro.serve.engine import RetrievalKnobs
+    params, cfg = tiny_model
+    eng = ServeEngine(params, cfg, batch_slots=2, max_seq=32)
+    q = jnp.asarray(np.random.default_rng(0).normal(size=(4, 8)),
+                    jnp.float32)
+    with pytest.raises(ValueError, match="attach_retrieval"):
+        eng.retrieve(q)
+    with pytest.raises(ValueError, match="attach_retrieval"):
+        eng.swap_retrieval_index(None)
+    r = np.random.default_rng(3)
+    keys = jnp.asarray(r.normal(size=(128, 8)), jnp.float32)
+    idx = retrieval.build_index(
+        keys, keys, vamana.VamanaParams(L=16, M=6, alpha=1.2))
+    rs = eng.attach_retrieval(idx, RetrievalKnobs(top_k=8, ef=16))
+    assert isinstance(rs, resilience.ResilientSearcher)
+    out, res = eng.retrieve(q)
+    assert out.shape == (4, 8) and res.pool_ids.shape == (4, 8)
+    import tempfile
+    with tempfile.TemporaryDirectory() as d:
+        resilience.save_index(idx, d)
+        eng.swap_retrieval_index(resilience.load_index(d))
+    out2, res2 = eng.retrieve(q)
+    np.testing.assert_array_equal(np.asarray(res.pool_ids),
+                                  np.asarray(res2.pool_ids))
+    assert bool(jnp.allclose(out, out2))

@@ -1,12 +1,20 @@
 #!/usr/bin/env python
-"""Repo-hygiene check: no compiled-Python artifacts may be tracked.
+"""Repo-hygiene check: no build or runtime artifacts may be tracked.
 
-``__pycache__`` directories and ``.pyc``/``.pyo`` bytecode are
-machine-local build products; once committed they churn on every Python
-upgrade and silently bloat diffs.  The .gitignore already excludes them,
-but an ignore rule cannot evict a file that was force-added or tracked
-before the rule existed — this check closes that gap by failing CI (and
-tests/test_repo.py) whenever ``git ls-files`` reports one.
+Two artifact families are rejected:
+
+- ``__pycache__`` directories and ``.pyc``/``.pyo`` bytecode —
+  machine-local build products; once committed they churn on every
+  Python upgrade and silently bloat diffs.
+- ``*.snapshot.npz`` / ``*.snapshot.json`` index snapshots
+  (serve/resilience.py) — runtime serving state, potentially hundreds of
+  MB of corpus arrays; a tracked snapshot is always a mistake (a test or
+  bench wrote one into the tree instead of a tmp dir).
+
+The .gitignore already excludes both, but an ignore rule cannot evict a
+file that was force-added or tracked before the rule existed — this
+check closes that gap by failing CI (and tests/test_repo.py) whenever
+``git ls-files`` reports one.
 
 Exits 1 listing every offending tracked path.
 """
@@ -18,12 +26,16 @@ import sys
 
 ROOT = pathlib.Path(__file__).resolve().parent.parent
 BYTECODE_SUFFIXES = (".pyc", ".pyo")
+# Keep in sync with serve/resilience.py SNAPSHOT_NPZ / SNAPSHOT_MANIFEST
+# (not imported: this tool must run without PYTHONPATH or jax installed).
+SNAPSHOT_SUFFIXES = (".snapshot.npz", ".snapshot.json")
 
 
 def is_artifact(path: str) -> bool:
-    """True when a repo-relative path is a compiled-Python artifact."""
+    """True when a repo-relative path is a build/runtime artifact."""
     return ("__pycache__" in path.split("/")
-            or path.endswith(BYTECODE_SUFFIXES))
+            or path.endswith(BYTECODE_SUFFIXES)
+            or path.endswith(SNAPSHOT_SUFFIXES))
 
 
 def tracked_artifacts(root: pathlib.Path = ROOT) -> list[str]:
@@ -35,12 +47,13 @@ def tracked_artifacts(root: pathlib.Path = ROOT) -> list[str]:
 def main() -> int:
     bad = tracked_artifacts()
     for path in bad:
-        print(f"tracked compiled-Python artifact: {path}", file=sys.stderr)
+        print(f"tracked artifact: {path}", file=sys.stderr)
     if bad:
-        print(f"{len(bad)} tracked __pycache__/.pyc file(s) — "
+        print(f"{len(bad)} tracked artifact file(s) "
+              f"(__pycache__/.pyc or *.snapshot.*) — "
               f"git rm --cached them", file=sys.stderr)
         return 1
-    print("repo hygiene OK (no tracked __pycache__/.pyc)")
+    print("repo hygiene OK (no tracked __pycache__/.pyc/*.snapshot.*)")
     return 0
 
 
