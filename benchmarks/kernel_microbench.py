@@ -8,8 +8,9 @@ The search-scaling bench sweeps n ∈ {10k, 100k, 1M synthetic} × visited
 impls × W ∈ {1, 4}, the mesh-partitioned serving profile at
 shards ∈ {1, 4} (DESIGN.md §11), the query-routed sweep S=4 × p ∈ {1, 2}
 over a kmeans partition (DESIGN.md §13), and the degraded-mode sweep
-(0 vs 1 dead shards × scatter-gather/routed, DESIGN.md §14), and audits
-the traced
+(0 vs 1 dead shards × scatter-gather/routed, DESIGN.md §14), the
+streaming sustained-mutation sweep (insert/delete backlog on a
+MutableIndex delta layer, DESIGN.md §15), and audits the traced
 jaxpr: in hash mode (and in the sharded path at S > 1) no intermediate
 array may carry a corpus-sized dimension — i.e. no (b, n) / (b, m, n)
 state is ever materialized — which is the property that makes million-key
@@ -256,6 +257,116 @@ def search_scaling_rows(sizes=(10_000, 100_000, 1_000_000), *,
     return rows, records
 
 
+def streaming_mutation_rows(n: int = 1_000_000, *, reps: int = 5,
+                            quick: bool = False
+                            ) -> tuple[list[str], list[dict]]:
+    """Sustained-mutation sweep (DESIGN.md §15): insert load × delete load
+    on a streaming MutableIndex over the S=4 kmeans partition at n.
+
+    Each config wraps the same main index and applies a mutation backlog —
+    inserts fill the delta layer (past ``DELTA_GRAPH_MIN`` the delta
+    Vamana kicks in, so the full run times the graph+brute-tail path, the
+    quick run the brute-only path), deletes tombstone random main rows —
+    then the *steady-state* search cost under that backlog is timed with
+    the same primed interleaved min-of-reps policy as every other row
+    (mutating mid-timing would time host mutation bookkeeping, not
+    serving).  The (0, 0) config is the pristine baseline: it dispatches
+    the wrapped index's own cached program, so its qps is directly
+    comparable to the path="sharded" rows.  ``recall`` is measured against
+    exact ground truth over the LIVE corpus (inserts included, deleted
+    rows excluded) on the wider 64-query probe; ``recall_drift`` is the
+    pristine baseline's recall minus the config's — the quantity the
+    streaming acceptance test bounds at 0.02.  Compaction never fires
+    inside the sweep (capacity above the backlog, threshold 1.0): these
+    rows record the delta/tombstone overhead compaction exists to bound.
+    Shard graphs are random-regular like the scaling rows (the profile is
+    memory/time, not graph quality) and compaction's build hook is the
+    same cheap generator, so the sweep stays build-cost-free at n=1M.
+    """
+    from repro.core import eval as evallib
+    from repro.core import vamana
+    from repro.serve import retrieval, streaming
+
+    rows: list[str] = []
+    records: list[dict] = []
+    b, bq, d, deg, k, ef = 8, 64, 32, 16, 10, 32
+    S, n_blobs = 4, 8
+    r = np.random.default_rng(1)
+    centers = r.normal(size=(n_blobs, d)) * 3.0
+    data_np = (centers[r.integers(0, n_blobs, n)]
+               + r.normal(size=(n, d))).astype(np.float32)
+    data = jnp.asarray(data_np)
+    queries = data[:b] + 0.1 * jnp.asarray(
+        r.normal(size=(b, d)), jnp.float32)
+    rq = data[r.integers(0, n, bq)] + 0.1 * jnp.asarray(
+        r.normal(size=(bq, d)), jnp.float32)       # recall probe
+
+    def shard_graph(local):
+        return graph.random_knng_ids(0, np.asarray(local).shape[0], deg), 0
+
+    sgk = graph.partition(data, S, build_fn=shard_graph,
+                          assignment="kmeans")
+    entry = int(sgk.global_ids[0][int(sgk.entries[0])])
+    idx = retrieval.RetrievalIndex(
+        graph_ids=None, keys=data, values=data, search_keys=None,
+        entry=entry, params=vamana.VamanaParams(L=24, M=deg, alpha=1.2),
+        metric="l2", shards=sgk,
+        provenance=dict(num_shards=S, assign="kmeans", seed=0))
+    load = 64 if quick else 1024
+    loads = [(0, 0), (load, 0), (0, load), (load, load)]
+    ins_vecs = (centers[r.integers(0, n_blobs, load)]
+                + r.normal(size=(load, d))).astype(np.float32)
+    del_rows = r.choice(n, size=load, replace=False)
+    cfgs: list[dict] = []
+    for ins, dels in loads:
+        mi = streaming.MutableIndex(
+            idx, delta_capacity=max(ins, 1) + 1,
+            tombstone_compact_frac=1.0, build_fn=shard_graph)
+        for v in ins_vecs[:ins]:
+            mi.insert(v)
+        for row_i in del_rows[:dels]:
+            mi.delete(int(row_i))
+
+        def f(mi=mi, q=queries):
+            return mi.attention_batched(q, top_k=k, ef=ef)[1]
+        # live-corpus ground truth in external-id space
+        live = np.ones(n, bool)
+        live[del_rows[:dels]] = False
+        live_rows = np.nonzero(live)[0]
+        exts = np.concatenate([live_rows, np.arange(n, n + ins)])
+        gt_rows = evallib.ground_truth(
+            jnp.asarray(np.concatenate([data_np[live_rows],
+                                        ins_vecs[:ins]])), rq, k)
+        gt_ext = jnp.asarray(exts[np.asarray(gt_rows)])
+        cfgs.append(dict(
+            name=f"search_scaling/streaming/ins={ins}/del={dels}/n={n}",
+            fn=f, mi=mi, gt=gt_ext,
+            rec=dict(path="streaming", n=n, impl="hash", expand_width=4,
+                     num_shards=S, assign="kmeans", ef=ef, k=k, batch=b,
+                     degree=deg, inserts=ins, deletes=dels,
+                     delta_graph_nodes=mi._dg_n)))
+    timed = _time_interleaved([c["fn"] for c in cfgs], reps=reps,
+                              prime=True)
+    base_recall = None
+    for cfg, (sec, res) in zip(cfgs, timed):
+        rres = cfg["mi"].attention_batched(rq, top_k=k, ef=ef)[1]
+        recall = round(evallib.recall_at_k(rres.pool_ids[:, :k],
+                                           cfg["gt"]), 4)
+        if base_recall is None:
+            base_recall = recall                   # the (0, 0) config
+        rec = dict(cfg["rec"], qps=round(b / sec, 1),
+                   us_per_batch=round(sec * 1e6, 1),
+                   hops=int(res.hops), n_dist=int(res.n_computed),
+                   recall=recall,
+                   recall_drift=round(base_recall - recall, 4))
+        records.append(rec)
+        rows.append(common.row(
+            cfg["name"], sec * 1e6,
+            f"qps={rec['qps']} hops={rec['hops']} ndist={rec['n_dist']} "
+            f"recall={recall} drift={rec['recall_drift']}"))
+    return rows, records
+
+
 def write_bench_json(records: list[dict], *, quick: bool = False) -> None:
     """Persist the search-scaling records so the perf trajectory is
     diffable across PRs.  Full runs write the committed repo-root
@@ -280,7 +391,12 @@ def write_bench_json(records: list[dict], *, quick: bool = False) -> None:
                     "(path=degraded): recall there is against the FULL "
                     "ground truth, so dead=1 rows are expected to sit "
                     "below their dead=0 baselines by about the dead "
-                    "shard's ground-truth share",
+                    "shard's ground-truth share. PR 9 added the "
+                    "streaming sustained-mutation rows (path=streaming): "
+                    "qps under an un-compacted insert/delete backlog; "
+                    "recall there is against the LIVE corpus (inserts "
+                    "included, deleted rows excluded) and recall_drift "
+                    "is vs the pristine ins=0/del=0 baseline row",
         "timing": {"policy": "primed-interleaved-min-of-reps",
                    "noise": "host wall time is +/-80% under load; per-n "
                             "config sets share timing rounds and report "
@@ -339,10 +455,13 @@ def run(quick: bool = False) -> list[str]:
             f"gflops={gflops:.1f}"))
     if quick:
         srows, records = search_scaling_rows(sizes=(10_000,), reps=1)
+        mrows, mrecords = streaming_mutation_rows(10_000, reps=1,
+                                                  quick=True)
     else:
         srows, records = search_scaling_rows()
-    rows += srows
-    write_bench_json(records, quick=quick)
+        mrows, mrecords = streaming_mutation_rows()
+    rows += srows + mrows
+    write_bench_json(records + mrecords, quick=quick)
     return rows
 
 

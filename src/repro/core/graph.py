@@ -435,9 +435,7 @@ def partition(data: jax.Array, num_shards: int, *,
         cents = jnp.stack([jnp.mean(prepared[jnp.asarray(part)], axis=0)
                            for part in parts])
     cents = jnp.asarray(cents, jnp.float32)
-    n_s = max(len(p) for p in parts)
-    all_ids, all_data, all_gids, entries, counts = [], [], [], [], []
-    mx = 0
+    all_ids, all_data, all_gids, entries = [], [], [], []
     for part in parts:
         c = len(part)
         local = data[jnp.asarray(part)]
@@ -458,30 +456,53 @@ def partition(data: jax.Array, num_shards: int, *,
             lids, _ = knng_lib.build_knng(local, min(degree, c - 1),
                                           metric=metric)
             entry = int(medoid(local, metric))
-        mx = max(mx, lids.shape[-1])
         all_ids.append(lids)
         all_data.append(local)
         all_gids.append(jnp.asarray(part, jnp.int32))
         entries.append(entry)
-        counts.append(c)
+    return assemble_sharded(all_ids, all_data, all_gids, entries,
+                            centroids=cents, mesh=mesh)
+
+
+def assemble_sharded(ids_parts, data_parts, gid_parts, entries, *,
+                     centroids=None, mesh=None) -> ShardedGraph:
+    """Pad/stack per-shard (local graph, vectors, global ids) into a placed
+    ``ShardedGraph``.
+
+    The shared assembly tail of ``partition`` — and the seam streaming
+    compaction (serve/streaming.py, DESIGN.md §15) reuses to restack a mix
+    of freshly rebuilt and untouched shards without re-partitioning: each
+    shard contributes ragged (c_s, Mx_s) local adjacency, (c_s, d) vectors
+    and (c_s,) global ids; padding, the stacked-flat adjacency for the
+    fused routed path, and mesh placement all happen here exactly as at
+    first build, so a compacted index dispatches the same cached search
+    programs as a fresh one.
+    """
+    n_s = max(x.shape[0] for x in data_parts)
+    mx = max(g.shape[-1] for g in ids_parts)
+    counts = [int(x.shape[0]) for x in data_parts]
     ids = jnp.stack([
-        jnp.pad(g, ((0, n_s - g.shape[0]), (0, mx - g.shape[1])),
-                constant_values=INVALID) for g in all_ids])
+        jnp.pad(jnp.asarray(g, jnp.int32),
+                ((0, n_s - g.shape[0]), (0, mx - g.shape[1])),
+                constant_values=INVALID) for g in ids_parts])
     dat = jnp.stack([
-        jnp.pad(x, ((0, n_s - x.shape[0]), (0, 0))) for x in all_data])
+        jnp.pad(jnp.asarray(x), ((0, n_s - x.shape[0]), (0, 0)))
+        for x in data_parts])
     gids = jnp.stack([
-        jnp.pad(g, (0, n_s - g.shape[0]), constant_values=INVALID)
-        for g in all_gids])
+        jnp.pad(jnp.asarray(g, jnp.int32), (0, n_s - g.shape[0]),
+                constant_values=INVALID) for g in gid_parts])
     # Stacked-flat adjacency for the fused routed path (DESIGN.md §13):
     # offset each shard's local ids into the concatenated row space once at
     # build time (INVALID padding stays INVALID, so padded rows stay
     # unreachable and the flat graph stays block-diagonal).
-    offs = (jnp.arange(len(parts), dtype=jnp.int32) * n_s)[:, None, None]
+    offs = (jnp.arange(len(counts), dtype=jnp.int32) * n_s)[:, None, None]
     flat = jnp.where(ids >= 0, ids + offs, INVALID).reshape(-1, mx)
     sg = ShardedGraph(ids=ids, data=dat, global_ids=gids,
                       entries=jnp.asarray(entries, jnp.int32),
                       counts=jnp.asarray(counts, jnp.int32),
-                      centroids=cents, flat_ids=flat)
+                      centroids=(None if centroids is None
+                                 else jnp.asarray(centroids, jnp.float32)),
+                      flat_ids=flat)
     return place_sharded(sg, mesh=mesh)
 
 

@@ -178,6 +178,29 @@ def _merge_topk(pool_ids, pool_dist, expanded, cand_ids, cand_dist):
     return out_ids, out_dist, out_exp
 
 
+def apply_tombstones(pool_ids, pool_dist, tomb_ids):
+    """Mask tombstoned ids out of a sorted pool at merge time (DESIGN.md §15).
+
+    ``tomb_ids`` is int32[..., T], INVALID-padded (the padding can never
+    match a pool entry: the equality is guarded on ``pool_ids != INVALID``,
+    and live tombstones are real ids >= 0).  Matching slots become
+    INVALID/inf and are pushed behind every survivor by a stable argsort on
+    the dead flag — survivors keep their relative (ascending-distance,
+    bit-pinned tie) order, so the result is exactly the pool a search that
+    never saw the deleted nodes would have *ranked*, over the candidates
+    this search visited.  Applied to the full ef-wide pool BEFORE any k
+    truncation, so the ef − k slack refills the top-k with the next-best
+    live candidates (tests/test_streaming.py pins the refill).
+    """
+    hit = jnp.any(pool_ids[..., :, None] == tomb_ids[..., None, :], axis=-1)
+    dead = hit & (pool_ids != INVALID)
+    pool_ids = jnp.where(dead, INVALID, pool_ids)
+    pool_dist = jnp.where(dead, jnp.inf, pool_dist)
+    order = jnp.argsort(dead, axis=-1, stable=True)   # False (live) first
+    return (jnp.take_along_axis(pool_ids, order, axis=-1),
+            jnp.take_along_axis(pool_dist, order, axis=-1))
+
+
 def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
                        slot_mask, pool_ids, pool_dist, expanded,
                        visited, cache_d, cache_has, share_cache, metric,
@@ -430,7 +453,8 @@ def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
                visited_impl: str = "dense",
                hash_slots: int | None = None,
                expand_width: int = 1,
-               row_mask: jax.Array | None = None) -> SearchResult:
+               row_mask: jax.Array | None = None,
+               tombstone_ids: jax.Array | None = None) -> SearchResult:
     """Single-graph external k-ANNS (evaluation path, Alg. 1).
 
     ``metric`` must match the metric the graph was built under; pool
@@ -441,6 +465,10 @@ def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
     per hop (DESIGN.md §10); 1 reproduces the paper's sequential schedule,
     serving uses 4.  ``row_mask`` marks padding rows that must do no
     search work (static-shape batching; their pools come back INVALID).
+    ``tombstone_ids`` (int32[T], INVALID-padded) masks deleted nodes out of
+    the ef-wide pool before the k truncation (``apply_tombstones``,
+    DESIGN.md §15); ``None`` dispatches the exact program of before the
+    parameter existed.
     """
     if k > ef:
         raise ValueError(
@@ -449,6 +477,14 @@ def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
             f"fewer than k real neighbors; raise ef to at least k")
     if graph_ids.ndim == 2:
         graph_ids = graph_ids[None]
+    if tombstone_ids is not None:
+        tombstone_ids = jnp.asarray(tombstone_ids, jnp.int32)
+        if tombstone_ids.ndim != 1:
+            raise ValueError(
+                f"tombstone_ids must be a 1-D id array, got shape "
+                f"{tombstone_ids.shape}")
+        if tombstone_ids.shape[0] == 0:
+            tombstone_ids = None       # empty: skip the mask entirely
     b = queries.shape[0]
     ep = jnp.broadcast_to(jnp.asarray(entry, jnp.int32), (b,))[:, None]
     res = beam_search(
@@ -459,7 +495,10 @@ def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
         ef_max=ef, max_hops=max_hops or default_max_hops(ef, expand_width),
         share_cache=False, metric=metric, visited_impl=visited_impl,
         hash_slots=hash_slots, expand_width=expand_width)
-    return SearchResult(res.pool_ids[:, 0, :k], res.pool_dist[:, 0, :k],
+    pool_i, pool_d = res.pool_ids[:, 0], res.pool_dist[:, 0]
+    if tombstone_ids is not None:
+        pool_i, pool_d = apply_tombstones(pool_i, pool_d, tombstone_ids)
+    return SearchResult(pool_i[:, :k], pool_d[:, :k],
                         res.n_fresh, res.n_computed, res.hops,
                         res.cache_d, res.cache_has)
 
@@ -525,8 +564,15 @@ def _shard_search_body(graph_ids, data, global_ids, entries, shard_mask,
 
 @functools.lru_cache(maxsize=None)
 def _sharded_search_fn(mesh, *, k, ef, max_hops, metric, visited_impl,
-                       hash_slots, expand_width):
-    """jit'd mesh-partitioned search, cached per (mesh, static knobs)."""
+                       hash_slots, expand_width, tombstones=False):
+    """jit'd mesh-partitioned search, cached per (mesh, static knobs).
+
+    ``tombstones=True`` compiles a variant taking one extra trailing
+    ``tomb_ids`` argument, masked into the folded ef-wide pool before the
+    k truncation (``apply_tombstones``, DESIGN.md §15).  The False variant
+    is byte-for-byte the program of before the flag existed — the healthy
+    no-delete serving path stays the bit-identical cached program.
+    """
     body = functools.partial(
         _shard_search_body, ef=ef, max_hops=max_hops, metric=metric,
         visited_impl=visited_impl, hash_slots=hash_slots,
@@ -540,7 +586,7 @@ def _sharded_search_fn(mesh, *, k, ef, max_hops, metric, visited_impl,
 
     @jax.jit
     def run(graph_ids, data, global_ids, entries, shard_mask, queries,
-            row_mask):
+            row_mask, *tomb):
         blocks_i, blocks_d, n_fresh, n_comp, hops = sharded(
             graph_ids, data, global_ids, entries, shard_mask, queries,
             row_mask)
@@ -553,6 +599,8 @@ def _sharded_search_fn(mesh, *, k, ef, max_hops, metric, visited_impl,
             pool_i, pool_d, _ = _merge_topk(
                 pool_i, pool_d, jnp.zeros_like(pool_i, bool),
                 blocks_i[g], blocks_d[g])
+        if tombstones:
+            pool_i, pool_d = apply_tombstones(pool_i, pool_d, tomb[0])
         return pool_i[:, :k], pool_d[:, :k], n_fresh, n_comp, hops
     return run
 
@@ -627,8 +675,12 @@ def _routed_search_body(graph_ids, data, global_ids, entries, qblocks,
 
 @functools.lru_cache(maxsize=None)
 def _routed_search_fn(mesh, *, k, ef, max_hops, metric, visited_impl,
-                      hash_slots, expand_width, p):
-    """jit'd routed mesh search, cached per (mesh, static knobs, p)."""
+                      hash_slots, expand_width, p, tombstones=False):
+    """jit'd routed mesh search, cached per (mesh, static knobs, p).
+
+    ``tombstones`` as in ``_sharded_search_fn``: True adds a trailing
+    ``tomb_ids`` argument masked into the per-query fold before truncation.
+    """
     body = functools.partial(
         _routed_search_body, ef=ef, max_hops=max_hops, metric=metric,
         visited_impl=visited_impl, hash_slots=hash_slots,
@@ -641,7 +693,7 @@ def _routed_search_fn(mesh, *, k, ef, max_hops, metric, visited_impl,
 
     @jax.jit
     def run(graph_ids, data, global_ids, entries, queries, q_index, q_mask,
-            routed, slot_of, row_mask):
+            routed, slot_of, row_mask, *tomb):
         qblocks = queries[q_index]                             # (S, Bq, d)
         blocks_i, blocks_d, n_fresh, n_comp, hops = sharded(
             graph_ids, data, global_ids, entries, qblocks, q_mask)
@@ -656,6 +708,8 @@ def _routed_search_fn(mesh, *, k, ef, max_hops, metric, visited_impl,
                 pool_i, pool_d, jnp.zeros_like(pool_i, bool),
                 blocks_i[routed[:, j], slot_of[:, j]],
                 blocks_d[routed[:, j], slot_of[:, j]])
+        if tombstones:
+            pool_i, pool_d = apply_tombstones(pool_i, pool_d, tomb[0])
         pool_i = jnp.where(row_mask[:, None], pool_i[:, :k], INVALID)
         pool_d = jnp.where(row_mask[:, None], pool_d[:, :k], jnp.inf)
         return pool_i, pool_d, n_fresh, n_comp, hops
@@ -664,7 +718,7 @@ def _routed_search_fn(mesh, *, k, ef, max_hops, metric, visited_impl,
 
 @functools.lru_cache(maxsize=None)
 def _fused_routed_search_fn(*, k, ef, max_hops, metric, visited_impl,
-                            hash_slots, expand_width, p):
+                            hash_slots, expand_width, p, tombstones=False):
     """jit'd single-dispatch routed search over the stacked-flat graph.
 
     The packed execution strategy (DESIGN.md §13): when a mesh slot holds
@@ -698,7 +752,7 @@ def _fused_routed_search_fn(*, k, ef, max_hops, metric, visited_impl,
 
     @jax.jit
     def run(flat_ids, data, global_ids, entries, centroids, shard_mask,
-            queries, row_mask):
+            queries, row_mask, *tomb):
         b = queries.shape[0]
         n_s, d = data.shape[1], data.shape[2]
         flat_data = data.reshape(-1, d)                # contiguous: no copy
@@ -735,6 +789,8 @@ def _fused_routed_search_fn(*, k, ef, max_hops, metric, visited_impl,
             pool_i, pool_d, _ = _merge_topk(
                 pool_i, pool_d, jnp.zeros_like(pool_i, bool),
                 gpool[:, j], dpool[:, j])
+        if tombstones:
+            pool_i, pool_d = apply_tombstones(pool_i, pool_d, tomb[0])
         pool_i = jnp.where(row_mask[:, None], pool_i[:, :k], INVALID)
         pool_d = jnp.where(row_mask[:, None], pool_d[:, :k], jnp.inf)
         return pool_i, pool_d, res.n_fresh, res.n_computed, res.hops
@@ -748,6 +804,7 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
                        row_mask: jax.Array | None = None,
                        routed_shards: int | None = None,
                        shard_mask=None,
+                       tombstone_ids: jax.Array | None = None,
                        mesh=None) -> SearchResult:
     """Scatter-gather k-ANNS over a mesh-partitioned corpus (DESIGN.md §11).
 
@@ -794,6 +851,13 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
     live count clamps down with a warning.  ``shard_mask=None`` (and any
     all-True mask) is the healthy path, bit-identical to not having the
     parameter.
+
+    ``tombstone_ids`` (int32[T] global ids, INVALID-padded, DESIGN.md §15)
+    masks deleted nodes out of the final folded ef-wide pool before the k
+    truncation — on every execution strategy, so a deleted id never
+    surfaces even while still a node of some shard's graph.  ``None`` (and
+    an empty array) dispatches the exact cached program of before the
+    parameter existed (static ``tombstones=False`` variant).
     """
     if k > ef:
         raise ValueError(
@@ -861,6 +925,15 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
                 "assignment), which stores them")
         else:
             routed_shards = p
+    if tombstone_ids is not None:
+        tombstone_ids = jnp.asarray(tombstone_ids, jnp.int32)
+        if tombstone_ids.ndim != 1:
+            raise ValueError(
+                f"tombstone_ids must be a 1-D id array, got shape "
+                f"{tombstone_ids.shape}")
+        if tombstone_ids.shape[0] == 0:
+            tombstone_ids = None       # empty: healthy cached program
+    tomb = () if tombstone_ids is None else (tombstone_ids,)
     b = queries.shape[0]
     if mesh is None:
         # default to the mesh the graph was placed on (graph.place_sharded
@@ -877,11 +950,11 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
         run = _sharded_search_fn(
             mesh, k=k, ef=ef, max_hops=max_hops, metric=metric,
             visited_impl=visited_impl, hash_slots=hash_slots,
-            expand_width=expand_width)
+            expand_width=expand_width, tombstones=bool(tomb))
         pool_i, pool_d, n_fresh, n_comp, hops = run(
             sharded_graph.ids, sharded_graph.data, sharded_graph.global_ids,
             sharded_graph.entries, live, queries,
-            jnp.ones((b,), bool) if row_mask is None else row_mask)
+            jnp.ones((b,), bool) if row_mask is None else row_mask, *tomb)
         return SearchResult(pool_i, pool_d, n_fresh, n_comp, hops,
                             dummy_d, dummy_has)
 
@@ -895,12 +968,12 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
         run = _fused_routed_search_fn(
             k=k, ef=ef, max_hops=max_hops, metric=metric,
             visited_impl=visited_impl, hash_slots=hash_slots,
-            expand_width=expand_width, p=p)
+            expand_width=expand_width, p=p, tombstones=bool(tomb))
         pool_i, pool_d, n_fresh, n_comp, hops = run(
             sharded_graph.flat_ids, sharded_graph.data,
             sharded_graph.global_ids, sharded_graph.entries,
             sharded_graph.centroids, live, queries,
-            jnp.ones((b,), bool) if row_mask is None else row_mask)
+            jnp.ones((b,), bool) if row_mask is None else row_mask, *tomb)
         return SearchResult(pool_i, pool_d, n_fresh, n_comp, hops,
                             dummy_d, dummy_has)
 
@@ -939,11 +1012,11 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
     run = _routed_search_fn(
         mesh, k=k, ef=ef, max_hops=max_hops, metric=metric,
         visited_impl=visited_impl, hash_slots=hash_slots,
-        expand_width=expand_width, p=p)
+        expand_width=expand_width, p=p, tombstones=bool(tomb))
     pool_i, pool_d, n_fresh, n_comp, hops = run(
         sharded_graph.ids, sharded_graph.data, sharded_graph.global_ids,
         sharded_graph.entries, queries, jnp.asarray(q_index),
         jnp.asarray(q_mask), jnp.asarray(routed), jnp.asarray(slot_of),
-        jnp.asarray(rmask))
+        jnp.asarray(rmask), *tomb)
     return SearchResult(pool_i, pool_d, n_fresh, n_comp, hops,
                         dummy_d, dummy_has)

@@ -66,6 +66,17 @@ class RetrievalKnobs:
                   hysteresis once load subsides.  Consumed by the
                   resilience layer, not passed to the search itself
                   (``search_kwargs`` deliberately omits it).
+    delta_capacity: streaming-mutation knob (DESIGN.md §15): slots in the
+                  fixed-capacity delta layer a ``streaming.MutableIndex``
+                  appends inserts into before compaction must fold them
+                  into the main graph.  Consumed by the streaming layer
+                  (like ``deadline_ms`` by resilience) — deliberately in
+                  none of the kwargs dicts below.
+    tombstone_compact_frac: tombstoned fraction of the main corpus that
+                  triggers background compaction (DESIGN.md §15).  Dead
+                  graph nodes still cost search work while never
+                  surfacing, so this bounds wasted #dist; streaming-layer
+                  knob like ``delta_capacity``.
     """
     top_k: int = 48
     ef: int = 96
@@ -77,6 +88,8 @@ class RetrievalKnobs:
     assign: str = "chunked"
     routed_shards: int | None = None
     deadline_ms: float | None = None
+    delta_capacity: int = 1024
+    tombstone_compact_frac: float = 0.2
 
     def __post_init__(self):
         if self.top_k > self.ef:
@@ -99,6 +112,17 @@ class RetrievalKnobs:
             raise ValueError(
                 f"deadline_ms={self.deadline_ms} must be positive (or None "
                 f"to disable the latency governor)")
+        if self.delta_capacity < 1:
+            raise ValueError(
+                f"delta_capacity={self.delta_capacity} must be >= 1: a "
+                f"streaming index needs at least one delta slot to accept "
+                f"an insert (serve.streaming, DESIGN.md §15)")
+        if not 0.0 < self.tombstone_compact_frac <= 1.0:
+            raise ValueError(
+                f"tombstone_compact_frac={self.tombstone_compact_frac} must "
+                f"be in (0, 1]: 0 would trigger compaction on every delete, "
+                f"> 1 would never trigger it (serve.streaming, DESIGN.md "
+                f"§15)")
         build_lib.resolve_build_impl(self.build_impl)   # fail fast, not at build
 
     def search_kwargs(self) -> dict:
@@ -167,8 +191,12 @@ class ServeEngine:
 
     def swap_retrieval_index(self, new_index) -> None:
         """Hot-swap the served retrieval index (e.g. one restored via
-        serve.resilience.load_index) without touching engine slots, KV
-        cache, or governor state."""
+        serve.resilience.load_index, or a streaming.MutableIndex after
+        compaction) without touching engine slots or KV cache.  The
+        resilience layer resets shard health AND rebuilds the latency
+        governor from its base knobs — rung and EWMA measured the old
+        index, so inheriting them would serve the new index with stale
+        degraded knobs (see ResilientSearcher.swap_index)."""
         if self.retrieval is None:
             raise ValueError(
                 "no retrieval index attached: call attach_retrieval(index) "

@@ -116,15 +116,30 @@ class ShardHealth:
         return float(live.max()) if live.size else 0.0
 
 
-FAULT_KINDS = ("kill", "revive", "delay", "corrupt")
+FAULT_KINDS = ("kill", "revive", "delay", "corrupt", "crash")
+
+
+class InjectedCrash(Exception):
+    """A ``FaultPlan`` "crash" fault fired: the process is (simulated) dead.
+
+    Deliberately NOT a ``RuntimeError``, so ``search_with_retry`` never
+    retries it — a crash is not a transient dispatch failure; the harness
+    that injected it catches this, abandons all in-memory state, and
+    recovers from disk (``streaming.MutableIndex.load`` replays the WAL,
+    DESIGN.md §15), exactly like a fresh process after a kill -9.
+    """
 
 
 @dataclasses.dataclass(frozen=True)
 class Fault:
     """One scheduled fault: applied when the searcher reaches ``at_call``.
 
-    kind:     "kill" | "revive" | "delay" | "corrupt" (FAULT_KINDS).
-    shard:    target shard id.
+    kind:     "kill" | "revive" | "delay" | "corrupt" | "crash"
+              (FAULT_KINDS).  "crash" is process-level, not per-shard:
+              ``shard`` is ignored and ``FaultPlan.apply`` raises
+              ``InjectedCrash`` — the recovery path, not the mask, is
+              what's under test.
+    shard:    target shard id ("crash" ignores it).
     at_call:  0-based search-call index the fault fires at.
     seconds:  injected per-call stall ("delay" only; 0 clears).
     rows:     adjacency rows to scramble ("corrupt" only).
@@ -162,6 +177,10 @@ class FaultPlan:
         for f in self.faults:
             if f.at_call != call_idx:
                 continue
+            if f.kind == "crash":
+                raise InjectedCrash(
+                    f"injected crash at call {call_idx}: recover from disk "
+                    f"(WAL replay), not from this process's memory")
             if not 0 <= f.shard < health.num_shards:
                 raise ValueError(
                     f"fault targets shard {f.shard} but the index has "
@@ -486,6 +505,7 @@ class ResilientSearcher:
                 f"health tracks {self.health.num_shards} shards but the "
                 f"index has {index.num_shards}")
         self.plan = plan
+        self._governor_kwargs = dict(governor_kwargs)
         self.governor = LatencyGovernor(knobs, **governor_kwargs)
         self.retries = retries
         self.backoff_s = backoff_s
@@ -498,12 +518,26 @@ class ResilientSearcher:
         """The knob rung the next search will run with."""
         return self.governor.knobs
 
-    def swap_index(self, new_index: retrieval_lib.RetrievalIndex) -> None:
+    def swap_index(self, new_index) -> None:
         """Hot-swap the served index (snapshot restore / background
-        reindex).  Health resets to all-alive for the new index's shard
-        count; governor state (EWMA, rung) carries over — load pressure
-        does not vanish because the index changed."""
-        self.health = ShardHealth.fresh(new_index.num_shards)
+        reindex / streaming compaction).  Health resets to all-alive for
+        the new index's shard count, and the governor is REBUILT from its
+        base knobs: its EWMA measured the *old* index's cost profile and
+        its rung encodes degradations chosen against it, so carrying
+        either over would serve the new index with stale degraded knobs
+        (or judge it by a dead index's latencies).  If the shard count
+        changed, the base knobs' ``num_shards``/``routed_shards`` are
+        re-validated against the new index before the ladder is rebuilt
+        (regression-pinned in tests/test_resilience.py)."""
+        base = self.governor.base
+        s = new_index.num_shards
+        if getattr(base, "num_shards", s) != s:
+            base = dataclasses.replace(
+                base, num_shards=s,
+                routed_shards=(None if base.routed_shards is None
+                               else max(1, min(base.routed_shards, s))))
+        self.health = ShardHealth.fresh(s)
+        self.governor = LatencyGovernor(base, **self._governor_kwargs)
         self.index = new_index
 
     def search(self, q, **overrides):
@@ -517,9 +551,17 @@ class ResilientSearcher:
         knobs = self.governor.knobs
         kwargs = dict(knobs.batched_kwargs(),
                       shard_mask=self.health.mask(), **overrides)
+        # Duck-dispatch: an index that brings its own batched-attention
+        # entry point (streaming.MutableIndex — it must fold its delta
+        # layer and tombstones into every search, DESIGN.md §15) is called
+        # directly; a plain RetrievalIndex goes through the module-level
+        # retrieval_attention_batched as before.
+        fn = getattr(self.index, "attention_batched", None)
+        args = (q,) if fn is not None else (self.index, q)
+        fn = fn or retrieval_lib.retrieval_attention_batched
         t0 = self.clock()
         out, res = search_with_retry(
-            retrieval_lib.retrieval_attention_batched, self.index, q,
+            fn, *args,
             retries=self.retries, backoff_s=self.backoff_s,
             sleep=self.sleep, **kwargs)
         jax.block_until_ready(res.pool_ids)

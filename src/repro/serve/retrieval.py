@@ -170,14 +170,20 @@ def _search_index(idx: RetrievalIndex, qs: jax.Array, top_k: int, ef: int,
                   visited_impl: str, expand_width: int,
                   row_mask: jax.Array | None = None,
                   routed_shards: int | None = None,
-                  shard_mask=None) -> search_lib.SearchResult:
-    """Route one prepared-query batch to the un- or mesh-sharded search."""
+                  shard_mask=None,
+                  tombstone_ids=None) -> search_lib.SearchResult:
+    """Route one prepared-query batch to the un- or mesh-sharded search.
+
+    ``tombstone_ids`` (int32[T] global ids, INVALID-padded) masks deleted
+    nodes out of the merged pool on either path (DESIGN.md §15); the
+    streaming MutableIndex is the owner of the mask.
+    """
     if idx.shards is not None:
         return search_lib.sharded_knn_search(
             idx.shards, qs, top_k, ef, metric=idx.kernel,
             visited_impl=visited_impl, expand_width=expand_width,
             row_mask=row_mask, routed_shards=routed_shards,
-            shard_mask=shard_mask)
+            shard_mask=shard_mask, tombstone_ids=tombstone_ids)
     if routed_shards not in (None, 1):
         raise ValueError(
             f"routed_shards={routed_shards} on an unsharded index: routing "
@@ -191,7 +197,8 @@ def _search_index(idx: RetrievalIndex, qs: jax.Array, top_k: int, ef: int,
     return search_lib.knn_search(
         idx.graph_ids, idx.search_keys, qs, top_k, ef, idx.entry,
         metric=idx.kernel, visited_impl=visited_impl,
-        expand_width=expand_width, row_mask=row_mask)
+        expand_width=expand_width, row_mask=row_mask,
+        tombstone_ids=tombstone_ids)
 
 
 def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,

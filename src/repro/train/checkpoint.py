@@ -12,13 +12,66 @@ import concurrent.futures as cf
 import json
 import os
 import re
+import struct
 import tempfile
+import zlib
 
 import jax
 import numpy as np
 
 _SEP = "/"
 _executor = cf.ThreadPoolExecutor(max_workers=1)
+
+# Write-ahead-log record framing (serve/streaming.py, DESIGN.md §15):
+# little-endian `u32 body_len | u32 crc32(body) | body`.  Length + checksum
+# together make torn tails detectable: a record is either completely on
+# disk and checksummed, or it is refused by the reader — never half-applied.
+_FRAME_HDR = struct.Struct("<II")
+
+
+def append_framed(path: str, body: bytes) -> None:
+    """Append one framed record and fsync before returning.
+
+    The durability half of the WAL contract: when this returns, the record
+    survives a process kill or power loss at any later instant (the caller
+    acknowledges the mutation only after this returns).  Appends are
+    framed (`_FRAME_HDR`) so ``read_framed`` can refuse a tail torn
+    mid-write by a kill *during* this call.
+    """
+    d = os.path.dirname(path) or "."
+    os.makedirs(d, exist_ok=True)
+    with open(path, "ab") as f:
+        f.write(_FRAME_HDR.pack(len(body), zlib.crc32(body)))
+        f.write(body)
+        f.flush()
+        os.fsync(f.fileno())
+
+
+def read_framed(path: str) -> tuple[list[bytes], int]:
+    """Read every complete checksummed record; returns (bodies, good_bytes).
+
+    Scans frames front-to-back and stops at the first violation — short
+    header, short body, or crc mismatch — so a record torn by a mid-write
+    kill is *refused*, not half-applied (the crash-recovery contract,
+    DESIGN.md §15).  ``good_bytes`` is the byte offset of the last complete
+    record's end; the caller truncates the file there before appending
+    again so the torn bytes can never resurface.
+    """
+    with open(path, "rb") as f:
+        raw = f.read()
+    bodies: list[bytes] = []
+    good = 0
+    while True:
+        hdr = raw[good:good + _FRAME_HDR.size]
+        if len(hdr) < _FRAME_HDR.size:
+            break
+        ln, crc = _FRAME_HDR.unpack(hdr)
+        body = raw[good + _FRAME_HDR.size:good + _FRAME_HDR.size + ln]
+        if len(body) < ln or zlib.crc32(body) != crc:
+            break
+        bodies.append(body)
+        good += _FRAME_HDR.size + ln
+    return bodies, good
 
 
 def atomic_write_npz(path: str, arrays: dict[str, np.ndarray]) -> None:

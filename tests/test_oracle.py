@@ -599,3 +599,149 @@ def test_oracle_catches_router_flip():
                                           "l2", "dense")
     finally:
         search.route_topk = orig
+
+
+# ---------------------------------------------------------------------------
+# Streaming delta merge + tombstones (DESIGN.md §15): a pure-NumPy
+# reference for the MutableIndex merged pool — main-graph beam pool,
+# tombstone masking, brute delta candidates, and the pool-first tie-rule
+# fold — including the #dist counter contract (main beam distances plus
+# one brute distance per live delta slot per real query row).
+# ---------------------------------------------------------------------------
+
+def oracle_tombstone_mask(ids, dist, tomb_rows):
+    """Pure-NumPy ``search.apply_tombstones``: survivors keep their order,
+    tombstoned slots become INVALID/inf and sink behind every survivor."""
+    out_ids = np.full(len(ids), INVALID, np.int32)
+    out_dist = np.full(len(ids), np.inf, np.float32)
+    j = 0
+    for i, dv in zip(ids, dist):
+        if int(i) != INVALID and int(i) not in tomb_rows:
+            out_ids[j] = i
+            out_dist[j] = dv
+            j += 1
+    return out_ids, out_dist
+
+
+def oracle_streaming_search(adj, data, delta, delta_live, tomb_rows, q,
+                            top_k, ef, *, metric="l2", expand_width=1):
+    """The §15 merged pool for one query: (ids[top_k], dist[top_k],
+    n_dist).  Main-graph rows keep their ids; delta slot s surfaces as
+    ``len(data) + s``.  Mirrors MutableIndex exactly: full ef-wide main
+    pool -> tombstone mask -> brute live-delta candidates (ties prefer the
+    lower slot) folded pool-first -> THEN the top_k truncation, so the
+    ef − top_k slack refills what tombstones evicted."""
+    n = len(data)
+    kernel = "ip" if metric == "cosine" else metric
+    ids, dist, nd, _ = oracle_search(adj, data, q, ef, 0, metric=metric,
+                                     expand_width=expand_width)
+    ids, dist = oracle_tombstone_mask(ids, dist, tomb_rows)
+    pool = [(float(dv), int(i)) for i, dv in zip(ids, dist)
+            if int(i) != INVALID]
+    cands = sorted(
+        (float(_np_dist(q, delta[s], kernel)), n + s)
+        for s in range(len(delta)) if delta_live[s])[:min(len(delta), ef)]
+    merged = sorted([(d, 0, j, i) for j, (d, i) in enumerate(pool)]
+                    + [(d, 1, j, i) for j, (d, i) in enumerate(cands)])[:ef]
+    out_ids = np.full(ef, INVALID, np.int32)
+    out_dist = np.full(ef, np.inf, np.float32)
+    for j, (d, _, _, i) in enumerate(merged):
+        out_ids[j] = i
+        out_dist[j] = d
+    return out_ids[:top_k], out_dist[:top_k], nd + sum(delta_live)
+
+
+def _streaming_case(seed, n=60, degree=6):
+    """Quantized integer coordinates (exact f32 distances under any
+    reduction order, plenty of genuine ties) + a mutation script: 4 delta
+    inserts (one then deleted) and 3 main tombstones drawn from live query
+    pools so masking provably changes answers."""
+    from repro.core import vamana as vamana_lib
+    from repro.serve import retrieval, streaming
+
+    r = np.random.default_rng(seed)
+    data = np.round(r.normal(size=(n, 8)) * 2.0).astype(np.float32)
+    adj = np.asarray(random_knng_ids(seed, n, degree))
+    queries = np.round(data[r.integers(0, n, 8)] + r.normal(
+        size=(8, data.shape[1])) * 2.0).astype(np.float32)
+    idx = retrieval.RetrievalIndex(
+        graph_ids=jnp.asarray(adj), keys=jnp.asarray(data),
+        values=jnp.asarray(data), search_keys=jnp.asarray(data),
+        entry=0, params=vamana_lib.VamanaParams(L=16, M=6, alpha=1.2),
+        metric="l2")
+    mi = streaming.MutableIndex(idx, delta_capacity=8,
+                                delta_graph_min=10 ** 9)   # brute-only
+    delta = np.round(r.normal(size=(4, 8)) * 2.0).astype(np.float32)
+    exts = [mi.insert(v) for v in delta]
+    mi.delete(exts[1])                       # dead delta slot
+    # tombstone three DISTINCT rows currently surfacing in query pools
+    pools = np.asarray(mi.knn(jnp.asarray(queries), 8, 16,
+                              visited_impl="dense")[0])
+    victims = []
+    for qi in range(pools.shape[0]):
+        for i in pools[qi]:
+            if 0 <= int(i) < n and int(i) not in victims:
+                victims.append(int(i))
+                break
+        if len(victims) == 3:
+            break
+    for v in victims:
+        mi.delete(v)
+    delta_live = [True, False, True, True] + [False] * 4
+    return mi, data, adj, np.concatenate(
+        [delta, np.zeros((4, 8), np.float32)]), delta_live, victims, queries
+
+
+def _assert_streaming_matches_oracle(mi, data, adj, delta, delta_live,
+                                     victims, queries, top_k, ef, W):
+    _, res = mi.attention_batched(
+        jnp.asarray(queries), top_k=top_k, ef=ef, visited_impl="dense",
+        expand_width=W)
+    got_ids = np.asarray(res.pool_ids)
+    got_dist = np.asarray(res.pool_dist)
+    total = 0
+    for qi in range(queries.shape[0]):
+        ids, dist, nd = oracle_streaming_search(
+            adj, data, delta, delta_live, set(victims), queries[qi],
+            top_k, ef, expand_width=W)
+        np.testing.assert_array_equal(
+            got_ids[qi], ids,
+            err_msg=f"pool ids diverged from streaming oracle (query {qi},"
+                    f" W={W})")
+        np.testing.assert_allclose(got_dist[qi], dist, rtol=1e-5,
+                                   atol=1e-5)
+        total += nd
+    assert int(res.n_computed) == total, (int(res.n_computed), total)
+    assert int(res.n_fresh) == total
+
+
+@pytest.mark.parametrize("seed", [0, 7])
+@pytest.mark.parametrize("ef_w", [(16, 1), (24, 4)])
+def test_streaming_search_matches_oracle(seed, ef_w):
+    ef, W = ef_w
+    case = _streaming_case(seed)
+    _assert_streaming_matches_oracle(*case, 8, ef, W)
+
+
+def leaky_apply_tombstones(pool_ids, pool_dist, tomb_ids):
+    """The seeded §15 mutation: a mask that LEAKS — deleted ids stay in
+    the pool as if never tombstoned."""
+    return pool_ids, pool_dist
+
+
+def test_oracle_catches_tombstone_leak():
+    """Acceptance gate: the streaming suite must FAIL on a tombstone mask
+    that leaks deleted ids.  The case tombstones rows drawn from live
+    query pools, so leaking them provably changes at least one pool."""
+    case = _streaming_case(11)
+    # sanity: the healthy mask passes on this exact workload
+    _assert_streaming_matches_oracle(*case, 8, 16, 1)
+    orig = search.apply_tombstones
+    search.apply_tombstones = leaky_apply_tombstones
+    try:
+        # no jit-cache clearing needed: knn_search applies the mask
+        # eagerly and resolves the module global on every call
+        with pytest.raises(AssertionError):
+            _assert_streaming_matches_oracle(*case, 8, 16, 1)
+    finally:
+        search.apply_tombstones = orig

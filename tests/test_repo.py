@@ -24,6 +24,11 @@ _spec.loader.exec_module(check_repo)
     ("index.snapshot.json", True),
     ("data/corpus.npz", False),              # plain npz data is fine
     ("docs/snapshot.md", False),
+    ("wal/index-g0.wal", True),              # streaming mutation state
+    ("index-g2.stream.npz", True),
+    ("serve/index.stream.json", True),
+    ("notes/wal.md", False),                 # suffix, not substring
+    ("src/stream.py", False),
 ])
 def test_is_artifact(path, bad):
     assert check_repo.is_artifact(path) is bad
@@ -35,6 +40,13 @@ def test_snapshot_suffixes_match_resilience():
     from repro.serve import resilience
     assert set(check_repo.SNAPSHOT_SUFFIXES) == {
         resilience.SNAPSHOT_NPZ, resilience.SNAPSHOT_MANIFEST}
+
+
+def test_stream_suffixes_match_streaming():
+    """Same sync rule for the streaming-index runtime suffixes (WAL,
+    external-id sidecar, generation pointer — serve/streaming.py)."""
+    from repro.serve import streaming
+    assert set(check_repo.STREAM_SUFFIXES) == set(streaming.STREAM_SUFFIXES)
 
 
 def test_no_tracked_bytecode():

@@ -443,3 +443,54 @@ def test_searcher_rejects_mismatched_health(sharded_index):
         resilience.ResilientSearcher(
             idx, engine_lib.RetrievalKnobs(top_k=TOP_K, ef=EF),
             health=resilience.ShardHealth.fresh(S + 1))
+
+
+def test_swap_resets_governor_to_base_knobs(sharded_index):
+    """Regression pin: swap_index must REBUILD the governor, not carry it
+    over — a rung and EWMA measured against the old index would serve the
+    new one with stale degraded knobs.  A slow-shard plan drives the
+    governor down; the swap restores rung 0, clears the EWMA, and keeps
+    the injected governor kwargs so later downshifts behave identically.
+    """
+    idx, _, queries, _ = sharded_index
+    knobs = engine_lib.RetrievalKnobs(top_k=TOP_K, ef=EF, num_shards=S,
+                                      assign="kmeans", deadline_ms=100.0)
+    plan = resilience.FaultPlan(
+        [resilience.Fault("delay", 2, at_call=0, seconds=0.5)])
+    rs = resilience.ResilientSearcher(
+        idx, knobs, plan=plan, clock=lambda: 0.0, sleep=lambda s: None,
+        alpha=1.0, patience=2)
+    q = jnp.asarray(queries[:4])
+    for _ in range(3):
+        rs.search(q)
+    assert rs.governor.level > 0 and rs.knobs.ef < EF   # degraded for real
+    assert rs.governor.ewma_s is not None
+    rs.swap_index(idx)
+    assert rs.governor.level == 0                  # fresh rung
+    assert rs.governor.ewma_s is None              # old latencies forgotten
+    assert rs.knobs == knobs                       # base knobs restored
+    assert rs.governor.alpha == 1.0                # injected kwargs kept
+    assert rs.governor.patience == 2
+
+
+def test_swap_revalidates_base_knobs_on_shard_count_change(sharded_index):
+    """Swapping to an index with a different shard count re-validates the
+    base knobs (num_shards follows the index, routed_shards clamps) —
+    otherwise the rebuilt ladder would issue searches the new index
+    rejects."""
+    idx, data, queries, _ = sharded_index
+    knobs = engine_lib.RetrievalKnobs(top_k=TOP_K, ef=EF, num_shards=S,
+                                      assign="kmeans", routed_shards=S,
+                                      deadline_ms=100.0)
+    rs = resilience.ResilientSearcher(idx, knobs, clock=lambda: 0.0,
+                                      sleep=lambda s: None)
+    params = vamana.VamanaParams(L=24, M=8, alpha=1.2)
+    idx2 = retrieval.build_index(
+        jnp.asarray(data), jnp.asarray(data), params, metric="l2",
+        num_shards=2, assign="kmeans", seed=3)
+    rs.swap_index(idx2)
+    assert rs.governor.base.num_shards == 2
+    assert rs.governor.base.routed_shards == 2     # clamped from S
+    assert rs.health.num_shards == 2
+    _, res = rs.search(jnp.asarray(queries[:4]))   # ladder actually serves
+    assert res.pool_ids.shape == (4, TOP_K)

@@ -1,0 +1,422 @@
+"""Streaming mutable index (serve/streaming.py, DESIGN.md §15).
+
+Covers the streaming contract end to end: pristine bit-identity with the
+wrapped static index, a sustained insert+delete+search workload whose
+recall@10 never drops more than 0.02 below the static baseline while
+deleted ids never appear in any pool, the ef−k tombstone refill, WAL
+crash-consistency (a simulated kill at EVERY byte offset of the log
+recovers exactly the acked mutation prefix; a torn final record is
+refused, not half-applied), the FaultPlan ``crash`` action + disk
+recovery round trip, affected-shard-only compaction, pointer-last
+generation commit, and hot-swap into a running ResilientSearcher.
+"""
+import os
+import shutil
+import struct
+
+import numpy as np
+import pytest
+
+import jax.numpy as jnp
+
+from repro.core import vamana
+from repro.core.graph import INVALID
+from repro.serve import engine as engine_lib
+from repro.serve import resilience, retrieval, streaming
+from repro.train import checkpoint as ckpt_lib
+
+S = 4
+TOP_K = 8
+EF = 24
+PARAMS = vamana.VamanaParams(L=24, M=8, alpha=1.2)
+
+
+def _blob_corpus(seed=0, n=400, d=8, blobs=4, n_extra=64, n_q=32):
+    """Clustered corpus + a held-out pool of insertable vectors drawn from
+    the same blobs (so inserts are realistic near-neighbors, not noise)."""
+    r = np.random.default_rng(seed)
+    centers = r.normal(size=(blobs, d)).astype(np.float32) * 8.0
+    data = (centers[r.integers(0, blobs, n)]
+            + r.normal(size=(n, d))).astype(np.float32)
+    extra = (centers[r.integers(0, blobs, n_extra)]
+             + r.normal(size=(n_extra, d))).astype(np.float32)
+    queries = (centers[r.integers(0, blobs, n_q)]
+               + r.normal(size=(n_q, d))).astype(np.float32)
+    return data, extra, queries
+
+
+def _build(data, num_shards=1, **kw):
+    return retrieval.build_index(
+        jnp.asarray(data), jnp.asarray(data), PARAMS, metric="l2",
+        num_shards=num_shards, seed=3,
+        **(dict(assign="kmeans") if num_shards > 1 else {}), **kw)
+
+
+@pytest.fixture(scope="module")
+def unsharded():
+    data, extra, queries = _blob_corpus(seed=0)
+    return _build(data), data, extra, queries
+
+
+@pytest.fixture(scope="module")
+def sharded():
+    data, extra, queries = _blob_corpus(seed=1)
+    return _build(data, num_shards=S), data, extra, queries
+
+
+def _oracle_topk(vecs, ext_ids, queries, k):
+    """Exact external-id top-k over the live corpus (rows of ``vecs``)."""
+    d2 = ((vecs[None, :, :] - queries[:, None, :]) ** 2).sum(-1)
+    order = np.argsort(d2, axis=1, kind="stable")[:, :k]
+    return np.asarray(ext_ids)[order]
+
+
+def _recall(pool_ids, gt):
+    hits = sum(len(set(pool_ids[q].tolist()) & set(gt[q].tolist()))
+               for q in range(gt.shape[0]))
+    return hits / gt.size
+
+
+# ---------------------------------------------------------------------------
+# Pristine serving and the mutation hot path.
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("fixture", ["unsharded", "sharded"])
+def test_pristine_bit_identity(fixture, request):
+    """Acceptance pin: an empty-delta, no-tombstone MutableIndex serves
+    BIT-identical outputs and pools through the wrapped index's own
+    cached batched programs."""
+    idx, _, _, queries = request.getfixturevalue(fixture)
+    mi = streaming.MutableIndex(idx)
+    q = jnp.asarray(queries)
+    out0, res0 = retrieval.retrieval_attention_batched(
+        idx, q, top_k=TOP_K, ef=EF)
+    out1, res1 = mi.attention_batched(q, top_k=TOP_K, ef=EF)
+    np.testing.assert_array_equal(np.asarray(out0), np.asarray(out1))
+    np.testing.assert_array_equal(np.asarray(res0.pool_ids),
+                                  np.asarray(res1.pool_ids))
+    np.testing.assert_array_equal(np.asarray(res0.pool_dist),
+                                  np.asarray(res1.pool_dist))
+    assert int(res0.n_computed) == int(res1.n_computed)
+    assert int(res0.hops) == int(res1.hops)
+
+
+def test_insert_is_immediately_searchable(unsharded):
+    idx, _, _, queries = unsharded
+    mi = streaming.MutableIndex(idx)
+    ext = mi.insert(queries[0])            # exact query match
+    ids, dist = mi.knn(jnp.asarray(queries[:1]), TOP_K, EF)
+    assert int(np.asarray(ids)[0, 0]) == ext
+    assert float(np.asarray(dist)[0, 0]) == 0.0
+
+
+def test_tombstone_refill_keeps_topk_full(unsharded):
+    """Deleting current top-k members refills from the ef−k slack: the
+    top-k stays all-valid, the deleted ids vanish, survivors keep their
+    relative order."""
+    idx, _, _, queries = unsharded
+    mi = streaming.MutableIndex(idx)
+    q = jnp.asarray(queries[:4])
+    before = np.asarray(mi.knn(q, TOP_K, EF)[0])
+    victims = {int(before[0, 0]), int(before[0, 2]), int(before[1, 1])}
+    for v in victims:
+        mi.delete(v)
+    after = np.asarray(mi.knn(q, TOP_K, EF)[0])
+    assert not (set(after.ravel().tolist()) & victims)
+    assert (after != INVALID).all()        # ef−k slack refilled every slot
+    survivors = [i for i in before[0].tolist() if i not in victims]
+    assert after[0, :len(survivors)].tolist() == survivors
+
+
+def test_delete_unknown_id_raises_before_logging(tmp_path, unsharded):
+    idx, *_ = unsharded
+    mi = streaming.MutableIndex.wrap(idx, wal_dir=str(tmp_path))
+    mi.delete(5)
+    wal = mi._wal_path()
+    size = os.path.getsize(wal)
+    with pytest.raises(KeyError, match="not live"):
+        mi.delete(5)                        # already deleted
+    with pytest.raises(KeyError, match="not live"):
+        mi.delete(10_000)                   # never existed
+    assert os.path.getsize(wal) == size     # nothing was logged
+
+
+@pytest.mark.parametrize("fixture", ["unsharded", "sharded"])
+def test_sustained_mutation_workload(fixture, request):
+    """The acceptance workload: interleaved inserts, deletes, and searches.
+    Throughout — including after a compaction — recall@10 stays within
+    0.02 of the static baseline, deleted ids NEVER appear in any pool,
+    and searches themselves never trigger compaction."""
+    idx, data, extra, queries = request.getfixturevalue(fixture)
+    mi = streaming.MutableIndex(
+        idx, delta_capacity=len(extra) + 1, delta_graph_min=16)
+    q = jnp.asarray(queries)
+    k = 10
+    gt0 = _oracle_topk(data, np.arange(len(data)), queries, k)
+    static_recall = _recall(np.asarray(mi.knn(q, k, EF)[0]), gt0)
+
+    live_vecs = {i: data[i] for i in range(len(data))}
+    deleted: set[int] = set()
+    r = np.random.default_rng(7)
+    extra_iter = iter(extra)
+    for round_i in range(6):
+        for _ in range(8):                 # 8 inserts per round
+            v = next(extra_iter)
+            live_vecs[mi.insert(v)] = v
+        for ext in r.choice(sorted(live_vecs), size=4, replace=False):
+            mi.delete(int(ext))
+            del live_vecs[int(ext)]
+            deleted.add(int(ext))
+        ids = np.asarray(mi.knn(q, k, EF)[0])
+        assert not (set(ids.ravel().tolist()) & deleted), round_i
+        exts = np.fromiter(live_vecs, np.int64)
+        gt = _oracle_topk(np.stack([live_vecs[e] for e in exts]),
+                          exts, queries, k)
+        assert _recall(ids, gt) >= static_recall - 0.02, round_i
+    assert mi.compactions == 0             # searches never compact
+    mi.compact()
+    assert mi.pristine
+    ids = np.asarray(mi.knn(q, k, EF)[0])
+    assert not (set(ids.ravel().tolist()) & deleted)
+    exts = np.fromiter(live_vecs, np.int64)
+    gt = _oracle_topk(np.stack([live_vecs[e] for e in exts]), exts,
+                      queries, k)
+    assert _recall(ids, gt) >= static_recall - 0.02
+
+
+# ---------------------------------------------------------------------------
+# WAL crash consistency.
+# ---------------------------------------------------------------------------
+
+def _mutate(mi, data, extra):
+    """A fixed mutation script; returns the acked (op, ...) sequence."""
+    acked = []
+    for v in extra[:3]:
+        acked.append(("insert", mi.insert(v)))
+    mi.delete(5)
+    acked.append(("delete", 5))
+    acked.append(("delete", acked[1][1]))
+    mi.delete(acked[1][1])
+    return acked
+
+
+def _live_state(mi):
+    return (sorted(mi._loc), sorted(mi._tomb_ext), mi.delta_count,
+            mi._next_seq)
+
+
+def test_wal_kill_at_every_byte_offset(tmp_path, unsharded):
+    """The crash-recovery acceptance gate: for EVERY byte offset t of the
+    WAL, a process killed with only t bytes durable recovers to exactly
+    the acked prefix — the mutations whose frames fit in [0, t] — and
+    the torn tail is truncated away."""
+    idx, data, extra, _ = unsharded
+    wal_dir = str(tmp_path / "wal")
+    mi = streaming.MutableIndex.wrap(idx, wal_dir=wal_dir)
+    _mutate(mi, data, extra)
+    wal = mi._wal_path()
+    raw = open(wal, "rb").read()
+    # frame boundaries: state after each complete record
+    bodies, good = ckpt_lib.read_framed(wal)
+    assert good == len(raw)                # our own writes are never torn
+    ends = [0]
+    off = 0
+    for b in bodies:
+        off += ckpt_lib._FRAME_HDR.size + len(b)
+        ends.append(off)
+    # reference states: replay 0..j records on a fresh wrap
+    refs = []
+    ref = streaming.MutableIndex.wrap(idx, wal_dir=str(tmp_path / "ref"))
+    refs.append(_live_state(ref))
+    for b in bodies:
+        rec = streaming._decode(b)
+        if rec[0] == "insert":
+            ref._apply_insert(rec[2], rec[3], rec[4])
+        else:
+            ref._apply_delete(rec[2])
+        ref._next_seq = rec[1] + 1
+        refs.append(_live_state(ref))
+    crash_dir = str(tmp_path / "crash")
+    for t in range(len(raw) + 1):
+        acked = sum(e <= t for e in ends) - 1   # complete frames in [0, t]
+        shutil.rmtree(crash_dir, ignore_errors=True)
+        shutil.copytree(wal_dir, crash_dir)
+        cw = os.path.join(crash_dir, os.path.basename(wal))
+        with open(cw, "rb+") as f:
+            f.truncate(t)
+        got = streaming.MutableIndex.load(crash_dir)
+        assert _live_state(got) == refs[acked], f"offset {t}"
+        assert os.path.getsize(cw) == ends[acked]   # torn tail truncated
+    # the full-file case recovered everything
+    assert refs[-1] == _live_state(streaming.MutableIndex.load(wal_dir))
+
+
+def test_torn_final_record_refused_not_half_applied(tmp_path, unsharded):
+    """A corrupted (not just short) final record must be refused whole:
+    flipping one payload byte fails the crc, and recovery lands on the
+    previous record's state."""
+    idx, data, extra, _ = unsharded
+    wal_dir = str(tmp_path / "wal")
+    mi = streaming.MutableIndex.wrap(idx, wal_dir=wal_dir)
+    acked = _mutate(mi, data, extra)
+    wal = mi._wal_path()
+    raw = bytearray(open(wal, "rb").read())
+    raw[-1] ^= 0xFF                        # bit-rot inside the last body
+    open(wal, "wb").write(raw)
+    got = streaming.MutableIndex.load(wal_dir)
+    last_op, last_ext = acked[-1]
+    assert last_op == "delete"
+    assert last_ext in got._loc            # the torn delete did NOT apply
+    assert got._next_seq == mi._next_seq - 1
+    # and the torn bytes are physically gone
+    _, good = ckpt_lib.read_framed(wal)
+    assert os.path.getsize(wal) == good < len(raw)
+
+
+def test_wal_replay_rejects_wrong_sequence(tmp_path, unsharded):
+    """A WAL that is not the committed generation's suffix (wrong seq
+    numbering — e.g. an orphan from another generation) is refused."""
+    idx, *_ = unsharded
+    wal_dir = str(tmp_path / "wal")
+    mi = streaming.MutableIndex.wrap(idx, wal_dir=wal_dir)
+    mi.delete(0)
+    # duplicate the record: second copy replays seq 1 again
+    wal = mi._wal_path()
+    raw = open(wal, "rb").read()
+    open(wal, "ab").write(raw)
+    with pytest.raises(ValueError, match="seq"):
+        streaming.MutableIndex.load(wal_dir)
+
+
+def test_crash_fault_recovers_from_disk(tmp_path, unsharded):
+    """FaultPlan 'crash' end to end: the injected crash surfaces through
+    ResilientSearcher WITHOUT retry (it is not a RuntimeError), and a
+    fresh MutableIndex.load serves every acked mutation."""
+    idx, data, extra, queries = unsharded
+    wal_dir = str(tmp_path / "wal")
+    mi = streaming.MutableIndex.wrap(idx, wal_dir=wal_dir)
+    ext = mi.insert(extra[0])
+    mi.delete(7)
+    plan = resilience.FaultPlan(
+        [resilience.Fault("crash", 0, at_call=1)])
+    naps = []
+    rs = resilience.ResilientSearcher(
+        mi, engine_lib.RetrievalKnobs(top_k=TOP_K, ef=EF),
+        plan=plan, clock=lambda: 0.0, sleep=naps.append)
+    q = jnp.asarray(queries[:4])
+    _, before = rs.search(q)               # call 0: serves fine
+    with pytest.raises(resilience.InjectedCrash, match="recover from disk"):
+        rs.search(q)
+    assert not naps                        # no retry backoff: crash != retry
+    recovered = streaming.MutableIndex.load(wal_dir)
+    assert ext in recovered._loc and 7 in recovered._tomb_ext
+    rs2 = resilience.ResilientSearcher(
+        recovered, engine_lib.RetrievalKnobs(top_k=TOP_K, ef=EF),
+        clock=lambda: 0.0, sleep=lambda s: None)
+    _, after = rs2.search(q)
+    np.testing.assert_array_equal(np.asarray(before.pool_ids),
+                                  np.asarray(after.pool_ids))
+
+
+# ---------------------------------------------------------------------------
+# Compaction.
+# ---------------------------------------------------------------------------
+
+def test_compaction_rebuilds_only_affected_shards(sharded):
+    """Sharded compaction: shards with no tombstoned member and no routed
+    delta vector keep their adjacency bytes; only affected shards pass
+    through the build hook."""
+    idx, data, extra, queries = sharded
+    built = []
+
+    def counting_build(local):
+        built.append(local.shape[0])
+        return streaming.MutableIndex._default_build(mi, local)
+
+    mi = streaming.MutableIndex(idx, build_fn=counting_build)
+    # tombstone members of exactly one shard
+    gids = np.asarray(idx.shards.global_ids)
+    counts = np.asarray(idx.shards.counts)
+    victims = gids[2, :3].tolist()
+    for v in victims:
+        mi.delete(int(v))
+    old_ids = np.asarray(idx.shards.ids)
+    mi.compact()
+    assert len(built) == 1                 # only shard 2 rebuilt
+    assert built[0] == counts[2] - 3
+    new = mi.main.shards
+    for s in (0, 1, 3):                    # untouched shards: bytes kept
+        c = int(counts[s])
+        np.testing.assert_array_equal(
+            np.asarray(new.ids)[s, :c], old_ids[s, :c])
+    # deleted ids gone from the corpus, survivors all present (global ids
+    # are compacted rows; external ids live in main_ext)
+    remaining = set(mi.main_ext.tolist())
+    assert not (remaining & set(victims))
+    assert len(remaining) == len(data) - 3
+    rows = set(np.asarray(new.global_ids).ravel().tolist())
+    rows.discard(INVALID)
+    assert rows == set(range(len(data) - 3))   # every row owned once
+    ids = np.asarray(mi.knn(jnp.asarray(queries), TOP_K, EF)[0])
+    assert not (set(ids.ravel().tolist()) & set(victims))
+
+
+def test_compaction_routes_delta_and_triggers(sharded):
+    """maybe_compact fires on the tombstone-fraction threshold, folds
+    delta vectors into their nearest-centroid shards, and the compacted
+    index finds them."""
+    idx, data, extra, queries = sharded
+    mi = streaming.MutableIndex(idx, tombstone_compact_frac=0.02)
+    exts = [mi.insert(v) for v in extra[:6]]
+    assert mi.maybe_compact() is False     # below both thresholds
+    n_del = int(np.ceil(0.02 * len(data)))
+    for i in range(n_del):
+        mi.delete(i)
+    assert mi.maybe_compact() is True
+    assert mi.pristine and mi.compactions == 1
+    assert mi.n_main == len(data) - n_del + 6
+    # inserted vectors are now main-graph residents, searchable exactly
+    ids, dist = mi.knn(jnp.asarray(extra[:2]), TOP_K, EF)
+    assert np.asarray(ids)[0, 0] == exts[0]
+    assert np.asarray(ids)[1, 0] == exts[1]
+
+
+def test_compaction_commits_pointer_last(tmp_path, unsharded):
+    """Generation roll: after compact(), the pointer names g1, g1's files
+    exist, g0's files are gone, and the WAL restarts empty."""
+    idx, data, extra, _ = unsharded
+    wal_dir = str(tmp_path / "wal")
+    mi = streaming.MutableIndex.wrap(idx, wal_dir=wal_dir)
+    mi.insert(extra[0])
+    mi.delete(3)
+    mi.compact()
+    names = set(os.listdir(wal_dir))
+    assert "index.stream.json" in names
+    assert {"index-g1.snapshot.npz", "index-g1.snapshot.json",
+            "index-g1.stream.npz"} <= names
+    assert not any(n.startswith("index-g0") for n in names)
+    assert not any(n.endswith(streaming.WAL_SUFFIX) for n in names)
+    # a crash that wiped generation g1's pointer would have kept g0: here
+    # the pointer committed, so load serves g1 with zero replay
+    got = streaming.MutableIndex.load(wal_dir)
+    assert got.gen == 1 and got.pristine and got.n_main == mi.n_main
+
+
+def test_searcher_hot_swap_after_compaction(sharded):
+    """compact(searcher=...) swaps the searcher onto the new generation:
+    health resets, the governor rebuilds, and serving continues with the
+    compacted corpus."""
+    idx, data, extra, queries = sharded
+    mi = streaming.MutableIndex(idx)
+    rs = resilience.ResilientSearcher(
+        mi, engine_lib.RetrievalKnobs(top_k=TOP_K, ef=EF, num_shards=S,
+                                      assign="kmeans"),
+        clock=lambda: 0.0, sleep=lambda s: None)
+    q = jnp.asarray(queries)
+    rs.search(q)
+    rs.health.kill(1)
+    mi.delete(0)
+    mi.compact(searcher=rs)
+    assert rs.index is mi and rs.health.n_live == S
+    _, res = rs.search(q)
+    assert 0 not in np.asarray(res.pool_ids)

@@ -10,6 +10,11 @@ Two artifact families are rejected:
   (serve/resilience.py) — runtime serving state, potentially hundreds of
   MB of corpus arrays; a tracked snapshot is always a mistake (a test or
   bench wrote one into the tree instead of a tmp dir).
+- ``*.wal`` / ``*.stream.npz`` / ``*.stream.json`` streaming-index state
+  (serve/streaming.py) — the write-ahead log, external-id sidecar, and
+  generation pointer of a mutable serving index; same runtime-state
+  argument, with the extra hazard that a tracked WAL replays stale
+  mutations into whoever loads it.
 
 The .gitignore already excludes both, but an ignore rule cannot evict a
 file that was force-added or tracked before the rule existed — this
@@ -29,13 +34,17 @@ BYTECODE_SUFFIXES = (".pyc", ".pyo")
 # Keep in sync with serve/resilience.py SNAPSHOT_NPZ / SNAPSHOT_MANIFEST
 # (not imported: this tool must run without PYTHONPATH or jax installed).
 SNAPSHOT_SUFFIXES = (".snapshot.npz", ".snapshot.json")
+# Keep in sync with serve/streaming.py STREAM_SUFFIXES (same rule; the
+# sync is pinned by tests/test_repo.py).
+STREAM_SUFFIXES = (".wal", ".stream.npz", ".stream.json")
 
 
 def is_artifact(path: str) -> bool:
     """True when a repo-relative path is a build/runtime artifact."""
     return ("__pycache__" in path.split("/")
             or path.endswith(BYTECODE_SUFFIXES)
-            or path.endswith(SNAPSHOT_SUFFIXES))
+            or path.endswith(SNAPSHOT_SUFFIXES)
+            or path.endswith(STREAM_SUFFIXES))
 
 
 def tracked_artifacts(root: pathlib.Path = ROOT) -> list[str]:
@@ -50,10 +59,11 @@ def main() -> int:
         print(f"tracked artifact: {path}", file=sys.stderr)
     if bad:
         print(f"{len(bad)} tracked artifact file(s) "
-              f"(__pycache__/.pyc or *.snapshot.*) — "
+              f"(__pycache__/.pyc, *.snapshot.*, or WAL/stream state) — "
               f"git rm --cached them", file=sys.stderr)
         return 1
-    print("repo hygiene OK (no tracked __pycache__/.pyc/*.snapshot.*)")
+    print("repo hygiene OK (no tracked __pycache__/.pyc/*.snapshot.*/"
+          "*.wal/*.stream.*)")
     return 0
 
 
