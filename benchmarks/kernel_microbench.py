@@ -10,7 +10,9 @@ shards ∈ {1, 4} (DESIGN.md §11), the query-routed sweep S=4 × p ∈ {1, 2}
 over a kmeans partition (DESIGN.md §13), and the degraded-mode sweep
 (0 vs 1 dead shards × scatter-gather/routed, DESIGN.md §14), the
 streaming sustained-mutation sweep (insert/delete backlog on a
-MutableIndex delta layer, DESIGN.md §15), and audits the traced
+MutableIndex delta layer, DESIGN.md §15), the quantized-corpus sweep
+(fp32 vs sq8 int8 codes + fp32 re-rank, with corpus residency bytes,
+DESIGN.md §16), and audits the traced
 jaxpr: in hash mode (and in the sharded path at S > 1) no intermediate
 array may carry a corpus-sized dimension — i.e. no (b, n) / (b, m, n)
 state is ever materialized — which is the property that makes million-key
@@ -40,6 +42,7 @@ import numpy as np
 
 from benchmarks import common
 from repro.core import graph, hashset, search
+from repro.core import metric as metric_lib
 from repro.kernels import ops
 
 BENCH_JSON = os.path.join(os.path.dirname(__file__), "..",
@@ -98,7 +101,9 @@ def search_scaling_rows(sizes=(10_000, 100_000, 1_000_000), *,
     the query-routed sweep S=4 × p ∈ {1, 2} over a kmeans partition
     (DESIGN.md §13 — the configuration that turns sharding from a capacity
     win into a throughput win; on this host it takes the fused flat-graph
-    program, on an S-device mesh the same call routes per device).
+    program, on an S-device mesh the same call routes per device), and the
+    quantized sweep quantize ∈ {none, sq8} on the serving profile
+    (DESIGN.md §16 — ``corpus_bytes`` tracks the ~4× residency cut).
 
     Synthetic corpora: an 8-blob Gaussian mixture (unit spread, the regime
     where centroid routing is meaningful — pure isotropic noise spreads
@@ -239,6 +244,32 @@ def search_scaling_rows(sizes=(10_000, 100_000, 1_000_000), *,
                              routed_shards=skw.get("routed_shards"),
                              ef=ef, k=k, batch=b, degree=deg,
                              state_bytes=sb)))
+        # Quantized sweep (DESIGN.md §16): the serving profile (hash/W=4)
+        # with the corpus held fp32 vs sq8.  ``corpus_bytes`` records the
+        # residency the mode exists to shrink (~4×: int8 codes + per-dim
+        # fp32 scale + per-row fp32 norms vs fp32 rows); qps on this CPU
+        # host prices the ADC + ef-wide fp32 re-rank overhead, not the
+        # bandwidth win a real accelerator sees.  The quantize="none" row
+        # dispatches the identical program as plain hash/W=4 — it is timed
+        # again here so the none-vs-sq8 delta shares interleaved rounds.
+        quant = metric_lib.resolve("l2").prepare_quantized(data)
+        slots = hashset.auto_slots(search.default_max_hops(ef, 4), 4 * deg)
+        for qz in ("none", "sq8"):
+            def f(qz=qz, q=queries):
+                return search.knn_search(
+                    adj, data, q, k, ef, 0, visited_impl="hash",
+                    expand_width=4, quantize=qz,
+                    quant=quant if qz == "sq8" else None)
+            corpus_bytes = (int(quant.codes.nbytes) + int(quant.scale.nbytes)
+                            + int(quant.norms.nbytes)
+                            if qz == "sq8" else int(data.nbytes))
+            cfgs.append(dict(
+                name=f"search_scaling/quantized/{qz}/n={n}", fn=f,
+                recall_fn=functools.partial(f, q=rq),
+                rec=dict(path="quantized", quantize=qz, n=n, impl="hash",
+                         expand_width=4, num_shards=1, ef=ef, k=k, batch=b,
+                         degree=deg, corpus_bytes=corpus_bytes,
+                         state_bytes=b * slots * 4)))
         timed = _time_interleaved([c["fn"] for c in cfgs], reps=reps,
                                   prime=True)
         for cfg, (sec, res) in zip(cfgs, timed):
@@ -396,7 +427,13 @@ def write_bench_json(records: list[dict], *, quick: bool = False) -> None:
                     "qps under an un-compacted insert/delete backlog; "
                     "recall there is against the LIVE corpus (inserts "
                     "included, deleted rows excluded) and recall_drift "
-                    "is vs the pristine ins=0/del=0 baseline row",
+                    "is vs the pristine ins=0/del=0 baseline row. PR 10 "
+                    "added the quantized rows (path=quantized): the "
+                    "serving profile with the corpus fp32 vs sq8 int8 "
+                    "codes + fp32 re-rank; corpus_bytes records the ~4x "
+                    "residency reduction, and on this CPU host the sq8 "
+                    "qps prices ADC+re-rank overhead, not the bandwidth "
+                    "win an accelerator sees",
         "timing": {"policy": "primed-interleaved-min-of-reps",
                    "noise": "host wall time is +/-80% under load; per-n "
                             "config sets share timing rounds and report "

@@ -17,7 +17,7 @@ import jax.numpy as jnp
 import numpy as np
 
 from repro.core import knng, search
-from repro.core.graph import MultiGraph
+from repro.core.graph import INVALID, MultiGraph
 
 
 @dataclasses.dataclass
@@ -29,10 +29,20 @@ class EvalPoint:
 
 
 def recall_at_k(found_ids: jax.Array, gt_ids: jax.Array) -> float:
-    """Mean |found ∩ gt| / k over the query batch."""
-    k = gt_ids.shape[1]
-    hits = (found_ids[:, :, None] == gt_ids[:, None, :]).any(-1)
-    return float(jnp.mean(jnp.sum(hits, axis=-1) / k))
+    """Mean |found ∩ gt| / |valid gt| over the query batch.
+
+    Both sides may be INVALID-padded (short pools, dead shards, n < k
+    ground truth).  An INVALID ground-truth slot is *padding*, not a
+    neighbor: matching it against an INVALID found slot must not count
+    as a hit, so matches are masked to valid gt entries and each query
+    normalizes by its own valid-gt count (floored at 1 — an all-padding
+    gt row contributes 0, not NaN).
+    """
+    valid = gt_ids != INVALID
+    match = (found_ids[:, :, None] == gt_ids[:, None, :]) & valid[:, None, :]
+    hits = match.any(-1)
+    denom = jnp.maximum(jnp.sum(valid, axis=-1), 1)
+    return float(jnp.mean(jnp.sum(hits, axis=-1) / denom))
 
 
 def ground_truth(data, queries, k: int, metric: str = "l2") -> jax.Array:

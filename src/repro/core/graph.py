@@ -201,6 +201,14 @@ class ShardedGraph:
                   O(n·Mx) offset materialization per search call; None on
                   pre-routing ShardedGraphs (the routed search then falls
                   back to the shard_map path).
+      qcodes:     int8[S, n_s, d] SQ8 codes of the metric-prepared shard
+                  rows (DESIGN.md §16), present iff the graph was
+                  quantized (``quantize_sharded``); None otherwise
+                  (``sharded_knn_search(quantize="sq8")`` then raises).
+      qscale:     float32[S, d] per-dimension SQ scale — one GLOBAL scale
+                  replicated per shard row so codes are comparable across
+                  shards and the fused routed path can use any row.
+      qnorms:     float32[S, n_s] squared norms of the dequantized rows.
     """
     ids: jax.Array
     data: jax.Array
@@ -209,6 +217,9 @@ class ShardedGraph:
     counts: jax.Array
     centroids: jax.Array | None = None
     flat_ids: jax.Array | None = None
+    qcodes: jax.Array | None = None
+    qscale: jax.Array | None = None
+    qnorms: jax.Array | None = None
 
     @property
     def num_shards(self) -> int:
@@ -378,7 +389,8 @@ def partition(data: jax.Array, num_shards: int, *,
               assignment: str = "chunked", seed: int = 0,
               graph_ids: jax.Array | None = None,
               build_fn=None, degree: int = 16,
-              metric: str = "l2", mesh=None) -> ShardedGraph:
+              metric: str = "l2", quantize: str = "none",
+              mesh=None) -> ShardedGraph:
     """Partition a corpus (and its graph) into a ``ShardedGraph``.
 
     Per-shard subgraphs come from one of three sources:
@@ -407,8 +419,17 @@ def partition(data: jax.Array, num_shards: int, *,
     device before that one placement, so building truly
     beyond-device-memory indexes needs shard-at-a-time staging — the
     multi-host follow-up DESIGN.md §11 names.
+
+    ``quantize="sq8"`` additionally stores SQ8 codes for every shard
+    (``quantize_sharded``, DESIGN.md §16) so
+    ``sharded_knn_search(quantize="sq8")`` can search int8; the graph is
+    always built over the fp32 vectors either way (§2.1 bit-identity).
     """
     import numpy as np
+
+    if quantize not in metric_lib.QUANTIZE_MODES:
+        raise ValueError(
+            f"quantize {quantize!r} not in {metric_lib.QUANTIZE_MODES}")
 
     from jax.sharding import NamedSharding, PartitionSpec
 
@@ -460,8 +481,11 @@ def partition(data: jax.Array, num_shards: int, *,
         all_data.append(local)
         all_gids.append(jnp.asarray(part, jnp.int32))
         entries.append(entry)
-    return assemble_sharded(all_ids, all_data, all_gids, entries,
-                            centroids=cents, mesh=mesh)
+    sg = assemble_sharded(all_ids, all_data, all_gids, entries,
+                          centroids=cents, mesh=mesh)
+    if quantize == "sq8":
+        sg = quantize_sharded(sg, metric=metric, mesh=mesh)
+    return sg
 
 
 def assemble_sharded(ids_parts, data_parts, gid_parts, entries, *,
@@ -521,6 +545,33 @@ def place_sharded(sg: ShardedGraph, mesh=None) -> ShardedGraph:
 
     mesh = mesh or sharding_lib.search_mesh(sg.num_shards)
     return jax.device_put(sg, NamedSharding(mesh, PartitionSpec("shard")))
+
+
+def quantize_sharded(sg: ShardedGraph, metric: str = "l2",
+                     mesh=None) -> ShardedGraph:
+    """Attach SQ8 codes to a ShardedGraph (DESIGN.md §16).
+
+    Computes ONE global per-dimension scale over the metric-prepared
+    corpus (padding rows are zero, so they never raise the abs-max — the
+    scale equals the unpadded corpus's) and stores per-shard int8 codes
+    plus dequantized-row norms, re-placed on the ``"shard"`` mesh.  The
+    scale is replicated per shard row so every shard's codes decode with
+    the same statistic and the fused routed path can read any row.
+    """
+    met = metric_lib.resolve(metric)
+    num_shards, n_s, d = sg.data.shape
+    q = quantize_sq8_data(sg.data.reshape(-1, d), met)
+    sg = dataclasses.replace(
+        sg,
+        qcodes=q.codes.reshape(num_shards, n_s, d),
+        qscale=jnp.tile(q.scale[None, :], (num_shards, 1)),
+        qnorms=q.norms.reshape(num_shards, n_s))
+    return place_sharded(sg, mesh=mesh)
+
+
+def quantize_sq8_data(data: jax.Array, metric) -> metric_lib.QuantizedData:
+    """``Metric.prepare_quantized`` with a convenient string/Metric arg."""
+    return metric_lib.resolve(metric).prepare_quantized(data)
 
 
 def pytree_bytes(tree: Any) -> int:

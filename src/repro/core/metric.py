@@ -29,11 +29,59 @@ form through search/prune/commit — so the hot loops never re-normalize.
 from __future__ import annotations
 
 import dataclasses
+from typing import NamedTuple
 
 import jax
 import jax.numpy as jnp
 
 KERNEL_FORMS = ("l2", "ip")
+
+# Serving-time corpus representations (DESIGN.md §16): "none" is the fp32
+# default (bit-identical to before the knob existed); "sq8" searches a
+# scalar-quantized int8 corpus and re-ranks the final pool against fp32.
+QUANTIZE_MODES = ("none", "sq8")
+
+
+class QuantizedData(NamedTuple):
+    """A scalar-quantized (symmetric per-dimension int8) corpus view.
+
+    Produced ONCE at the data boundary (``Metric.prepare_quantized`` /
+    ``quantize_sq8``) and consumed by the quantized kernel forms; a pytree,
+    so it passes through jit boundaries and its *structure* keys the jit
+    cache — the fp32 path (a bare array) dispatches its unchanged program.
+
+    Attributes:
+      codes: int8[n, d] — ``clip(round(x / scale), ±127)``.  The 4× memory
+             win over the fp32 corpus.
+      scale: f32[d] — per-dimension symmetric scale ``max|x[:, d]| / 127``
+             (zero-point is identically 0; all-zero dimensions get scale 1
+             so the division is always defined).
+      norms: f32[n] — squared L2 norms of the DEQUANTIZED rows
+             ``codes * scale``, precomputed so the l2 kernel form's norm
+             expansion prices distances to the dequantized corpus exactly.
+    """
+    codes: jax.Array
+    scale: jax.Array
+    norms: jax.Array
+
+
+def quantize_sq8(x: jax.Array) -> QuantizedData:
+    """Symmetric per-dimension int8 scalar quantization (DESIGN.md §16).
+
+    ``x`` must already be in prepared (kernel-form) space — cosine callers
+    normalize first (``Metric.prepare_quantized`` does both).  Asymmetric
+    compute (ADC): queries stay fp32 and are pre-scaled by ``scale`` once,
+    so the cross term ``(q·scale)·codes ≡ q·(codes·scale)`` prices exact
+    fp32 distances to the dequantized corpus — per-dimension scales cannot
+    ride a pure int8×int8 dot.
+    """
+    x = jnp.asarray(x, jnp.float32)
+    amax = jnp.max(jnp.abs(x), axis=0)                       # (d,)
+    scale = jnp.where(amax > 0, amax / 127.0, 1.0)
+    codes = jnp.clip(jnp.round(x / scale), -127, 127).astype(jnp.int8)
+    deq = codes.astype(jnp.float32) * scale
+    norms = jnp.sum(deq * deq, axis=-1)
+    return QuantizedData(codes=codes, scale=scale, norms=norms)
 
 
 def normalize(x: jax.Array, *, eps: float = 1e-12) -> jax.Array:
@@ -78,6 +126,13 @@ class Metric:
     def prepare(self, x: jax.Array) -> jax.Array:
         """One-time data-boundary transform (unit-normalize for cosine)."""
         return normalize(x) if self.normalize else x
+
+    def prepare_quantized(self, x: jax.Array) -> QuantizedData:
+        """Quantized data-boundary transform (DESIGN.md §16): ``prepare``
+        (so cosine quantizes unit vectors), then symmetric int8 SQ.  Run
+        once at ``build_index`` time; the scale/zero-point live on the
+        index and its snapshot manifest, never recomputed at search time."""
+        return quantize_sq8(self.prepare(x))
 
 
 L2 = Metric("l2", "l2")

@@ -201,6 +201,55 @@ def apply_tombstones(pool_ids, pool_dist, tomb_ids):
             jnp.take_along_axis(pool_dist, order, axis=-1))
 
 
+def _corpus_len(data) -> int:
+    """Corpus row count of either representation the search accepts:
+    a bare f32[n, d] array, or a ``metric.QuantizedData`` (DESIGN.md §16)."""
+    if isinstance(data, metric_lib.QuantizedData):
+        return data.codes.shape[0]
+    return data.shape[0]
+
+
+def _gathered_distance(data, flat_ids, queries, metric):
+    """Per-query gathered distances under either corpus representation.
+
+    fp32 gathers the vectors and dispatches the V_delta-aware kernel;
+    SQ8 gathers int8 codes + precomputed dequantized norms and dispatches
+    the quantized form (ops.gather_distance_q) — same (b, k) f32 output,
+    priced against the dequantized corpus (DESIGN.md §16).
+    """
+    if isinstance(data, metric_lib.QuantizedData):
+        ccodes = data.codes[flat_ids]                    # (b, k, d) int8
+        cn = data.norms[flat_ids]                        # (b, k)
+        return ops.gather_distance_q(queries, ccodes, data.scale, cn,
+                                     metric=metric)
+    cvec = data[flat_ids]                                # (b, k, d)
+    return ops.gather_distance(queries, cvec, metric=metric)
+
+
+def rerank_pool(queries, data, pool_ids, *, metric):
+    """Re-rank a quantized-search pool against the fp32 corpus.
+
+    The ef-wide pool a ``QuantizedData`` beam search returns ranks by
+    distances to the *dequantized* corpus; before any k truncation the
+    surviving candidates are re-priced against the full-precision keys and
+    stably re-sorted (DESIGN.md §16).  INVALID slots keep +inf and sink;
+    ties keep the quantized-pool order (stable argsort).  Returns
+    (pool_ids, pool_dist, n_rerank) where ``n_rerank`` counts the fp32
+    distances computed — the quantized path's extra #dist, added to
+    ``n_computed`` but not ``n_fresh`` (re-pricing visited nodes computes
+    distances without visiting anything new).
+    """
+    valid = pool_ids != INVALID
+    cvec = data[jnp.maximum(pool_ids, 0)]                # (b, ef, d)
+    dist = ops.gather_distance(
+        queries, cvec, cached=jnp.full(pool_ids.shape, jnp.inf, jnp.float32),
+        mask=valid, metric=metric)
+    order = jnp.argsort(dist, axis=-1, stable=True)
+    return (jnp.take_along_axis(pool_ids, order, axis=-1),
+            jnp.take_along_axis(dist, order, axis=-1),
+            jnp.sum(valid).astype(jnp.int32))
+
+
 def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
                        slot_mask, pool_ids, pool_dist, expanded,
                        visited, cache_d, cache_has, share_cache, metric,
@@ -219,7 +268,7 @@ def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
     ``cache_has`` likewise bool[b, n] or int32[b, S'].
     """
     b, m, ef_max = pool_ids.shape
-    n = data.shape[0]
+    n = _corpus_len(data)
     mx = graph_ids.shape[2]
     kx = width * mx
     brange = jnp.arange(b)
@@ -277,8 +326,7 @@ def _expand_all_graphs(graph_ids, data, queries, query_ids, row_mask,
     else:
         first = flat_valid
 
-    cvec = data[flat_ids]                                        # (b, m*kx, d)
-    dists = ops.gather_distance(queries, cvec, metric=metric)
+    dists = _gathered_distance(data, flat_ids, queries, metric)
     if share_cache:
         # V_delta's domain is exactly the union of per-graph visit sets, so
         # only membership is tracked; the values come from the batched kernel
@@ -349,7 +397,10 @@ def beam_search(
     if met.normalize:
         # One in-jit normalization per call; builders avoid even this by
         # preparing the dataset once and passing the kernel form ("ip").
-        data = metric_lib.normalize(data)
+        # A QuantizedData corpus was normalized BEFORE quantization
+        # (Metric.prepare_quantized) — only the queries normalize here.
+        if not isinstance(data, metric_lib.QuantizedData):
+            data = metric_lib.normalize(data)
         queries = metric_lib.normalize(queries)
     metric = met.kernel
     m, n, mx = graph_ids.shape
@@ -383,8 +434,8 @@ def beam_search(
         ep = entry[:, i]
         ep_safe = jnp.maximum(ep, 0)
         ok = (ep != INVALID) & (ep != query_ids) & row_mask
-        evec = data[ep_safe][:, None, :]                         # (b, 1, d)
-        d0 = ops.gather_distance(queries, evec, metric=metric)[:, 0]
+        d0 = _gathered_distance(data, ep_safe[:, None], queries,
+                                metric)[:, 0]
         if share_cache:
             if cache_has.dtype != jnp.bool_:
                 cache_has, c_found, _ = hashset.lookup_insert(
@@ -454,7 +505,9 @@ def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
                hash_slots: int | None = None,
                expand_width: int = 1,
                row_mask: jax.Array | None = None,
-               tombstone_ids: jax.Array | None = None) -> SearchResult:
+               tombstone_ids: jax.Array | None = None,
+               quantize: str = "none",
+               quant: metric_lib.QuantizedData | None = None) -> SearchResult:
     """Single-graph external k-ANNS (evaluation path, Alg. 1).
 
     ``metric`` must match the metric the graph was built under; pool
@@ -469,7 +522,25 @@ def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
     the ef-wide pool before the k truncation (``apply_tombstones``,
     DESIGN.md §15); ``None`` dispatches the exact program of before the
     parameter existed.
+
+    ``quantize="sq8"`` (DESIGN.md §16) beam-searches the int8 ``quant``
+    corpus (a ``metric.QuantizedData`` over the same prepared vectors as
+    ``data`` — ``Metric.prepare_quantized``) and re-ranks the final
+    ef-wide pool against the fp32 ``data`` before the k truncation
+    (``rerank_pool``); the re-rank's fp32 distances add to ``n_computed``
+    while ``n_fresh`` keeps its paper-exact beam accounting.  The default
+    ``"none"`` dispatches the exact fp32 program of before the knob
+    existed.
     """
+    if quantize not in metric_lib.QUANTIZE_MODES:
+        raise ValueError(
+            f"quantize {quantize!r} not in {metric_lib.QUANTIZE_MODES}")
+    if quantize == "sq8" and quant is None:
+        raise ValueError(
+            "quantize='sq8' needs the quantized corpus: pass "
+            "quant=metric.QuantizedData (Metric.prepare_quantized over the "
+            "same vectors as data; retrieval.build_index(quantize='sq8') "
+            "stores one on the index)")
     if k > ef:
         raise ValueError(
             f"k={k} > ef={ef}: the search pool holds only ef candidates, so "
@@ -488,7 +559,7 @@ def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
     b = queries.shape[0]
     ep = jnp.broadcast_to(jnp.asarray(entry, jnp.int32), (b,))[:, None]
     res = beam_search(
-        graph_ids, data, queries,
+        graph_ids, quant if quantize == "sq8" else data, queries,
         jnp.full((b,), INVALID, jnp.int32),
         jnp.ones((b,), bool) if row_mask is None else row_mask,
         jnp.array([ef], jnp.int32), ep,
@@ -496,10 +567,15 @@ def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
         share_cache=False, metric=metric, visited_impl=visited_impl,
         hash_slots=hash_slots, expand_width=expand_width)
     pool_i, pool_d = res.pool_ids[:, 0], res.pool_dist[:, 0]
+    n_comp = res.n_computed
+    if quantize == "sq8":
+        pool_i, pool_d, n_rr = rerank_pool(queries, data, pool_i,
+                                           metric=metric)
+        n_comp = n_comp + n_rr
     if tombstone_ids is not None:
         pool_i, pool_d = apply_tombstones(pool_i, pool_d, tombstone_ids)
     return SearchResult(pool_i[:, :k], pool_d[:, :k],
-                        res.n_fresh, res.n_computed, res.hops,
+                        res.n_fresh, n_comp, res.hops,
                         res.cache_d, res.cache_has)
 
 
@@ -508,7 +584,7 @@ def knn_search(graph_ids: jax.Array, data: jax.Array, queries: jax.Array,
 # ---------------------------------------------------------------------------
 
 def _shard_search_body(graph_ids, data, global_ids, entries, shard_mask,
-                       queries, row_mask, *, ef, max_hops, metric,
+                       queries, row_mask, *quant, ef, max_hops, metric,
                        visited_impl, hash_slots, expand_width):
     """Search every shard of one mesh slot's block; merge its pools locally.
 
@@ -523,6 +599,13 @@ def _shard_search_body(graph_ids, data, global_ids, entries, shard_mask,
     order through the rank merge; counters psum over the mesh so every
     slot returns the global totals.
 
+    ``*quant`` (DESIGN.md §16), when present, is this slot's
+    ``(qcodes, qscale, qnorms)`` SQ8 block: each shard then beam-searches
+    its int8 codes and re-ranks its local ef-pool against its fp32
+    ``data[s]`` *before* the global-id restore and the fold, so every
+    distance that crosses a merge is an fp32 distance and the folded pool
+    stays rank-merge-sorted.  The re-rank counts add to ``n_comp``.
+
     ``shard_mask`` (bool[s_loc], DESIGN.md §14) is this slot's view of the
     shard liveness mask: a dead shard searches with an all-False row mask,
     which is beam_search's zero-work state — its pool comes back all
@@ -536,18 +619,25 @@ def _shard_search_body(graph_ids, data, global_ids, entries, shard_mask,
     pool_i = pool_d = None
     n_fresh = n_comp = hops = jnp.int32(0)
     for s in range(s_loc):
+        sdata = (metric_lib.QuantizedData(quant[0][s], quant[1][s],
+                                          quant[2][s])
+                 if quant else data[s])
         ep = jnp.broadcast_to(entries[s].astype(jnp.int32), (b,))[:, None]
         res = beam_search(
-            graph_ids[s][None], data[s], queries, qids,
+            graph_ids[s][None], sdata, queries, qids,
             row_mask & shard_mask[s],
             jnp.array([ef], jnp.int32), ep,
             ef_max=ef, max_hops=max_hops, share_cache=False, metric=metric,
             visited_impl=visited_impl, hash_slots=hash_slots,
             expand_width=expand_width)
         lids = res.pool_ids[:, 0]                              # (b, ef) local
+        dist = res.pool_dist[:, 0]
+        if quant:
+            lids, dist, n_rr = rerank_pool(queries, data[s], lids,
+                                           metric=metric)
+            n_comp += n_rr
         gids = jnp.where(lids == INVALID, INVALID,
                          global_ids[s][jnp.maximum(lids, 0)])
-        dist = res.pool_dist[:, 0]
         if pool_i is None:
             pool_i, pool_d = gids, dist
         else:
@@ -564,32 +654,38 @@ def _shard_search_body(graph_ids, data, global_ids, entries, shard_mask,
 
 @functools.lru_cache(maxsize=None)
 def _sharded_search_fn(mesh, *, k, ef, max_hops, metric, visited_impl,
-                       hash_slots, expand_width, tombstones=False):
+                       hash_slots, expand_width, tombstones=False,
+                       quantize=False):
     """jit'd mesh-partitioned search, cached per (mesh, static knobs).
 
     ``tombstones=True`` compiles a variant taking one extra trailing
     ``tomb_ids`` argument, masked into the folded ef-wide pool before the
-    k truncation (``apply_tombstones``, DESIGN.md §15).  The False variant
-    is byte-for-byte the program of before the flag existed — the healthy
-    no-delete serving path stays the bit-identical cached program.
+    k truncation (``apply_tombstones``, DESIGN.md §15).  ``quantize=True``
+    compiles the SQ8 variant (DESIGN.md §16): three shard-sharded trailing
+    arguments ``(qcodes, qscale, qnorms)`` *before* any ``tomb_ids``.  The
+    all-False variant is byte-for-byte the program of before the flags
+    existed — the healthy fp32 no-delete serving path stays the
+    bit-identical cached program.
     """
     body = functools.partial(
         _shard_search_body, ef=ef, max_hops=max_hops, metric=metric,
         visited_impl=visited_impl, hash_slots=hash_slots,
         expand_width=expand_width)
+    n_quant = 3 if quantize else 0
     sharded = shard_map(
         body, mesh=mesh,
         in_specs=(P("shard"), P("shard"), P("shard"), P("shard"),
-                  P("shard"), P(), P()),
+                  P("shard"), P(), P()) + (P("shard"),) * n_quant,
         out_specs=(P("shard"), P("shard"), P(), P(), P()),
         check_rep=False)
 
     @jax.jit
     def run(graph_ids, data, global_ids, entries, shard_mask, queries,
-            row_mask, *tomb):
+            row_mask, *extra):
         blocks_i, blocks_d, n_fresh, n_comp, hops = sharded(
             graph_ids, data, global_ids, entries, shard_mask, queries,
-            row_mask)
+            row_mask, *extra[:n_quant])
+        tomb = extra[n_quant:]
         # Fold the per-slot pools in slot order: slots hold contiguous
         # shard blocks, and each block was itself folded in shard order, so
         # the tie precedence is globally (shard, pool rank) — identical to
@@ -632,7 +728,7 @@ def route_topk(scores: jax.Array, p: int) -> jax.Array:
 
 
 def _routed_search_body(graph_ids, data, global_ids, entries, qblocks,
-                       qmask, *, ef, max_hops, metric, visited_impl,
+                       qmask, *quant, ef, max_hops, metric, visited_impl,
                        hash_slots, expand_width):
     """Search one mesh slot's shards over their own routed query blocks.
 
@@ -646,6 +742,11 @@ def _routed_search_body(graph_ids, data, global_ids, entries, qblocks,
     the shard_map.  Counters psum over the mesh: since un-routed
     (query, shard) pairs never enter any block, the totals count routed
     work only (DESIGN.md §13).
+
+    ``*quant`` as in ``_shard_search_body`` (DESIGN.md §16): beam over the
+    slot's int8 codes, per-shard fp32 re-rank before the global-id
+    restore (the fold happens outside the shard_map, so the pools that
+    leave this body must already carry fp32 distances).
     """
     s_loc = graph_ids.shape[0]
     bq = qblocks.shape[1]
@@ -653,17 +754,25 @@ def _routed_search_body(graph_ids, data, global_ids, entries, qblocks,
     outs_i, outs_d = [], []
     n_fresh = n_comp = hops = jnp.int32(0)
     for s in range(s_loc):
+        sdata = (metric_lib.QuantizedData(quant[0][s], quant[1][s],
+                                          quant[2][s])
+                 if quant else data[s])
         ep = jnp.broadcast_to(entries[s].astype(jnp.int32), (bq,))[:, None]
         res = beam_search(
-            graph_ids[s][None], data[s], qblocks[s], qids, qmask[s],
+            graph_ids[s][None], sdata, qblocks[s], qids, qmask[s],
             jnp.array([ef], jnp.int32), ep,
             ef_max=ef, max_hops=max_hops, share_cache=False, metric=metric,
             visited_impl=visited_impl, hash_slots=hash_slots,
             expand_width=expand_width)
         lids = res.pool_ids[:, 0]                             # (Bq, ef) local
+        dist = res.pool_dist[:, 0]
+        if quant:
+            lids, dist, n_rr = rerank_pool(qblocks[s], data[s], lids,
+                                           metric=metric)
+            n_comp += n_rr
         outs_i.append(jnp.where(lids == INVALID, INVALID,
                                 global_ids[s][jnp.maximum(lids, 0)]))
-        outs_d.append(res.pool_dist[:, 0])
+        outs_d.append(dist)
         n_fresh += res.n_fresh
         n_comp += res.n_computed
         hops = jnp.maximum(hops, res.hops)
@@ -675,28 +784,34 @@ def _routed_search_body(graph_ids, data, global_ids, entries, qblocks,
 
 @functools.lru_cache(maxsize=None)
 def _routed_search_fn(mesh, *, k, ef, max_hops, metric, visited_impl,
-                      hash_slots, expand_width, p, tombstones=False):
+                      hash_slots, expand_width, p, tombstones=False,
+                      quantize=False):
     """jit'd routed mesh search, cached per (mesh, static knobs, p).
 
-    ``tombstones`` as in ``_sharded_search_fn``: True adds a trailing
-    ``tomb_ids`` argument masked into the per-query fold before truncation.
+    ``tombstones`` / ``quantize`` as in ``_sharded_search_fn``: True adds
+    a trailing ``tomb_ids`` argument masked into the per-query fold before
+    truncation; ``quantize=True`` adds the three shard-sharded SQ8
+    arguments ``(qcodes, qscale, qnorms)`` before any ``tomb_ids``.
     """
     body = functools.partial(
         _routed_search_body, ef=ef, max_hops=max_hops, metric=metric,
         visited_impl=visited_impl, hash_slots=hash_slots,
         expand_width=expand_width)
+    n_quant = 3 if quantize else 0
     sharded = shard_map(
         body, mesh=mesh,
-        in_specs=(P("shard"),) * 6,
+        in_specs=(P("shard"),) * (6 + n_quant),
         out_specs=(P("shard"), P("shard"), P(), P(), P()),
         check_rep=False)
 
     @jax.jit
     def run(graph_ids, data, global_ids, entries, queries, q_index, q_mask,
-            routed, slot_of, row_mask, *tomb):
+            routed, slot_of, row_mask, *extra):
         qblocks = queries[q_index]                             # (S, Bq, d)
         blocks_i, blocks_d, n_fresh, n_comp, hops = sharded(
-            graph_ids, data, global_ids, entries, qblocks, q_mask)
+            graph_ids, data, global_ids, entries, qblocks, q_mask,
+            *extra[:n_quant])
+        tomb = extra[n_quant:]
         # Per-query fold over its p pools: query b's j-th routed shard
         # searched it at (routed[b,j], slot_of[b,j]).  routed rows are
         # sorted ascending, so the fold runs in ascending shard order —
@@ -718,7 +833,8 @@ def _routed_search_fn(mesh, *, k, ef, max_hops, metric, visited_impl,
 
 @functools.lru_cache(maxsize=None)
 def _fused_routed_search_fn(*, k, ef, max_hops, metric, visited_impl,
-                            hash_slots, expand_width, p, tombstones=False):
+                            hash_slots, expand_width, p, tombstones=False,
+                            quantize=False):
     """jit'd single-dispatch routed search over the stacked-flat graph.
 
     The packed execution strategy (DESIGN.md §13): when a mesh slot holds
@@ -747,16 +863,27 @@ def _fused_routed_search_fn(*, k, ef, max_hops, metric, visited_impl,
     paths pick identical shards.  (Consequence: a monkeypatched
     ``route_topk`` only affects this path's freshly-compiled entries — the
     oracle's mutation test targets the host-routed mesh path.)
+
+    ``quantize=True`` (DESIGN.md §16): three trailing SQ8 arguments
+    ``(qcodes (S,n_s,d) int8, qscale (S,d) replicated global scale,
+    qnorms (S,n_s))`` before any ``tomb_ids``; the b·p-row beam runs over
+    the flattened codes and every row's ef-pool re-ranks against the fp32
+    flat data before the per-query fold, so folded distances are fp32.
     """
     met = metric_lib.resolve(metric)
+    n_quant = 3 if quantize else 0
 
     @jax.jit
     def run(flat_ids, data, global_ids, entries, centroids, shard_mask,
-            queries, row_mask, *tomb):
+            queries, row_mask, *extra):
+        quant, tomb = extra[:n_quant], extra[n_quant:]
         b = queries.shape[0]
         n_s, d = data.shape[1], data.shape[2]
         flat_data = data.reshape(-1, d)                # contiguous: no copy
         flat_gids = global_ids.reshape(-1)
+        beam_data = (metric_lib.QuantizedData(
+            quant[0].reshape(-1, d), quant[1][0], quant[2].reshape(-1))
+            if quantize else flat_data)
         qprep = met.prepare(queries)
         scores = metric_lib.kernel_distance(
             qprep[:, None, :], centroids[None, :, :], met.kernel)
@@ -774,16 +901,22 @@ def _fused_routed_search_fn(*, k, ef, max_hops, metric, visited_impl,
         ep = (entries[routed] + routed * n_s).reshape(-1)        # flat ids
         rmask = jnp.repeat(row_mask, p_, axis=0)
         res = beam_search(
-            flat_ids[None], flat_data, qrows,
+            flat_ids[None], beam_data, qrows,
             jnp.full((b * p_,), INVALID, jnp.int32), rmask,
             jnp.array([ef], jnp.int32), ep[:, None],
             ef_max=ef, max_hops=max_hops, share_cache=False, metric=metric,
             visited_impl=visited_impl, hash_slots=hash_slots,
             expand_width=expand_width)
         lids = res.pool_ids[:, 0]                           # (b*p, ef) flat
+        dist = res.pool_dist[:, 0]
+        n_comp = res.n_computed
+        if quantize:
+            lids, dist, n_rr = rerank_pool(qrows, flat_data, lids,
+                                           metric=metric)
+            n_comp = n_comp + n_rr
         gpool = jnp.where(lids == INVALID, INVALID,
                           flat_gids[jnp.maximum(lids, 0)]).reshape(b, p_, -1)
-        dpool = res.pool_dist[:, 0].reshape(b, p_, -1)
+        dpool = dist.reshape(b, p_, -1)
         pool_i, pool_d = gpool[:, 0], dpool[:, 0]
         for j in range(1, p):
             pool_i, pool_d, _ = _merge_topk(
@@ -793,8 +926,18 @@ def _fused_routed_search_fn(*, k, ef, max_hops, metric, visited_impl,
             pool_i, pool_d = apply_tombstones(pool_i, pool_d, tomb[0])
         pool_i = jnp.where(row_mask[:, None], pool_i[:, :k], INVALID)
         pool_d = jnp.where(row_mask[:, None], pool_d[:, :k], jnp.inf)
-        return pool_i, pool_d, res.n_fresh, res.n_computed, res.hops
+        return pool_i, pool_d, res.n_fresh, n_comp, res.hops
     return run
+
+
+# Warn-once state for the routed_shards > live-shards clamp: holds the
+# (num_shards, n_live, p) tuple of the last ShardHealth state that warned.
+# A degraded serving loop calls sharded_knn_search per batch — warning on
+# every call floods logs with thousands of identical lines — so the clamp
+# warns once per state *transition*: repeat calls under the same degraded
+# state stay silent, and any unclamped routed call resets the state so the
+# next degradation warns again.
+_CLAMP_WARNED_STATE: "tuple[int, int, int] | None" = None
 
 
 def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
@@ -805,6 +948,7 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
                        routed_shards: int | None = None,
                        shard_mask=None,
                        tombstone_ids: jax.Array | None = None,
+                       quantize: str = "none",
                        mesh=None) -> SearchResult:
     """Scatter-gather k-ANNS over a mesh-partitioned corpus (DESIGN.md §11).
 
@@ -858,6 +1002,15 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
     surfaces even while still a node of some shard's graph.  ``None`` (and
     an empty array) dispatches the exact cached program of before the
     parameter existed (static ``tombstones=False`` variant).
+
+    ``quantize="sq8"`` (DESIGN.md §16) beam-searches each shard's int8
+    codes (``ShardedGraph.qcodes`` / ``qscale`` / ``qnorms`` — stored by
+    ``graph.partition(..., quantize="sq8")``) and re-ranks every per-shard
+    ef-pool against that shard's fp32 rows *before* the global-id restore
+    and the fold, on all three execution strategies; re-rank distances add
+    to ``n_computed``.  ``"none"`` dispatches the exact fp32 cached
+    program of before the knob existed (static ``quantize=False``
+    variant).
     """
     if k > ef:
         raise ValueError(
@@ -867,6 +1020,15 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
     if visited_impl not in VISITED_IMPLS:
         raise ValueError(
             f"visited_impl {visited_impl!r} not in {VISITED_IMPLS}")
+    if quantize not in metric_lib.QUANTIZE_MODES:
+        raise ValueError(
+            f"quantize {quantize!r} not in {metric_lib.QUANTIZE_MODES}")
+    if quantize == "sq8" and getattr(sharded_graph, "qcodes", None) is None:
+        raise ValueError(
+            "quantize='sq8' needs per-shard int8 codes but this "
+            "ShardedGraph has none — rebuild it with "
+            "graph.partition(..., quantize='sq8') (or "
+            "retrieval.build_index(quantize='sq8')), which stores them")
     if expand_width < 1:
         raise ValueError(f"expand_width must be >= 1, got {expand_width}")
     if row_mask is not None:
@@ -902,6 +1064,7 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
                 f"least one shard (ShardHealth.revive) or swap in a "
                 f"snapshot (serve.resilience)")
     n_live = int(shard_mask.sum()) if shard_mask is not None else num_shards
+    global _CLAMP_WARNED_STATE
     if routed_shards is not None:
         p = int(routed_shards)
         if not 1 <= p <= num_shards:
@@ -910,12 +1073,21 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
                 f"num_shards={num_shards}]: each query searches its top-p "
                 f"shards by centroid distance")
         if p > n_live:
-            warnings.warn(
-                f"routed_shards={p} exceeds the {n_live} live shards "
-                f"(shard_mask kills {num_shards - n_live}); clamping to "
-                f"{n_live} — every live shard is searched (DESIGN.md §14)",
-                stacklevel=2)
+            # Warn once per ShardHealth state transition, not per call: a
+            # degraded serving loop re-enters here every batch with the
+            # same (num_shards, n_live, p) state.
+            clamp_state = (num_shards, n_live, p)
+            if _CLAMP_WARNED_STATE != clamp_state:
+                warnings.warn(
+                    f"routed_shards={p} exceeds the {n_live} live shards "
+                    f"(shard_mask kills {num_shards - n_live}); clamping "
+                    f"to {n_live} — every live shard is searched "
+                    f"(DESIGN.md §14)",
+                    stacklevel=2)
+                _CLAMP_WARNED_STATE = clamp_state
             p = n_live
+        else:
+            _CLAMP_WARNED_STATE = None
         if p == num_shards:
             routed_shards = None       # degenerate: exact scatter-gather
         elif sharded_graph.centroids is None:
@@ -934,6 +1106,9 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
         if tombstone_ids.shape[0] == 0:
             tombstone_ids = None       # empty: healthy cached program
     tomb = () if tombstone_ids is None else (tombstone_ids,)
+    qargs = (() if quantize == "none" else
+             (sharded_graph.qcodes, sharded_graph.qscale,
+              sharded_graph.qnorms))
     b = queries.shape[0]
     if mesh is None:
         # default to the mesh the graph was placed on (graph.place_sharded
@@ -950,11 +1125,13 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
         run = _sharded_search_fn(
             mesh, k=k, ef=ef, max_hops=max_hops, metric=metric,
             visited_impl=visited_impl, hash_slots=hash_slots,
-            expand_width=expand_width, tombstones=bool(tomb))
+            expand_width=expand_width, tombstones=bool(tomb),
+            quantize=bool(qargs))
         pool_i, pool_d, n_fresh, n_comp, hops = run(
             sharded_graph.ids, sharded_graph.data, sharded_graph.global_ids,
             sharded_graph.entries, live, queries,
-            jnp.ones((b,), bool) if row_mask is None else row_mask, *tomb)
+            jnp.ones((b,), bool) if row_mask is None else row_mask,
+            *qargs, *tomb)
         return SearchResult(pool_i, pool_d, n_fresh, n_comp, hops,
                             dummy_d, dummy_has)
 
@@ -968,12 +1145,14 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
         run = _fused_routed_search_fn(
             k=k, ef=ef, max_hops=max_hops, metric=metric,
             visited_impl=visited_impl, hash_slots=hash_slots,
-            expand_width=expand_width, p=p, tombstones=bool(tomb))
+            expand_width=expand_width, p=p, tombstones=bool(tomb),
+            quantize=bool(qargs))
         pool_i, pool_d, n_fresh, n_comp, hops = run(
             sharded_graph.flat_ids, sharded_graph.data,
             sharded_graph.global_ids, sharded_graph.entries,
             sharded_graph.centroids, live, queries,
-            jnp.ones((b,), bool) if row_mask is None else row_mask, *tomb)
+            jnp.ones((b,), bool) if row_mask is None else row_mask,
+            *qargs, *tomb)
         return SearchResult(pool_i, pool_d, n_fresh, n_comp, hops,
                             dummy_d, dummy_has)
 
@@ -1012,11 +1191,12 @@ def sharded_knn_search(sharded_graph, queries: jax.Array, k: int, ef: int,
     run = _routed_search_fn(
         mesh, k=k, ef=ef, max_hops=max_hops, metric=metric,
         visited_impl=visited_impl, hash_slots=hash_slots,
-        expand_width=expand_width, p=p, tombstones=bool(tomb))
+        expand_width=expand_width, p=p, tombstones=bool(tomb),
+        quantize=bool(qargs))
     pool_i, pool_d, n_fresh, n_comp, hops = run(
         sharded_graph.ids, sharded_graph.data, sharded_graph.global_ids,
         sharded_graph.entries, queries, jnp.asarray(q_index),
         jnp.asarray(q_mask), jnp.asarray(routed), jnp.asarray(slot_of),
-        jnp.asarray(rmask), *tomb)
+        jnp.asarray(rmask), *qargs, *tomb)
     return SearchResult(pool_i, pool_d, n_fresh, n_comp, hops,
                         dummy_d, dummy_has)

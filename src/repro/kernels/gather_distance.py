@@ -92,3 +92,69 @@ def gather_distance(
         out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
         interpret=interpret,
     )(u, c, cached, mask)
+
+
+def _gather_dist_sq8_kernel(qs_ref, qn_ref, c_ref, cn_ref, cached_ref,
+                            mask_ref, o_ref, *, kernel: str):
+    """Int8 MXU form of the gather kernel (DESIGN.md §16): candidate slabs
+    arrive as int8 codes (4× the VMEM residency of the fp32 slab) and are
+    upcast in-register; the query row is pre-scaled by the SQ scale (ADC)
+    and ``cn`` carries the precomputed dequantized-row norms, so l2 prices
+    exact distances to the dequantized corpus.  Cache semantics unchanged."""
+    qs = qs_ref[...].astype(jnp.float32)               # (1, d) q·scale
+    c = c_ref[...][0].astype(jnp.float32)              # (bk, d) int8 codes
+    # MXU: (bk, d) @ (d, 1) — same contraction as the fp32 form
+    cross = jax.lax.dot_general(
+        c, qs,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )                                                  # (bk, 1)
+    if kernel == "ip":
+        d2 = 1.0 - cross[:, 0][None, :]                # (1, bk)
+    else:
+        qn = qn_ref[...]                               # (1, 1) ‖q‖²
+        cn = cn_ref[...]                               # (1, bk) ‖ĉ‖²
+        d2 = jnp.maximum((cn + qn) - 2.0 * cross[:, 0][None, :], 0.0)
+    cached = cached_ref[...].astype(jnp.float32)
+    mask = mask_ref[...]
+    o_ref[...] = jnp.where(mask, d2, cached)
+
+
+@functools.partial(jax.jit, static_argnames=("kernel", "bk", "interpret"))
+def gather_distance_sq8(
+    qs: jax.Array,
+    qn: jax.Array,
+    codes: jax.Array,
+    cn: jax.Array,
+    cached: jax.Array,
+    mask: jax.Array,
+    *,
+    kernel: str = "l2",
+    bk: int = DEFAULT_BK,
+    interpret: bool = False,
+) -> jax.Array:
+    """Gathered distances against int8 codes; k % bk == 0.
+
+    Shapes: qs (b, d) f32 pre-scaled queries, qn (b, 1) f32 query norms,
+    codes (b, k, d) int8, cn (b, k) f32, cached/mask (b, k) -> (b, k) f32.
+    """
+    b, d = qs.shape
+    b2, k, d2 = codes.shape
+    assert (b, d) == (b2, d2), (qs.shape, codes.shape)
+    assert k % bk == 0, (k, bk)
+    grid = (b, k // bk)
+    return pl.pallas_call(
+        functools.partial(_gather_dist_sq8_kernel, kernel=kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((1, bk, d), lambda i, j: (i, j, 0)),
+            pl.BlockSpec((1, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bk), lambda i, j: (i, j)),
+            pl.BlockSpec((1, bk), lambda i, j: (i, j)),
+        ],
+        out_specs=pl.BlockSpec((1, bk), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((b, k), jnp.float32),
+        interpret=interpret,
+    )(qs, qn, codes, cn, cached, mask)

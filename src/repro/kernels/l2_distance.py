@@ -88,3 +88,68 @@ def pairwise_distance(
 def l2_distance(q: jax.Array, x: jax.Array, **kw) -> jax.Array:
     """Back-compat wrapper: squared-L2 form of ``pairwise_distance``."""
     return pairwise_distance(q, x, kernel="l2", **kw)
+
+
+def _dist_sq8_kernel(qs_ref, qn_ref, c_ref, cn_ref, o_ref, *, kernel: str):
+    """Int8 MXU form (DESIGN.md §16): the corpus tile arrives as int8
+    codes (4× less HBM→VMEM traffic than fp32 — the point of SQ8) and is
+    upcast in-register; the query tile is already pre-scaled by the
+    per-dimension SQ scale (ADC), so the cross term prices distances to
+    the dequantized corpus exactly.  l2 uses the precomputed dequantized
+    row norms (``cn``) instead of re-deriving them from the codes."""
+    qs = qs_ref[...].astype(jnp.float32)                  # (bq, d) q·scale
+    c = c_ref[...].astype(jnp.float32)                    # (bx, d) int8 codes
+    # MXU: (bq, d) @ (d, bx)
+    cross = jax.lax.dot_general(
+        qs, c,
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    if kernel == "ip":
+        o_ref[...] = 1.0 - cross
+    else:
+        qn = qn_ref[...]                                  # (bq, 1) ‖q‖²
+        cn = cn_ref[...]                                  # (bx, 1) ‖ĉ‖²
+        o_ref[...] = jnp.maximum((cn.T + qn) - 2.0 * cross, 0.0)
+
+
+@functools.partial(jax.jit,
+                   static_argnames=("kernel", "bq", "bx", "interpret"))
+def pairwise_distance_sq8(
+    qs: jax.Array,
+    qn: jax.Array,
+    codes: jax.Array,
+    cn: jax.Array,
+    *,
+    kernel: str = "l2",
+    bq: int = DEFAULT_BQ,
+    bx: int = DEFAULT_BX,
+    interpret: bool = False,
+) -> jax.Array:
+    """Pairwise distances against int8 codes via pallas_call.
+
+    Args (pre-padded: nq % bq == 0, nx % bx == 0):
+      qs: (nq, d) f32 pre-scaled queries (q · scale).
+      qn: (nq, 1) f32 squared query norms (l2 form; pass zeros for ip).
+      codes: (nx, d) int8 corpus codes.
+      cn: (nx, 1) f32 dequantized-row squared norms.
+    Returns (nq, nx) float32.
+    """
+    nq, d = qs.shape
+    nx, d2 = codes.shape
+    assert d == d2, (d, d2)
+    assert nq % bq == 0 and nx % bx == 0, (nq, nx, bq, bx)
+    grid = (nq // bq, nx // bx)
+    return pl.pallas_call(
+        functools.partial(_dist_sq8_kernel, kernel=kernel),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((bq, d), lambda i, j: (i, 0)),
+            pl.BlockSpec((bq, 1), lambda i, j: (i, 0)),
+            pl.BlockSpec((bx, d), lambda i, j: (j, 0)),
+            pl.BlockSpec((bx, 1), lambda i, j: (j, 0)),
+        ],
+        out_specs=pl.BlockSpec((bq, bx), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((nq, nx), jnp.float32),
+        interpret=interpret,
+    )(qs, qn, codes, cn)

@@ -95,6 +95,72 @@ def gather_distance(u, c, cached=None, mask=None,
     return out[:, :k]
 
 
+def pairwise_distance_q(q: jax.Array, quant,
+                        metric: "str | metric_lib.Metric" = "l2"
+                        ) -> jax.Array:
+    """Pairwise distances against an SQ8 corpus (DESIGN.md §16).
+
+    ``quant`` is a ``metric.QuantizedData`` over prepared-space vectors;
+    the query stays fp32 (cosine normalizes it here) and is pre-scaled by
+    the SQ scale once (ADC).  Returns (nq, nx) f32 distances to the
+    dequantized corpus.
+    """
+    met = metric_lib.resolve(metric)
+    if met.normalize:
+        q = metric_lib.normalize(q)
+    codes, scale, cnorms = quant.codes, quant.scale, quant.norms
+    if not (_use_pallas() or _use_interpret()):
+        return ref.pairwise_distance_sq8_ref(q, codes, scale, cnorms,
+                                             met.kernel)
+    q = q.astype(jnp.float32)
+    qs = q * scale[None, :]
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)
+    nq, nx = q.shape[0], codes.shape[0]
+    bq = min(_l2.DEFAULT_BQ, max(8, nq))
+    bx = min(_l2.DEFAULT_BX, max(8, nx))
+    qsp = _pad_to(_pad_to(qs, 0, bq), 1, 128)
+    qnp = _pad_to(qn, 0, bq)
+    cp = _pad_to(_pad_to(codes, 0, bx), 1, 128)
+    cnp = _pad_to(cnorms[:, None], 0, bx)
+    out = _l2.pairwise_distance_sq8(qsp, qnp, cp, cnp, kernel=met.kernel,
+                                    bq=bq, bx=bx,
+                                    interpret=_use_interpret())
+    return out[:nq, :nx]
+
+
+def gather_distance_q(u, codes, scale, cnorms, cached=None, mask=None,
+                      metric: "str | metric_lib.Metric" = "l2") -> jax.Array:
+    """V_delta-aware gathered distances against SQ8 codes (DESIGN.md §16).
+
+    ``u`` (b, d) fp32 queries, ``codes`` (b, k, d) int8 gathered candidate
+    codes, ``scale`` (d,), ``cnorms`` (b, k) dequantized-row norms;
+    cache semantics as in ``gather_distance``.
+    """
+    met = metric_lib.resolve(metric)
+    if met.normalize:
+        u = metric_lib.normalize(u)
+    b, k = codes.shape[0], codes.shape[1]
+    if cached is None:
+        cached = jnp.zeros((b, k), jnp.float32)
+        mask = jnp.ones((b, k), dtype=bool)
+    if not (_use_pallas() or _use_interpret()):
+        return ref.gather_distance_sq8_ref(u, codes, scale, cnorms, cached,
+                                           mask, met.kernel)
+    u = u.astype(jnp.float32)
+    qs = u * scale[None, :]
+    qn = jnp.sum(u * u, axis=-1, keepdims=True)
+    bk = min(_gd.DEFAULT_BK, max(8, k))
+    cp = _pad_to(_pad_to(codes, 1, bk), 2, 128)
+    cnp = _pad_to(cnorms, 1, bk)
+    cachedp = _pad_to(cached, 1, bk)
+    maskp = _pad_to(mask, 1, bk, value=True)
+    qsp = _pad_to(qs, 1, 128)
+    out = _gd.gather_distance_sq8(qsp, qn, cp, cnp, cachedp, maskp,
+                                  kernel=met.kernel, bk=bk,
+                                  interpret=_use_interpret())
+    return out[:, :k]
+
+
 def flash_attention(q, k, v, *, causal=True, window=0, softcap=0.0,
                     scale=None, q_offset=0) -> jax.Array:
     """(b, h, sq, dh) x (b, h, sk, dh) -> (b, h, sq, dh).

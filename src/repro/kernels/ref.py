@@ -73,6 +73,80 @@ def gather_distance_ref(
     return d2
 
 
+def pairwise_distance_sq8_ref(q: jax.Array, codes: jax.Array,
+                              scale: jax.Array, cnorms: jax.Array,
+                              kernel: str = "l2") -> jax.Array:
+    """Pairwise distances against an int8 scalar-quantized corpus.
+
+    The quantized forms' semantic oracle AND the CPU dispatch path
+    (ops.py), mirroring ``pairwise_distance_ref``.  ADC formulation
+    (DESIGN.md §16): the fp32 query is pre-scaled once, the cross term is
+    one fp32 dot against the upcast codes — identical operand shapes and
+    contraction to the Pallas kernel so interpret mode bit-matches.
+
+    Args:
+      q: (nq, d) fp32 queries in prepared space.
+      codes: (nx, d) int8 corpus codes.
+      scale: (d,) per-dimension symmetric scale.
+      cnorms: (nx,) squared norms of the dequantized rows.
+      kernel: "l2" | "ip" (core/metric.py convention).
+    Returns:
+      (nq, nx) float32 distances to the dequantized corpus.
+    """
+    q = q.astype(jnp.float32)
+    qs = q * scale[None, :]
+    cross = jax.lax.dot_general(
+        qs, codes.astype(jnp.float32),
+        dimension_numbers=(((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32)                  # (nq, nx)
+    if kernel == "ip":
+        return 1.0 - cross
+    qn = jnp.sum(q * q, axis=-1, keepdims=True)              # (nq, 1)
+    return jnp.maximum((cnorms[None, :] + qn) - 2.0 * cross, 0.0)
+
+
+def gather_distance_sq8_ref(
+    u: jax.Array,
+    codes: jax.Array,
+    scale: jax.Array,
+    cnorms: jax.Array,
+    cached: jax.Array | None = None,
+    mask: jax.Array | None = None,
+    kernel: str = "l2",
+) -> jax.Array:
+    """Gathered distances against int8 codes, V_delta cache semantics.
+
+    The quantized twin of ``gather_distance_ref`` — also the CPU dispatch
+    path.  Same ADC formulation as ``pairwise_distance_sq8_ref``; the
+    Pallas tile computes the same math as a (bk, d) gemm, which interpret
+    mode matches to fp32 accumulation tolerance (tests/test_kernels.py).
+
+    Args:
+      u: (b, d) fp32 queries in prepared space.
+      codes: (b, k, d) int8 per-query gathered candidate codes.
+      scale: (d,) per-dimension symmetric scale.
+      cnorms: (b, k) squared norms of the dequantized candidates.
+      cached/mask: V_delta reuse as in ``gather_distance_ref``.
+    Returns:
+      (b, k) float32 distances to the dequantized candidates.
+    """
+    u = u.astype(jnp.float32)
+    qs = u * scale[None, :]
+    cross = jax.lax.dot_general(
+        codes.astype(jnp.float32), qs,
+        dimension_numbers=(((2,), (1,)), ((0,), (0,))),
+        preferred_element_type=jnp.float32)                  # (b, k)
+    if kernel == "ip":
+        d2 = 1.0 - cross
+    else:
+        qn = jnp.sum(u * u, axis=-1, keepdims=True)          # (b, 1)
+        d2 = jnp.maximum((cnorms + qn) - 2.0 * cross, 0.0)
+    if mask is not None:
+        assert cached is not None
+        d2 = jnp.where(mask, d2, cached.astype(jnp.float32))
+    return d2
+
+
 def _window_mask(sq: int, sk: int, q_off: int, causal: bool, window: int) -> jax.Array:
     """Boolean (sq, sk) mask; True = attend."""
     qi = q_off + jnp.arange(sq)[:, None]

@@ -26,6 +26,7 @@ import numpy as np
 from repro.configs.base import ArchConfig
 from repro.core import build as build_lib
 from repro.core import graph as graph_lib
+from repro.core import metric as metric_lib
 from repro.models import model as M
 from repro.serve import retrieval as retrieval_lib
 
@@ -77,6 +78,13 @@ class RetrievalKnobs:
                   graph nodes still cost search work while never
                   surfacing, so this bounds wasted #dist; streaming-layer
                   knob like ``delta_capacity``.
+    quantize:     corpus representation (DESIGN.md §16, build-time —
+                  consumed by ``retrieval.build_index``): "none" (default,
+                  bit-identical fp32) or "sq8" — store int8 scalar-
+                  quantized keys (4× less corpus memory), beam-search the
+                  codes and re-rank the final ef-wide pool against fp32
+                  keys before the top_k truncation.  The graph build and
+                  the tuner's estimation stay fp32 either way.
     """
     top_k: int = 48
     ef: int = 96
@@ -90,6 +98,7 @@ class RetrievalKnobs:
     deadline_ms: float | None = None
     delta_capacity: int = 1024
     tombstone_compact_frac: float = 0.2
+    quantize: str = "none"
 
     def __post_init__(self):
         if self.top_k > self.ef:
@@ -123,6 +132,11 @@ class RetrievalKnobs:
                 f"be in (0, 1]: 0 would trigger compaction on every delete, "
                 f"> 1 would never trigger it (serve.streaming, DESIGN.md "
                 f"§15)")
+        if self.quantize not in metric_lib.QUANTIZE_MODES:
+            raise ValueError(
+                f"quantize {self.quantize!r} not in "
+                f"{metric_lib.QUANTIZE_MODES} (DESIGN.md §16: 'none' = fp32 "
+                f"corpus, 'sq8' = int8 search + fp32 re-rank)")
         build_lib.resolve_build_impl(self.build_impl)   # fail fast, not at build
 
     def search_kwargs(self) -> dict:
@@ -139,7 +153,7 @@ class RetrievalKnobs:
     def index_kwargs(self) -> dict:
         """Build-time kwargs for ``retrieval.build_index``."""
         return dict(num_shards=self.num_shards, build_impl=self.build_impl,
-                    assign=self.assign)
+                    assign=self.assign, quantize=self.quantize)
 
 
 @dataclasses.dataclass

@@ -52,6 +52,7 @@ import jax
 import numpy as np
 
 from repro.core import graph as graph_lib
+from repro.core import metric as metric_lib
 from repro.core import vamana as vamana_lib
 from repro.serve import retrieval as retrieval_lib
 from repro.train import checkpoint as ckpt_lib
@@ -390,6 +391,18 @@ def save_index(idx: retrieval_lib.RetrievalIndex, snap_dir: str,
             arrays["shards/centroids"] = np.asarray(sg.centroids)
         if sg.flat_ids is not None:
             arrays["shards/flat_ids"] = np.asarray(sg.flat_ids)
+        if sg.qcodes is not None:
+            arrays["shards/qcodes"] = np.asarray(sg.qcodes)
+            arrays["shards/qscale"] = np.asarray(sg.qscale)
+            arrays["shards/qnorms"] = np.asarray(sg.qnorms)
+    if idx.quant is not None:
+        # Unsharded SQ8 state (DESIGN.md §16): codes + the build-time
+        # scale roundtrip bit-identically — quantization is NEVER
+        # recomputed at load (a recompute would be identical today, but
+        # the manifest is the contract, not the coincidence).
+        arrays["quant/codes"] = np.asarray(idx.quant.codes)
+        arrays["quant/scale"] = np.asarray(idx.quant.scale)
+        arrays["quant/norms"] = np.asarray(idx.quant.norms)
     npz_path, man_path = _snapshot_paths(snap_dir, tag)
     ckpt_lib.atomic_write_npz(npz_path, arrays)
     manifest = {
@@ -402,6 +415,13 @@ def save_index(idx: retrieval_lib.RetrievalIndex, snap_dir: str,
         "num_shards": idx.num_shards,
         "sharded": idx.shards is not None,
         "provenance": idx.provenance,
+        # SQ8 scheme descriptor (DESIGN.md §16): symmetric per-dimension
+        # scale, zero_point identically 0 — recorded so a reader can
+        # decode codes without importing this codebase.
+        "quantize": idx.quantize,
+        "quantization": (None if idx.quantize == "none" else
+                         {"scheme": "sq8-symmetric-per-dim",
+                          "zero_point": 0}),
         "arrays": sorted(arrays),
     }
     ckpt_lib.atomic_write_json(man_path, manifest)
@@ -452,8 +472,19 @@ def load_index(snap_dir: str, tag: str = "index",
             entries=arrays["shards/entries"],
             counts=arrays["shards/counts"],
             centroids=arrays.get("shards/centroids"),
-            flat_ids=arrays.get("shards/flat_ids"))
+            flat_ids=arrays.get("shards/flat_ids"),
+            qcodes=arrays.get("shards/qcodes"),
+            qscale=arrays.get("shards/qscale"),
+            qnorms=arrays.get("shards/qnorms"))
         shards = graph_lib.place_sharded(sg, mesh=mesh)
+    quant = None
+    if "quant/codes" in arrays:
+        # Restored, never recomputed: the stored scale/codes ARE the
+        # quantization state (DESIGN.md §16) and roundtrip bit-identically.
+        quant = metric_lib.QuantizedData(
+            codes=jax.numpy.asarray(arrays["quant/codes"]),
+            scale=jax.numpy.asarray(arrays["quant/scale"]),
+            norms=jax.numpy.asarray(arrays["quant/norms"]))
     return retrieval_lib.RetrievalIndex(
         graph_ids=(None if "graph_ids" not in arrays
                    else jax.numpy.asarray(arrays["graph_ids"])),
@@ -465,7 +496,9 @@ def load_index(snap_dir: str, tag: str = "index",
         params=params,
         metric=manifest["metric"],
         shards=shards,
-        provenance=manifest.get("provenance"))
+        provenance=manifest.get("provenance"),
+        quantize=manifest.get("quantize", "none"),
+        quant=quant)
 
 
 # ---------------------------------------------------------------------------

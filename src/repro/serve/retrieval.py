@@ -84,6 +84,12 @@ class RetrievalIndex:
                                      # batch_size) — recorded by build_index
                                      # so snapshot manifests can say how the
                                      # index was built (DESIGN.md §14)
+    quantize: str = "none"           # corpus representation searches use by
+                                     # default (DESIGN.md §16): "sq8" beam-
+                                     # searches int8 codes + fp32 re-rank
+    quant: metric_lib.QuantizedData | None = None  # unsharded SQ8 codes,
+                                     # computed ONCE at build (sharded
+                                     # indexes carry theirs on shards.q*)
 
     @property
     def kernel(self) -> str:
@@ -99,7 +105,8 @@ def build_index(keys: jax.Array, values: jax.Array,
                 params: vamana_lib.VamanaParams, *, metric: str = "ip",
                 seed: int = 0, batch_size: int = 256,
                 num_shards: int = 1, assign: str = "chunked",
-                build_impl: str = "per_batch") -> RetrievalIndex:
+                build_impl: str = "per_batch",
+                quantize: str = "none") -> RetrievalIndex:
     """Index one head's keys under ``metric`` (default: native ip/MIPS).
 
     Any metric preparation (unit-normalization for cosine) happens exactly
@@ -119,20 +126,35 @@ def build_index(keys: jax.Array, values: jax.Array,
     one compiled dispatch (DESIGN.md §12) — same graphs up to documented
     ppm-level FP ties, less host dispatch overhead while prefill indexes
     are constructed.
+
+    ``quantize="sq8"`` (DESIGN.md §16) additionally stores an int8 SQ8
+    view of the prepared keys (scale computed ONCE here, carried on the
+    index and its snapshots) so searches beam over 4×-smaller codes and
+    re-rank against fp32.  The graph build itself ALWAYS runs fp32 — the
+    builders and the tuner's estimation stay bit-identical (§2.1) and the
+    paper-exact #dist accounting holds — so "sq8" changes search-time
+    representation only.
     """
     met = metric_lib.resolve(metric)
+    if quantize not in metric_lib.QUANTIZE_MODES:
+        raise ValueError(
+            f"quantize {quantize!r} not in {metric_lib.QUANTIZE_MODES}")
     search_keys = met.prepare(keys)
     prov = {"build_impl": build_impl, "assign": assign, "seed": seed,
-            "batch_size": batch_size, "num_shards": num_shards}
+            "batch_size": batch_size, "num_shards": num_shards,
+            "quantize": quantize}
     if num_shards == 1:
         res = vamana_lib.build_vamana(search_keys, params, seed=seed,
                                       batch_size=batch_size,
                                       metric=met.kernel,
                                       build_impl=build_impl)
+        quant = (metric_lib.quantize_sq8(search_keys)
+                 if quantize == "sq8" else None)
         return RetrievalIndex(graph_ids=res.g.ids[0], keys=keys,
                               values=values, search_keys=search_keys,
                               entry=res.entry, params=params,
-                              metric=met.name, provenance=prov)
+                              metric=met.name, provenance=prov,
+                              quantize=quantize, quant=quant)
 
     def shard_builder(local):
         res = vamana_lib.build_vamana(local, params, seed=seed,
@@ -143,12 +165,13 @@ def build_index(keys: jax.Array, values: jax.Array,
 
     shards = graph_lib.partition(search_keys, num_shards,
                                  assignment=assign, seed=seed,
-                                 build_fn=shard_builder, metric=met.kernel)
+                                 build_fn=shard_builder, metric=met.kernel,
+                                 quantize=quantize)
     entry = int(shards.global_ids[0][int(shards.entries[0])])
     return RetrievalIndex(graph_ids=None, keys=keys, values=values,
                           search_keys=None, entry=entry,
                           params=params, metric=met.name, shards=shards,
-                          provenance=prov)
+                          provenance=prov, quantize=quantize)
 
 
 def _attend(idx: RetrievalIndex, q: jax.Array, pool_ids: jax.Array,
@@ -171,19 +194,27 @@ def _search_index(idx: RetrievalIndex, qs: jax.Array, top_k: int, ef: int,
                   row_mask: jax.Array | None = None,
                   routed_shards: int | None = None,
                   shard_mask=None,
-                  tombstone_ids=None) -> search_lib.SearchResult:
+                  tombstone_ids=None,
+                  quantize: str | None = None) -> search_lib.SearchResult:
     """Route one prepared-query batch to the un- or mesh-sharded search.
 
     ``tombstone_ids`` (int32[T] global ids, INVALID-padded) masks deleted
     nodes out of the merged pool on either path (DESIGN.md §15); the
     streaming MutableIndex is the owner of the mask.
+
+    ``quantize=None`` defaults to the index's own representation
+    (``build_index(quantize=...)``, DESIGN.md §16); pass "none" to force
+    the fp32 path of a quantized index (parity checks) or "sq8" to search
+    an index that stored codes.
     """
+    quantize = idx.quantize if quantize is None else quantize
     if idx.shards is not None:
         return search_lib.sharded_knn_search(
             idx.shards, qs, top_k, ef, metric=idx.kernel,
             visited_impl=visited_impl, expand_width=expand_width,
             row_mask=row_mask, routed_shards=routed_shards,
-            shard_mask=shard_mask, tombstone_ids=tombstone_ids)
+            shard_mask=shard_mask, tombstone_ids=tombstone_ids,
+            quantize=quantize)
     if routed_shards not in (None, 1):
         raise ValueError(
             f"routed_shards={routed_shards} on an unsharded index: routing "
@@ -198,7 +229,8 @@ def _search_index(idx: RetrievalIndex, qs: jax.Array, top_k: int, ef: int,
         idx.graph_ids, idx.search_keys, qs, top_k, ef, idx.entry,
         metric=idx.kernel, visited_impl=visited_impl,
         expand_width=expand_width, row_mask=row_mask,
-        tombstone_ids=tombstone_ids)
+        tombstone_ids=tombstone_ids, quantize=quantize,
+        quant=idx.quant if quantize == "sq8" else None)
 
 
 def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
@@ -207,6 +239,7 @@ def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
                         expand_width: int = DEFAULT_EXPAND_WIDTH,
                         routed_shards: int | None = None,
                         shard_mask=None,
+                        quantize: str | None = None,
                         ) -> tuple[jax.Array, search_lib.SearchResult]:
     """Approximate attention for decode queries q: (B, dh).
 
@@ -223,11 +256,14 @@ def retrieval_attention(idx: RetrievalIndex, q: jax.Array, *, top_k: int,
     ``build_index(assign="kmeans")`` for shards worth routing between).
     ``shard_mask`` (bool[S]) excludes dead shards from routing and merge —
     degraded-mode serving, DESIGN.md §14 (serve.resilience owns the mask).
+    ``quantize`` (None = the index's own mode, DESIGN.md §16) selects the
+    corpus representation the search beams over.
     """
     met = metric_lib.resolve(idx.metric)
     qs = met.prepare(q)            # per-call cost is (B, dh) — keys untouched
     res = _search_index(idx, qs, top_k, ef, visited_impl, expand_width,
-                        routed_shards=routed_shards, shard_mask=shard_mask)
+                        routed_shards=routed_shards, shard_mask=shard_mask,
+                        quantize=quantize)
     return _attend(idx, q, res.pool_ids, scale), res
 
 
@@ -238,6 +274,7 @@ def retrieval_attention_batched(
     expand_width: int = DEFAULT_EXPAND_WIDTH,
     routed_shards: int | None = None,
     shard_mask=None,
+    quantize: str | None = None,
 ) -> tuple[jax.Array, search_lib.SearchResult]:
     """Query-blocked retrieval attention for serving-sized batches.
 
@@ -264,7 +301,7 @@ def retrieval_attention_batched(
         res = _search_index(idx, qb, top_k, ef, visited_impl, expand_width,
                             row_mask=jnp.arange(bs) < nrows,
                             routed_shards=routed_shards,
-                            shard_mask=shard_mask)
+                            shard_mask=shard_mask, quantize=quantize)
         # accumulate device scalars — no host sync inside the dispatch loop
         pool_ids.append(res.pool_ids[:nrows])
         pool_dist.append(res.pool_dist[:nrows])

@@ -136,7 +136,7 @@ def _decode(body: bytes) -> tuple:
     raise ValueError(f"unknown WAL opcode {op}")
 
 
-@functools.lru_cache(maxsize=None)
+@functools.lru_cache(maxsize=8)
 def _delta_brute_fn(kernel: str, kc: int):
     """jit'd delta brute-force: top-kc live slots at offset >= lo.
 
@@ -145,6 +145,12 @@ def _delta_brute_fn(kernel: str, kc: int):
     twice would surface twice).  Returns (slot ids int32[b, kc] INVALID-
     padded, dists, live-slot count int32[] — the per-query #dist the
     brute pass costs).
+
+    Bounded cache: the buffers are *arguments* (never closed over), but
+    each cached entry still pins its compiled executable and the jit
+    machinery's references; serving sweeps only a handful of (kernel, kc)
+    shapes, so 8 entries cover steady state while an adversarial ef sweep
+    can no longer grow the cache without bound.
     """
 
     @jax.jit
@@ -233,6 +239,8 @@ class MutableIndex:
         self._cat_idx = None
         self._cat_ext_dev = None
         self._main_ext_dev = None
+        self._d_search_dev = None
+        self._d_live_dev = None
 
     # -- construction -------------------------------------------------------
 
@@ -645,11 +653,18 @@ class MutableIndex:
         prov["build_impl"] = "fused"
         if main.shards is None:
             lids, entry = self._build(new_search)
+            search_dev = jnp.asarray(new_search)
+            # The new generation inherits the main index's quantization
+            # mode; codes are recomputed over the compacted corpus (scale
+            # shifts as rows churn — stale codes would skew distances).
+            quant = (metric_lib.quantize_sq8(search_dev)
+                     if main.quantize == "sq8" else None)
             new_main = retrieval_lib.RetrievalIndex(
                 graph_ids=jnp.asarray(lids), keys=jnp.asarray(new_keys),
                 values=jnp.asarray(new_vals),
-                search_keys=jnp.asarray(new_search), entry=int(entry),
-                params=main.params, metric=main.metric, provenance=prov)
+                search_keys=search_dev, entry=int(entry),
+                params=main.params, metric=main.metric, provenance=prov,
+                quantize=main.quantize, quant=quant)
         else:
             new_main = self._compact_sharded(
                 main, live_mask, live_rows, d_slots, new_keys, new_vals,
@@ -669,6 +684,17 @@ class MutableIndex:
         self._tomb_version += 1
         self._dirty = True
         self._main_ext_dev = None
+        # Release the OLD generation's corpus-sized device buffers now.
+        # ``_dirty`` alone is not enough: a post-compact index with an
+        # empty delta is *pristine*, so ``attention_batched`` short-
+        # circuits to the main path and ``_sync_delta`` never runs to
+        # replace these mirrors — they would pin the old keys/values/
+        # search arrays on device for the life of the process.
+        self._cat_idx = None
+        self._cat_ext_dev = None
+        self._d_search_dev = None
+        self._d_live_dev = None
+        self._tomb_cache = (-1, None)
         self.gen += 1
         self.compactions += 1
         if self.wal_dir is not None:
@@ -726,12 +752,18 @@ class MutableIndex:
         shards = graph_lib.assemble_sharded(
             ids_parts, data_parts, gid_parts, entries,
             centroids=np.asarray(sg.centroids), mesh=mesh)
+        if main.quantize == "sq8":
+            # Re-quantize over the compacted shard stack (global scale
+            # shifts as rows churn); untouched shards keep their fp32
+            # data byte-identical, only the side-car codes refresh.
+            shards = graph_lib.quantize_sharded(
+                shards, metric=self._met.kernel, mesh=mesh)
         entry = int(shards.global_ids[0][int(shards.entries[0])])
         return retrieval_lib.RetrievalIndex(
             graph_ids=None, keys=jnp.asarray(new_keys),
             values=jnp.asarray(new_vals), search_keys=None, entry=entry,
             params=main.params, metric=main.metric, shards=shards,
-            provenance=prov)
+            provenance=prov, quantize=main.quantize)
 
     def _default_build(self, local):
         """Compaction build hook: fused Vamana with the main params

@@ -138,6 +138,68 @@ def test_gather_distance_metrics(b, k, d, metric):
                                   np.asarray(cached)[~np.asarray(mask)])
 
 
+def _sq8_case(r, n, d):
+    """Random corpus quantized through the metric seam (prepared space is
+    the caller's job; these are raw kernel-form tests so prepare == id)."""
+    x = jnp.asarray(r.normal(size=(n, d)) * 2.0, jnp.float32)
+    return x, metric_lib.quantize_sq8(x)
+
+
+@pytest.mark.parametrize("nq,nx,d", [(8, 8, 4), (37, 91, 50), (200, 65, 33),
+                                     (128, 128, 128)])
+@pytest.mark.parametrize("metric", METRICS)
+def test_pairwise_sq8_bitmatches_ref(nq, nx, d, metric):
+    """Interpret-mode int8 Pallas form == ref.py quantized oracle, BIT
+    identical: same contraction shapes, same fp32 accumulation, padding
+    contributes exact zeros (acceptance gate, DESIGN.md §16)."""
+    r = np.random.default_rng(nq * 1000 + nx)
+    q = jnp.asarray(r.normal(size=(nq, d)), jnp.float32)
+    _, quant = _sq8_case(r, nx, d)
+    met = metric_lib.resolve(metric)
+    out = ops.pairwise_distance_q(q, quant, metric)
+    exp = ref.pairwise_distance_sq8_ref(met.prepare(q), quant.codes,
+                                        quant.scale, quant.norms,
+                                        met.kernel)
+    np.testing.assert_array_equal(np.asarray(out), np.asarray(exp))
+    assert out.dtype == jnp.float32
+
+
+@pytest.mark.parametrize("b,k,d", [(1, 1, 8), (9, 21, 33), (5, 130, 17),
+                                   (8, 128, 128)])
+@pytest.mark.parametrize("metric", METRICS)
+def test_gather_sq8_matches_ref(b, k, d, metric):
+    """Interpret-mode gathered int8 form == ref.py oracle to fp32 dot
+    tolerance (the tile's (bk, d) gemm and the ref's batched dot_general
+    lower to different accumulation groupings on CPU — same contract as
+    the fp32 gather kernel), with V_delta pass-through bit-exact."""
+    r = np.random.default_rng(b * 100 + k)
+    u = jnp.asarray(r.normal(size=(b, d)), jnp.float32)
+    _, quant = _sq8_case(r, 64, d)
+    gidx = jnp.asarray(r.integers(0, 64, size=(b, k)))
+    codes = quant.codes[gidx]
+    cnorms = quant.norms[gidx]
+    cached = jnp.asarray(r.normal(size=(b, k)), jnp.float32)
+    mask = jnp.asarray(r.random((b, k)) > 0.5)
+    met = metric_lib.resolve(metric)
+    out = ops.gather_distance_q(u, codes, quant.scale, cnorms, cached,
+                                mask, metric)
+    exp = ref.gather_distance_sq8_ref(met.prepare(u), codes, quant.scale,
+                                      cnorms, cached, mask, met.kernel)
+    np.testing.assert_allclose(out, exp, rtol=1e-5, atol=1e-4)
+    # where mask is False the cached value must pass through bit-exactly
+    np.testing.assert_array_equal(np.asarray(out)[~np.asarray(mask)],
+                                  np.asarray(cached)[~np.asarray(mask)])
+
+
+def test_sq8_memory_footprint():
+    """The point of sq8: int8 codes are 4x smaller than the fp32 corpus
+    (scale + norms overhead is O(d + n), negligible at scale)."""
+    r = np.random.default_rng(9)
+    x, quant = _sq8_case(r, 512, 128)
+    assert quant.codes.dtype == jnp.int8
+    assert quant.codes.nbytes * 4 == x.nbytes
+
+
 def test_l2_metric_is_the_pre_refactor_default():
     """metric="l2" must be BIT-IDENTICAL to the metric-less entry points
     (regression guard for the metric refactor)."""

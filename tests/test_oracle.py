@@ -518,6 +518,7 @@ def test_masked_clamps_routed_shards_to_live():
     live shard — same pools as the masked scatter-gather oracle."""
     sg, sg_np, queries = _routed_case(19)
     mask = MASKS[0]                                  # 2 live of 3
+    search._CLAMP_WARNED_STATE = None    # warn-once: arm a fresh transition
     with pytest.warns(UserWarning, match="clamping"):
         res = search.sharded_knn_search(
             sg, jnp.asarray(queries), 8, 8, metric="l2",
@@ -745,3 +746,212 @@ def test_oracle_catches_tombstone_leak():
             _assert_streaming_matches_oracle(*case, 8, 16, 1)
     finally:
         search.apply_tombstones = orig
+
+
+# ---------------------------------------------------------------------------
+# Tombstone-mask properties (DESIGN.md §15): ``search.apply_tombstones``
+# against ``oracle_tombstone_mask`` on the degenerate shapes the streaming
+# refill tests never reach — duplicate tombstone ids, pools where every
+# entry dies, and tombstone lists longer than the pool itself.
+# ---------------------------------------------------------------------------
+
+def _random_pools(r, b, ef, n):
+    """Sorted INVALID-padded pools (the apply_tombstones input contract)."""
+    ids = np.full((b, ef), INVALID, np.int32)
+    dist = np.full((b, ef), np.inf, np.float32)
+    for q in range(b):
+        m = int(r.integers(1, ef + 1))
+        ids[q, :m] = r.choice(n, size=m, replace=False)
+        dist[q, :m] = np.sort(r.random(m).astype(np.float32))
+    return ids, dist
+
+
+def _assert_tombstones_match_oracle(pool_ids, pool_dist, tomb):
+    """Row-wise parity, ids bit-equal and distances exact (masking moves
+    values, never recomputes them)."""
+    tomb = np.asarray(tomb, np.int32)
+    got_i, got_d = search.apply_tombstones(
+        jnp.asarray(pool_ids), jnp.asarray(pool_dist), jnp.asarray(tomb))
+    dead = set(int(t) for t in tomb if int(t) != INVALID)
+    for q in range(pool_ids.shape[0]):
+        ids, dist = oracle_tombstone_mask(pool_ids[q], pool_dist[q], dead)
+        np.testing.assert_array_equal(
+            np.asarray(got_i)[q], ids,
+            err_msg=f"tombstone mask diverged from oracle (query {q}, "
+                    f"T={tomb.size})")
+        np.testing.assert_array_equal(np.asarray(got_d)[q], dist)
+    return got_i
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), ef=st.sampled_from([4, 8, 16]))
+def test_tombstones_duplicate_ids_match_oracle(seed, ef):
+    """An id listed T times dies exactly once — duplicates must not shift
+    survivors or resurrect padding."""
+    r = np.random.default_rng(seed)
+    ids, dist = _random_pools(r, 6, ef, 32)
+    base = r.choice(32, size=5, replace=False).astype(np.int32)
+    tomb = np.concatenate([base, base, base[:2]])
+    _assert_tombstones_match_oracle(ids, dist, tomb)
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), ef=st.sampled_from([4, 8, 16]))
+def test_tombstones_all_dead_pool(seed, ef):
+    """Tombstoning every live pool entry empties the pool completely:
+    all-INVALID ids, all-+inf distances (the retrieval layer's softmax
+    guard relies on this exact padding)."""
+    r = np.random.default_rng(seed)
+    ids, dist = _random_pools(r, 4, ef, 32)
+    tomb = np.unique(ids[ids != INVALID])
+    got_i = _assert_tombstones_match_oracle(ids, dist, tomb)
+    assert bool((np.asarray(got_i) == INVALID).all())
+
+
+@settings(max_examples=6, deadline=None, derandomize=True)
+@given(seed=st.integers(0, 10_000), ef=st.sampled_from([4, 8]))
+def test_tombstones_longer_than_ef(seed, ef):
+    """A tombstone list longer than the pool (mass deletion between
+    compactions) masks correctly — extra ids, absent from the pool, are
+    inert, and INVALID padding in the list never matches pool padding."""
+    r = np.random.default_rng(seed)
+    ids, dist = _random_pools(r, 6, ef, 32)
+    tomb = np.concatenate([
+        r.choice(32, size=min(3, ef), replace=False).astype(np.int32),
+        np.arange(32, 32 + 2 * ef, dtype=np.int32),       # out-of-pool ids
+        np.full(ef, INVALID, np.int32)])                  # padding
+    _assert_tombstones_match_oracle(ids, dist, tomb)
+
+
+# ---------------------------------------------------------------------------
+# Warn-once clamp (DESIGN.md §14): the routed_shards > live clamp warns on
+# ShardHealth state *transitions*, not per call — a degraded serving loop
+# re-enters sharded_knn_search every batch and must not flood logs.
+# ---------------------------------------------------------------------------
+
+def test_clamp_warns_once_per_degraded_state():
+    """100 calls under one degraded state -> exactly one warning; a healthy
+    routed call resets the transition so the next degradation warns again."""
+    import warnings as warnings_lib
+    sg, sg_np, queries = _routed_case(29)
+    mask = MASKS[0]                                      # 2 live of 3
+    q = jnp.asarray(queries)
+    search._CLAMP_WARNED_STATE = None
+    with warnings_lib.catch_warnings(record=True) as w:
+        warnings_lib.simplefilter("always")
+        for _ in range(100):
+            search.sharded_knn_search(
+                sg, q, 8, 8, metric="l2", visited_impl="dense",
+                routed_shards=3, shard_mask=mask)
+        assert sum("clamping" in str(x.message) for x in w) == 1
+        # p <= live: no clamp, and the warned state re-arms
+        search.sharded_knn_search(
+            sg, q, 8, 8, metric="l2", visited_impl="dense",
+            routed_shards=2, shard_mask=mask)
+        search.sharded_knn_search(
+            sg, q, 8, 8, metric="l2", visited_impl="dense",
+            routed_shards=3, shard_mask=mask)
+        assert sum("clamping" in str(x.message) for x in w) == 2
+
+
+# ---------------------------------------------------------------------------
+# SQ8 quantization oracle (DESIGN.md §16): pure-NumPy symmetric per-dim
+# int8 quantization + dequantized-corpus distances — the semantics
+# metric.quantize_sq8 / the quantized kernel forms must match — plus the
+# end-to-end recall parity bound (sq8 within 0.02 of fp32 at k=10 on the
+# clustered corpus, all three metrics).
+# ---------------------------------------------------------------------------
+
+def oracle_quantize_sq8(x):
+    """Pure-NumPy ``metric.quantize_sq8``: per-dim scale max|x[:,d]|/127
+    (all-zero dims -> 1), codes clip(round(x/scale), ±127), norms over the
+    DEQUANTIZED rows."""
+    x = np.asarray(x, np.float32)
+    amax = np.max(np.abs(x), axis=0)
+    scale = np.where(amax > 0, amax / np.float32(127.0),
+                     np.float32(1.0)).astype(np.float32)
+    codes = np.clip(np.round(x / scale), -127, 127).astype(np.int8)
+    deq = codes.astype(np.float32) * scale
+    norms = np.sum(deq * deq, axis=-1, dtype=np.float32)
+    return codes, scale, norms
+
+
+def test_quantize_sq8_matches_numpy_oracle():
+    """codes and scale bit-identical to the oracle (round-half-to-even,
+    zero-dim guard included); norms match to fp32 reduction tolerance."""
+    from repro.core import metric as metric_lib
+    r = np.random.default_rng(0)
+    x = r.normal(size=(128, 16)).astype(np.float32) * 3.0
+    x[:, 5] = 0.0                                 # all-zero dim -> scale 1
+    x[3, 7] = 0.5                                 # exercise ties-to-even
+    q = metric_lib.quantize_sq8(jnp.asarray(x))
+    codes, scale, norms = oracle_quantize_sq8(x)
+    np.testing.assert_array_equal(np.asarray(q.codes), codes)
+    np.testing.assert_array_equal(np.asarray(q.scale), scale)
+    assert float(np.asarray(q.scale)[5]) == 1.0
+    np.testing.assert_allclose(np.asarray(q.norms), norms, rtol=1e-6)
+
+
+@pytest.mark.parametrize("kernel", ["l2", "ip"])
+def test_sq8_ref_distances_match_numpy_oracle(kernel):
+    """ref.py's quantized forms price distances to the DEQUANTIZED corpus:
+    parity against direct NumPy distance over codes*scale."""
+    from repro.kernels import ref
+    r = np.random.default_rng(1)
+    x = r.normal(size=(64, 8)).astype(np.float32) * 2.0
+    qs = r.normal(size=(5, 8)).astype(np.float32)
+    codes, scale, norms = oracle_quantize_sq8(x)
+    deq = codes.astype(np.float32) * scale
+    want = np.array([[_np_dist(qv, row, kernel) for row in deq]
+                     for qv in qs], np.float32)
+    got = np.asarray(ref.pairwise_distance_sq8_ref(
+        jnp.asarray(qs), jnp.asarray(codes), jnp.asarray(scale),
+        jnp.asarray(norms), kernel))
+    np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+    # gather form: each query prices 6 gathered rows, no cache hits
+    gidx = r.integers(0, 64, size=(5, 6))
+    ggot = np.asarray(ref.gather_distance_sq8_ref(
+        jnp.asarray(qs), jnp.asarray(codes[gidx]), jnp.asarray(scale),
+        jnp.asarray(norms[gidx]), jnp.full((5, 6), np.inf, np.float32),
+        jnp.ones((5, 6), bool), kernel))
+    gwant = np.take_along_axis(want, gidx, axis=1)
+    np.testing.assert_allclose(ggot, gwant, rtol=1e-5, atol=1e-5)
+
+
+def test_recall_at_k_ignores_invalid_padding():
+    """INVALID-vs-INVALID is padding, not a hit (the pre-fix bug): each
+    query normalizes by its own valid-gt count and all-padding gt rows
+    contribute 0."""
+    from repro.core import eval as evallib
+    gt = jnp.asarray(np.array(
+        [[0, 1, INVALID, INVALID], [INVALID] * 4], np.int32))
+    found = jnp.asarray(np.array(
+        [[0, 5, INVALID, INVALID], [INVALID] * 4], np.int32))
+    # row 0: gt {0, 1}, found hits {0} -> 1/2; row 1: no valid gt -> 0
+    assert evallib.recall_at_k(found, gt) == pytest.approx(0.25)
+    full = jnp.asarray(np.array([[0, 1, 2, 3], [4, 5, 6, 7]], np.int32))
+    assert evallib.recall_at_k(full, full) == 1.0
+
+
+@pytest.mark.parametrize("metric", METRICS)
+def test_sq8_recall_parity_clustered(metric):
+    """The tentpole bound: sq8 search + fp32 re-rank loses at most 0.02
+    recall@10 vs the fp32 path on the clustered 10k corpus, per metric.
+    Same graph, same ef — only the corpus representation differs."""
+    from repro.core import eval as evallib
+    from repro.core import metric as metric_lib
+    from repro.core.tuner import estimator
+    n, k, ef = 10_000, 10, 48
+    data, queries = estimator.make_dataset(n, 16, 64, seed=5)
+    gids = graph.random_knng_ids(5, n, 12)
+    gt = evallib.ground_truth(data, queries, k, metric=metric)
+    base = search.knn_search(gids, data, queries, k, ef, 0, metric=metric)
+    quant = metric_lib.resolve(metric).prepare_quantized(data)
+    q8 = search.knn_search(gids, data, queries, k, ef, 0, metric=metric,
+                           quantize="sq8", quant=quant)
+    rec_fp32 = evallib.recall_at_k(base.pool_ids, gt)
+    rec_sq8 = evallib.recall_at_k(q8.pool_ids, gt)
+    assert rec_sq8 >= rec_fp32 - 0.02, (metric, rec_fp32, rec_sq8)
+    # the fp32 re-rank is COUNTED work: one distance per valid pool entry
+    # on top of the quantized beam (counter semantics, DESIGN.md §16)
+    assert int(q8.n_computed) > int(q8.n_fresh)

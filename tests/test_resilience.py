@@ -267,6 +267,65 @@ def test_snapshot_restore_unsharded(tmp_path):
                                   np.asarray(rb.pool_ids))
 
 
+@pytest.mark.parametrize("num_shards", [1, S])
+def test_snapshot_roundtrips_quantization(num_shards, tmp_path):
+    """Quantization state survives save/load bit-identically: codes,
+    scale, and dequantized norms are RESTORED from the archive (never
+    recomputed — a re-quantize at load time could round differently),
+    the manifest records the scheme, and the restored index serves
+    identical quantized pools."""
+    import json
+    from repro.core import metric as metric_lib
+    data, queries = _clustered_corpus(seed=7)
+    idx = retrieval.build_index(
+        jnp.asarray(data), jnp.asarray(data),
+        vamana.VamanaParams(L=16, M=6, alpha=1.2), metric="l2",
+        num_shards=num_shards, quantize="sq8",
+        **(dict(assign="kmeans", seed=3) if num_shards > 1 else {}))
+    man = resilience.save_index(idx, str(tmp_path), tag="q")
+    with open(man) as f:
+        manifest = json.load(f)
+    assert manifest["quantize"] == "sq8"
+    assert manifest["quantization"]["scheme"] == "sq8-symmetric-per-dim"
+    assert manifest["quantization"]["zero_point"] == 0
+    idx2 = resilience.load_index(str(tmp_path), tag="q")
+    assert idx2.quantize == "sq8"
+    if num_shards == 1:
+        for a, b in zip(idx.quant, idx2.quant):
+            np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+        assert idx2.quant.codes.dtype == jnp.int8
+    else:
+        for name in ("qcodes", "qscale", "qnorms"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(idx.shards, name)),
+                np.asarray(getattr(idx2.shards, name)))
+        assert idx2.shards.qcodes.dtype == jnp.int8
+    q = jnp.asarray(queries)
+    _, ra = retrieval.retrieval_attention_batched(idx, q, top_k=TOP_K,
+                                                  ef=EF)
+    _, rb = retrieval.retrieval_attention_batched(idx2, q, top_k=TOP_K,
+                                                  ef=EF)
+    np.testing.assert_array_equal(np.asarray(ra.pool_ids),
+                                  np.asarray(rb.pool_ids))
+    np.testing.assert_array_equal(np.asarray(ra.pool_dist),
+                                  np.asarray(rb.pool_dist))
+
+
+def test_snapshot_fp32_manifest_has_no_quantization(sharded_index,
+                                                    tmp_path):
+    """fp32 snapshots record quantize="none" / null scheme, and older
+    archives without the field load as fp32 (manifest default)."""
+    import json
+    idx, *_ = sharded_index
+    man = resilience.save_index(idx, str(tmp_path), tag="f")
+    with open(man) as f:
+        manifest = json.load(f)
+    assert manifest["quantize"] == "none"
+    assert manifest["quantization"] is None
+    idx2 = resilience.load_index(str(tmp_path), tag="f")
+    assert idx2.quantize == "none" and idx2.quant is None
+
+
 def test_torn_snapshot_refused(sharded_index, tmp_path):
     """npz without manifest == a writer died mid-snapshot: load refuses
     with a diagnostic instead of restoring an unverifiable archive."""

@@ -132,9 +132,11 @@ def test_sharded_index_serves_and_blocks_consistently():
 def test_retrieval_knobs_num_shards():
     from repro.serve.engine import RetrievalKnobs
     assert RetrievalKnobs().index_kwargs() == {
-        "num_shards": 1, "build_impl": "per_batch", "assign": "chunked"}
+        "num_shards": 1, "build_impl": "per_batch", "assign": "chunked",
+        "quantize": "none"}
     assert RetrievalKnobs(num_shards=4, build_impl="fused").index_kwargs() == {
-        "num_shards": 4, "build_impl": "fused", "assign": "chunked"}
+        "num_shards": 4, "build_impl": "fused", "assign": "chunked",
+        "quantize": "none"}
     with pytest.raises(ValueError, match="num_shards"):
         RetrievalKnobs(num_shards=0)
     with pytest.raises(ValueError, match="build_impl"):
@@ -156,6 +158,50 @@ def test_retrieval_knobs_routing():
         RetrievalKnobs(routed_shards=2)        # > num_shards=1
     with pytest.raises(ValueError, match="routed_shards"):
         RetrievalKnobs(num_shards=4, routed_shards=0)
+
+
+def test_retrieval_knobs_quantize():
+    """The quantize knob (DESIGN.md §16) validates at construction and
+    threads through index_kwargs; search paths read it off the index."""
+    from repro.serve.engine import RetrievalKnobs
+    assert RetrievalKnobs(quantize="sq8").index_kwargs()["quantize"] == "sq8"
+    with pytest.raises(ValueError, match="quantize"):
+        RetrievalKnobs(quantize="sq4")
+
+
+def test_quantized_index_serves():
+    """build_index(quantize="sq8") end to end: the index carries the
+    quantized corpus, search runs sq8 + fp32 re-rank, and the re-rank
+    keeps exact-attention quality at fp32 level."""
+    r = np.random.default_rng(12)
+    n, dh, b = 300, 16, 8
+    keys = jnp.asarray(r.normal(size=(n, dh)), jnp.float32)
+    vals = jnp.asarray(r.normal(size=(n, dh)), jnp.float32)
+    q = keys[r.integers(0, n, b)] + 0.05 * jnp.asarray(
+        r.normal(size=(b, dh)), jnp.float32)
+    idx = retrieval.build_index(
+        keys, vals, vamana.VamanaParams(L=24, M=8, alpha=1.2),
+        quantize="sq8")
+    assert idx.quantize == "sq8" and idx.quant is not None
+    assert idx.provenance["quantize"] == "sq8"
+    out, res = retrieval.retrieval_attention(idx, q, top_k=8, ef=24)
+    ids = np.asarray(res.pool_ids)
+    assert ids.min() >= 0 and ids.max() < n
+    # attention quality parity with the fp32 path on the SAME index (an
+    # explicit quantize="none" override forces it): the re-rank restores
+    # fp32 distances over the final pool, so outputs track closely
+    out32, res32 = retrieval.retrieval_attention(idx, q, top_k=8, ef=24,
+                                                 quantize="none")
+    exact = retrieval.exact_attention(keys, vals, q)
+
+    def _cos(a):
+        return float(jnp.mean(jnp.sum(a * exact, -1) / (
+            jnp.linalg.norm(a, axis=-1)
+            * jnp.linalg.norm(exact, axis=-1))))
+
+    assert _cos(out) >= _cos(out32) - 0.02
+    # the re-rank is counted work on top of the quantized beam
+    assert int(res32.n_computed) < int(res.n_computed)
 
 
 def test_routed_sharded_index_serves():

@@ -1,0 +1,82 @@
+"""CI fast-lane int8 smoke (DESIGN.md §16): the sq8 Pallas kernel forms
+must match the pure-jnp oracles in ``repro/kernels/ref.py`` on a 512-row
+corpus, for all three metrics, in interpret mode.
+
+Parity bars mirror tests/test_kernels.py: the pairwise form is bit-exact
+against its oracle (both lower to the same gemm grouping on CPU); the
+gather form is fp32-accumulation-tolerance (the (bk, d) gemm tile and the
+oracle's batched dot_general accumulate in different orders).  The
+quantizer itself is checked bit-exact against the closed-form NumPy
+definition so a drifted scale can't hide inside a loose kernel bound.
+
+  PYTHONPATH=src python tools/check_sq8.py
+
+Exits non-zero on any mismatch.  Forces REPRO_PALLAS_INTERPRET=1 itself
+so running it locally exercises the same path CI does.
+"""
+from __future__ import annotations
+
+import os
+import sys
+
+os.environ["REPRO_PALLAS_INTERPRET"] = "1"
+
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+N, NQ, D = 512, 16, 96
+
+
+def main() -> int:
+    from repro.core import metric as metric_lib
+    from repro.kernels import ops, ref
+
+    r = np.random.default_rng(0)
+    x = jnp.asarray(r.normal(size=(N, D)), jnp.float32)
+    q = jnp.asarray(r.normal(size=(NQ, D)), jnp.float32)
+    for name in ("l2", "ip", "cosine"):
+        met = metric_lib.resolve(name)
+        quant = met.prepare_quantized(x)
+
+        # quantizer vs closed form: symmetric per-dim, zero dims -> scale 1
+        xp = np.asarray(met.prepare(x))
+        scale = np.abs(xp).max(axis=0) / 127.0
+        scale = np.where(scale == 0.0, 1.0, scale).astype(np.float32)
+        codes = np.clip(np.rint(xp / scale), -127, 127).astype(np.int8)
+        np.testing.assert_array_equal(np.asarray(quant.codes), codes,
+                                      err_msg=f"{name}: codes drifted")
+        np.testing.assert_array_equal(np.asarray(quant.scale), scale,
+                                      err_msg=f"{name}: scale drifted")
+
+        # pairwise sq8 kernel (interpret) vs ref oracle: bit-exact
+        qp = met.prepare(q)
+        got = np.asarray(ops.pairwise_distance_q(q, quant, metric=met))
+        want = np.asarray(ref.pairwise_distance_sq8_ref(
+            qp, quant.codes, quant.scale, quant.norms, met.kernel))
+        np.testing.assert_array_equal(got, want,
+                                      err_msg=f"{name}: pairwise sq8")
+
+        # gather sq8 kernel (interpret) vs ref oracle: fp32 tolerance,
+        # cached entries bit-exact passthrough
+        k = 24
+        ids = r.integers(0, N, size=(NQ, k))
+        gcodes = quant.codes[jnp.asarray(ids)]
+        gnorms = quant.norms[jnp.asarray(ids)]
+        cached = jnp.asarray(r.normal(size=(NQ, k)), jnp.float32)
+        mask = jnp.asarray(r.random(size=(NQ, k)) < 0.7)  # True = compute
+        got = np.asarray(ops.gather_distance_q(
+            q, gcodes, quant.scale, gnorms, cached, mask, metric=met))
+        want = np.asarray(ref.gather_distance_sq8_ref(
+            qp, gcodes, quant.scale, gnorms, cached, mask, met.kernel))
+        np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-4,
+                                   err_msg=f"{name}: gather sq8")
+        np.testing.assert_array_equal(got[~np.asarray(mask)],
+                                      want[~np.asarray(mask)],
+                                      err_msg=f"{name}: cached passthrough")
+        print(f"sq8 smoke ok: metric={name} n={N} d={D} "
+              f"(pairwise bit-exact, gather tol, quantizer closed-form)")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())
